@@ -1,0 +1,79 @@
+"""Generate the EXPERIMENTS.md §Roofline table from results/dryrun/*.json.
+
+  PYTHONPATH=src python -m benchmarks.roofline_report [--dir results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+PEAK_FLOPS, HBM_BW, ICI_BW = 197e12, 819e9, 50e9
+
+
+def load(dir_: str, mesh: str = "pod1"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dir_, f"*__{mesh}.json"))):
+        r = json.load(open(f))
+        if r.get("status") == "ok":
+            # recompute terms uniformly from the raw per-device quantities
+            c = r["flops"] / PEAK_FLOPS
+            m = r["hbm_bytes"] / HBM_BW
+            co = r["collective_bytes"].get("total", 0) / ICI_BW
+            dom = max((("compute_s", c), ("memory_s", m),
+                       ("collective_s", co)), key=lambda kv: kv[1])[0]
+            r["roofline"] = {"compute_s": c, "memory_s": m,
+                             "collective_s": co, "bottleneck": dom,
+                             "compute_fraction": c / max(c, m, co, 1e-30)}
+        rows.append(r)
+    return rows
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def table(rows, *, only_ok=True):
+    out = ["| arch | shape | compute | memory | collective | bottleneck | "
+           "useful/HLO flops | peak GB/dev |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | FAIL: "
+                       f"{r.get('error','?')[:60]} | | | | | |")
+            continue
+        rf = r["roofline"]
+        peak = r["bytes_per_device"].get("peak") or 0
+        ratio = r.get("useful_flops_ratio")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(rf['compute_s'])} | "
+            f"{fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} | "
+            f"{rf['bottleneck'].replace('_s','')} | "
+            f"{ratio:.2f} |" if ratio is not None else
+            f"| {r['arch']} | {r['shape']} | {fmt_s(rf['compute_s'])} | "
+            f"{fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} | "
+            f"{rf['bottleneck'].replace('_s','')} | - |")
+        out[-1] += f" {peak/1e9:.2f} |"
+    return "\n".join(out)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="pod1")
+    args = ap.parse_args(argv)
+    rows = load(args.dir, args.mesh)
+    print(f"{len(rows)} cells ({sum(r['status']=='ok' for r in rows)} ok)\n")
+    print(table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Benchmark harness: one module per paper table/claim.
+
+  PYTHONPATH=src python -m benchmarks.run            # standard sizes
+  PYTHONPATH=src python -m benchmarks.run --quick    # CI-scale
+  PYTHONPATH=src python -m benchmarks.run --only table2_scan
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+BENCHES = [
+    ("table1_recall", "Paper Table 1: recall iso/aniso, Mode A/B, HNSW"),
+    ("table2_scan", "Paper Table 2: Block-SoA vs AoS vs pointer-chase"),
+    ("memory_footprint", "Paper 3.2: 66 B/vec vs HNSW graph bytes"),
+    ("sift_scale", "Paper 4: SIFT-like scale recall/QPS/DRAM"),
+    ("hntl_kv_decode", "HNTL-KV retrieval decode vs exact attention"),
+]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    failures = 0
+    for name, desc in BENCHES:
+        if args.only and name != args.only:
+            continue
+        print(f"\n=== {name}: {desc} ===")
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            mod.main(quick=args.quick)
+            print(f"--- {name} done in {time.time()-t0:.1f}s")
+        except Exception:                                  # noqa: BLE001
+            failures += 1
+            print(f"--- {name} FAILED:\n{traceback.format_exc()}")
+    print(f"\n{len(BENCHES) - failures}/{len(BENCHES)} benchmarks ok")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

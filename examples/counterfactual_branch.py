@@ -1,0 +1,55 @@
+"""Aperon cognitive-impedance demo: zero-copy branching + mixed recall.
+
+An agent snapshots its memory, forks two counterfactual branches that each
+ingest different hypothetical observations, and queries each world — all
+sealed segments are shared by reference (no copies, no graph re-wiring).
+
+  PYTHONPATH=src python examples/counterfactual_branch.py
+"""
+import numpy as np
+
+from repro.core import HNTLConfig
+from repro.core.store import VectorStore
+from repro.data import synthetic as syn
+
+
+def main():
+    cfg = HNTLConfig(d=64, k=16, s=0, n_grains=8, nprobe=8, pool=32, block=64)
+    agent = VectorStore(cfg, seal_threshold=1024, cold_tier=True)
+
+    base = syn.clustered(3000, 64, n_clusters=16, seed=0)
+    t = np.linspace(0.0, 3.0, 3000, endpoint=False)
+    agent.add(base, tags=[1] * 3000, ts=list(t))        # episodic memory
+    agent.seal()
+    print(f"agent memory: {agent.n_vectors} vectors, "
+          f"{len(agent._segments)} sealed segments")
+
+    # ---- fork two counterfactual worlds (O(1), shared segments) ----------
+    world_a = agent.branch()
+    world_b = agent.branch()
+    rng = np.random.default_rng(1)
+    obs_a = rng.standard_normal((50, 64)).astype(np.float32) + 3.0
+    obs_b = rng.standard_normal((50, 64)).astype(np.float32) - 3.0
+    ids_a = world_a.add(obs_a, tags=[4] * 50, ts=[5.0] * 50)
+    world_b.add(obs_b, tags=[8] * 50, ts=[5.0] * 50)
+    assert world_a._segments[0] is agent._segments[0]   # zero-copy proof
+    print("forked world_a / world_b; sealed segments shared by reference")
+
+    # ---- each world sees its own hypothesis, parent sees neither ---------
+    q = obs_a[:1]
+    hit_a = int(np.asarray(world_a.search(q, topk=1, mode="B").ids)[0, 0])
+    hit_p = int(np.asarray(agent.search(q, topk=1, mode="B").ids)[0, 0])
+    print(f"world_a nearest: id {hit_a} (its own obs: {hit_a == ids_a[0]}); "
+          f"parent nearest: id {hit_p} (pre-fork memory)")
+
+    # ---- mixed recall: symbolic tag + time window inside the scan --------
+    res = world_a.search(q, topk=3, mode="B", tag_mask=4)
+    print("tag-filtered (hypothetical-only) hits:",
+          np.asarray(res.ids)[0].tolist())
+    res2 = world_a.search(q, topk=3, mode="B", ts_range=(0.0, 3.0))
+    print("time-filtered (pre-fork-only) hits:",
+          np.asarray(res2.ids)[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""HNTL-KV long-context decode: seal a linear KV cache into the paper's
+grain index and keep decoding with retrieval attention.
+
+  PYTHONPATH=src python examples/long_context_decode.py
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import get_model
+from repro.serve.engine import promote_to_retrieval
+
+
+def main():
+    cfg = dataclasses.replace(get_smoke_config("phi3-mini-3.8b"),
+                              n_layers=2, kv_cap=128, kv_tail=128,
+                              kv_nprobe=4, kv_pool=64)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    S = 16 * cfg.kv_cap                       # 2048-token context
+    # small alphabet -> repeated tokens -> locally coherent keys (the
+    # regime the paper's tangent-local grains exploit; a trained model's
+    # keys cluster the same way)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, S), 0, 32)
+    print(f"prefilling {S} tokens...")
+    logits, caches = model.prefill(params, tokens, max_len=S + 64)
+
+    # exact decode path
+    step = jax.jit(model.decode_step)
+    tok = jnp.asarray([int(jnp.argmax(logits[0]))], jnp.int32)
+    l_exact, _ = step(params, tok, caches, jnp.asarray([S], jnp.int32))
+
+    # seal into HNTL-KV (the Aperon memtable seal applied to attention)
+    t0 = time.time()
+    retr_caches = promote_to_retrieval(model, caches, cache_len=S)
+    print(f"sealed {S//cfg.kv_cap} grains/layer in {time.time()-t0:.1f}s")
+    step_r = jax.jit(model.decode_step)
+    l_retr, retr_caches = step_r(params, tok, retr_caches,
+                                 jnp.asarray([S], jnp.int32))
+
+    top_e = np.asarray(jax.lax.top_k(l_exact[0], 5)[1])
+    top_r = np.asarray(jax.lax.top_k(l_retr[0], 5)[1])
+    print(f"exact top-5 tokens:     {top_e.tolist()}")
+    print(f"retrieval top-5 tokens: {top_r.tolist()}")
+    print(f"max |logit diff| = "
+          f"{float(jnp.abs(l_exact - l_retr).max()):.4f}")
+    print(f"per-step tokens touched: exact {S} vs retrieval "
+          f"{cfg.kv_nprobe*cfg.kv_cap + cfg.kv_pool + cfg.kv_tail}")
+    # Caveat that matters for interpreting the diff: a RANDOM-INIT model's
+    # attention is near-uniform over the 2048 positions — the worst case
+    # for any top-C retrieval (the pool can hold at most pool/S of uniform
+    # mass).  Trained long-context models concentrate attention mass, the
+    # regime HNTL-KV (paper Mode B) targets: with clustered keys the same
+    # path reproduces exact attention to ~1e-3 — see
+    # `python -m benchmarks.hntl_kv_decode` and tests/test_hntl_kv.py.
+    touched = cfg.kv_nprobe * cfg.kv_cap + cfg.kv_pool + cfg.kv_tail
+    print(f"(random-init attention is ~uniform: captured mass is bounded "
+          f"by ~{touched/S:.0%}; see benchmarks/hntl_kv_decode.py for the "
+          f"clustered-key regime where outputs match to 1e-3)")
+
+
+if __name__ == "__main__":
+    main()

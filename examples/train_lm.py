@@ -1,0 +1,87 @@
+"""End-to-end driver: train a ~100M-param gemma2-style LM on the synthetic
+Markov corpus with the full substrate (pjit sharding rules, AdamW + cosine,
+grad accumulation, async checkpointing, fault-tolerant trainer).
+
+Default size is container-friendly (~20M params); pass --full-100m for the
+~100M configuration (same code path, more FLOPs).
+
+  PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.data.tokens import MarkovLM
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_host_mesh
+from repro.models import LayerSpec, ModelConfig, get_model
+from repro.optim.adamw import AdamW, warmup_cosine
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def config_20m():
+    return ModelConfig(
+        name="aperon-lm-20m", family="dense", n_layers=6, d_model=384,
+        n_heads=6, n_kv_heads=2, head_dim=64, d_ff=1536, vocab=4096,
+        pattern=(LayerSpec("attn", window=256), LayerSpec("attn")),
+        mlp_kind="geglu", norm="rms", post_norm=True, embed_scale=True,
+        attn_logit_cap=50.0, final_logit_cap=30.0, remat=False)
+
+
+def config_100m():
+    return ModelConfig(
+        name="aperon-lm-100m", family="dense", n_layers=12, d_model=768,
+        n_heads=12, n_kv_heads=4, head_dim=64, d_ff=3072, vocab=8192,
+        pattern=(LayerSpec("attn", window=512), LayerSpec("attn")),
+        mlp_kind="geglu", norm="rms", post_norm=True, embed_scale=True,
+        attn_logit_cap=50.0, final_logit_cap=30.0)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=6e-4)
+    ap.add_argument("--full-100m", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/aperon_lm_ckpt")
+    args = ap.parse_args()
+
+    cfg = config_100m() if args.full_100m else config_20m()
+    model = get_model(cfg)
+    n_params = cfg.param_count()
+    print(f"[train_lm] {cfg.name}: {n_params/1e6:.1f}M params, "
+          f"{args.steps} steps x {args.batch}x{args.seq} tokens")
+
+    data = MarkovLM(vocab=cfg.vocab, seed=0, branch=8, temp=0.5)
+    optimizer = AdamW(lr=warmup_cosine(args.lr, args.steps // 10,
+                                       args.steps))
+
+    def data_fn(step):
+        b = data.batch(step, args.batch, args.seq)
+        return {k: jax.numpy.asarray(v) for k, v in b.items()}
+
+    mesh = make_host_mesh(1, 1)
+    rules = shd.default_rules(mesh)
+    tcfg = TrainerConfig(total_steps=args.steps,
+                         ckpt_every=max(50, args.steps // 4),
+                         ckpt_dir=args.ckpt_dir, log_every=10,
+                         microbatches=args.microbatches)
+    with mesh, shd.use_rules(rules):
+        trainer = Trainer(model, optimizer, data_fn, tcfg)
+        trainer.run()
+    losses = [h["loss"] for h in trainer.history]
+    if not losses:
+        print("[train_lm] nothing to do (checkpoint already past "
+              f"--steps {args.steps}; use a fresh --ckpt-dir to retrain)")
+        return
+    print(f"[train_lm] loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"(uniform {np.log(cfg.vocab):.3f}); "
+          f"tokens/s ~ {args.batch*args.seq/np.mean([h['time_s'] for h in trainer.history[5:]]):.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Exact brute-force oracle (ground truth for recall measurements)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .types import SearchResult
+
+
+@functools.partial(jax.jit, static_argnames=("topk",))
+def flat_search(x: jax.Array, q: jax.Array, topk: int = 10) -> SearchResult:
+    """Exact L2^2 top-k.  x [N, d], q [Q, d]."""
+    x2 = jnp.sum(x * x, axis=-1)
+    q2 = jnp.sum(q * q, axis=-1, keepdims=True)
+    d2 = q2 - 2.0 * (q @ x.T) + x2[None, :]
+    neg_d, ids = jax.lax.top_k(-d2, topk)
+    return SearchResult(ids=ids.astype(jnp.int32), dists=-neg_d)
+
+
+def recall_at_k(pred_ids, true_ids) -> float:
+    """Mean fraction of true top-k found in predicted top-k."""
+    import numpy as np
+
+    pred = np.asarray(pred_ids)
+    true = np.asarray(true_ids)
+    hits = 0
+    for p, t in zip(pred, true):
+        hits += len(set(p.tolist()) & set(t.tolist()))
+    return hits / true.size

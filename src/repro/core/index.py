@@ -1,0 +1,150 @@
+"""HNTL index construction (build-time) and the public search API.
+
+Build is host-driven (numpy + jitted jax pieces); the result is an immutable
+pytree (`HNTLIndex`) that searches inside jit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import kmeans as km
+from . import layout, pca, planner, quantize
+from .types import GrainStore, HNTLConfig, HNTLIndex, RoutingPlane, SearchResult
+
+
+@dataclasses.dataclass
+class BuildInfo:
+    var_captured: np.ndarray       # [G] fraction of variance captured by k dims
+    var_captured_mean: float       # size-weighted mean (paper's "PCA Var.")
+    fill: np.ndarray               # [G] live fraction of capacity
+    cap: int
+    bytes_compact: int             # DRAM bytes of the compact scan tier
+    bytes_raw: int                 # cold-tier bytes
+
+
+def int32_safe_qmax(k: int, bits: int = 16) -> int:
+    """Largest quantization magnitude with exact int32 accumulation over k
+    squared-diff terms: k * (2*qmax)^2 < 2^31  (see scan.py note)."""
+    qmax = int(np.sqrt((2 ** 31 - 1) / k) // 2)
+    return min(qmax, (1 << (bits - 1)) - 1)
+
+
+def build(x, cfg: HNTLConfig, *, tags: Optional[np.ndarray] = None,
+          ts: Optional[np.ndarray] = None, keep_raw: bool = True,
+          centroids: Optional[np.ndarray] = None):
+    """Build an HNTL index over corpus ``x`` [N, d].
+
+    Returns (HNTLIndex, BuildInfo).
+    """
+    x = np.asarray(x, dtype=np.float32)
+    n, d = x.shape
+    assert d == cfg.d, f"corpus dim {d} != cfg.d {cfg.d}"
+    g = cfg.n_grains
+    key = jax.random.PRNGKey(cfg.seed)
+
+    # ---- level 1: grain partition -------------------------------------
+    if g == 1:
+        cents = x.mean(axis=0, keepdims=True)
+        assign = np.zeros(n, dtype=np.int64)
+    else:
+        if centroids is None:
+            cents, _ = km.kmeans(key, jnp.asarray(x), g, iters=cfg.kmeans_iters)
+            cents = np.asarray(cents)
+        else:
+            cents = np.asarray(centroids, dtype=np.float32)
+        # capacity-bounded assignment so the Block-SoA padding stays sane
+        cap_limit = layout.round_up(
+            max(int(np.ceil(n / g * 1.6)), cfg.block), cfg.block)
+        assign = km.balanced_assign(x, cents, cap_limit)
+
+    slot, assign, cap, counts = layout.pack_grains(assign, g, cfg.block)
+
+    # recompute exact means of final members
+    mu = np.zeros((g, d), np.float32)
+    np.add.at(mu, assign, x)
+    mu /= np.maximum(counts, 1)[:, None]
+
+    # ---- per-grain PCA + quantization ----------------------------------
+    xg = layout.scatter_to_grains(x, assign, slot, g, cap)        # [G, cap, d]
+    validg = layout.scatter_to_grains(
+        np.ones(n, bool), assign, slot, g, cap, fill=False)       # [G, cap]
+    idsg = layout.scatter_to_grains(
+        np.arange(n, dtype=np.int32), assign, slot, g, cap, fill=-1)
+
+    xc = jnp.asarray(xg) - jnp.asarray(mu)[:, None, :]
+    maskj = jnp.asarray(validg)
+
+    basis, sketch_basis, var_cap = jax.vmap(
+        lambda xcg, mg: pca.grain_pca(xcg, mg, cfg.k, cfg.s))(xc, maskj)
+
+    z = jnp.einsum("gcd,gdk->gck", xc, basis)                     # [G, cap, k]
+    qeff = int32_safe_qmax(cfg.k, cfg.coord_bits)
+    scale = jax.vmap(lambda zz, mm: quantize.fit_scale(
+        zz, mm, qmax=qeff, quantile=cfg.scale_quantile,
+        mult=cfg.scale_mult))(z, maskj)                            # [G]
+    zq = quantize.quantize_coords(z, scale[:, None, None], qmax=qeff)
+
+    vc2 = jnp.sum(xc * xc, axis=-1)                                # [G, cap]
+    r = jnp.maximum(vc2 - jnp.sum(z * z, axis=-1), 0.0)
+    sk = sq = sk_scale = None
+    if cfg.s > 0:
+        s_coords = jnp.einsum("gcd,gds->gcs", xc, sketch_basis)
+        r = jnp.maximum(r - jnp.sum(s_coords * s_coords, axis=-1), 0.0)
+        sk_scale = jax.vmap(lambda zz, mm: quantize.fit_scale(
+            zz, mm, qmax=127, quantile=cfg.scale_quantile,
+            mult=cfg.scale_mult))(s_coords, maskj)
+        sq = quantize.quantize_coords(
+            s_coords, sk_scale[:, None, None], qmax=127).astype(jnp.int8)
+        sk = jnp.transpose(sq, (0, 2, 1))                          # [G, s, cap]
+    res_scale = jax.vmap(quantize.fit_res_scale)(r, maskj)         # [G]
+    rq = quantize.quantize_residual(r, res_scale[:, None])
+
+    grains = GrainStore(
+        coords=jnp.transpose(zq, (0, 2, 1)),                       # [G, k, cap]
+        res=rq,
+        sketch=sk,
+        ids=jnp.asarray(idsg),
+        valid=maskj,
+        basis=basis,
+        mu=jnp.asarray(mu),
+        scale=scale,
+        res_scale=res_scale,
+        sketch_basis=sketch_basis if cfg.s > 0 else None,
+        sketch_scale=sk_scale,
+        tags=jnp.asarray(layout.scatter_to_grains(tags, assign, slot, g, cap))
+        if tags is not None else None,
+        ts=jnp.asarray(layout.scatter_to_grains(ts, assign, slot, g, cap))
+        if ts is not None else None,
+    )
+    index = HNTLIndex(
+        routing=RoutingPlane(centroids=jnp.asarray(mu),
+                             sizes=jnp.asarray(counts)),
+        grains=grains,
+        raw=jnp.asarray(x) if keep_raw else None,
+    )
+
+    vc = np.asarray(var_cap)
+    wmean = float(np.sum(vc * counts) / max(n, 1))
+    info = BuildInfo(
+        var_captured=vc, var_captured_mean=wmean,
+        fill=np.asarray(counts, np.float64) / cap, cap=cap,
+        bytes_compact=int(n * cfg.bytes_per_vector),
+        bytes_raw=int(n * d * 4) if keep_raw else 0,
+    )
+    return index, info
+
+
+def search(index: HNTLIndex, q, cfg: HNTLConfig, *, topk: int = 10,
+           mode: str = "B", scan_fn=None, extra_mask=None) -> SearchResult:
+    """Convenience wrapper binding cfg -> planner.search statics."""
+    qeff = int32_safe_qmax(cfg.k, cfg.coord_bits)
+    return planner.search(
+        index, jnp.asarray(q, jnp.float32), nprobe=min(cfg.nprobe, cfg.n_grains),
+        pool=cfg.pool, topk=topk, mode=mode,
+        envelope_frac=cfg.envelope_frac, qeff=qeff, scan_fn=scan_fn,
+        extra_mask=extra_mask)

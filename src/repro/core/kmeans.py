@@ -1,0 +1,93 @@
+"""Balanced k-means grain partitioning (build-time, jit-compiled).
+
+Grains are the paper's spatial partition.  We use Lloyd's algorithm with
+k-means++-style seeding (greedy D^2 sampling) and an optional balance
+regularizer so no grain overflows its Block-SoA capacity by too much.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _plusplus_init(key: jax.Array, x: jax.Array, g: int) -> jax.Array:
+    """k-means++ seeding: iteratively pick centers ~ D^2."""
+    n = x.shape[0]
+    k0, key = jax.random.split(key)
+    first = jax.random.randint(k0, (), 0, n)
+    centers0 = jnp.zeros((g, x.shape[1]), x.dtype).at[0].set(x[first])
+    d2_0 = jnp.sum((x - centers0[0]) ** 2, axis=-1)
+
+    def body(carry, i):
+        centers, d2, key = carry
+        key, sub = jax.random.split(key)
+        probs = d2 / jnp.maximum(d2.sum(), 1e-30)
+        idx = jax.random.choice(sub, n, p=probs)
+        c = x[idx]
+        centers = centers.at[i].set(c)
+        d2 = jnp.minimum(d2, jnp.sum((x - c) ** 2, axis=-1))
+        return (centers, d2, key), None
+
+    (centers, _, _), _ = jax.lax.scan(
+        body, (centers0, d2_0, key), jnp.arange(1, g))
+    return centers
+
+
+def _assign(x: jax.Array, centers: jax.Array) -> jax.Array:
+    """Nearest-center assignment, computed blockwise to bound memory."""
+    # ||x - c||^2 = ||x||^2 - 2 x.c + ||c||^2 ; ||x||^2 constant per row.
+    xc = x @ centers.T                       # [N, G]
+    c2 = jnp.sum(centers * centers, axis=-1)  # [G]
+    return jnp.argmin(c2[None, :] - 2.0 * xc, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("g", "iters"))
+def kmeans(key: jax.Array, x: jax.Array, g: int, iters: int = 25):
+    """Lloyd's k-means.  Returns (centroids [G,d], assignment [N])."""
+    centers = _plusplus_init(key, x, g)
+
+    def step(centers, _):
+        assign = _assign(x, centers)
+        one_hot = jax.nn.one_hot(assign, g, dtype=x.dtype)   # [N, G]
+        counts = one_hot.sum(axis=0)                          # [G]
+        sums = one_hot.T @ x                                  # [G, d]
+        new = sums / jnp.maximum(counts, 1.0)[:, None]
+        # keep empty clusters where they were
+        new = jnp.where(counts[:, None] > 0, new, centers)
+        return new, counts
+
+    centers, _ = jax.lax.scan(step, centers, None, length=iters)
+    return centers, _assign(x, centers)
+
+
+def balanced_assign(x: jax.Array, centers: jax.Array, cap: int) -> jax.Array:
+    """Capacity-bounded assignment: greedily spill overflow to the next-nearest
+    grain with room.  Host-side (numpy) — build-time only.
+    """
+    import numpy as np
+
+    xn = np.asarray(x)
+    cn = np.asarray(centers)
+    g = cn.shape[0]
+    d2 = (
+        np.sum(xn * xn, axis=1, keepdims=True)
+        - 2.0 * xn @ cn.T
+        + np.sum(cn * cn, axis=1)[None, :]
+    )
+    order = np.argsort(d2, axis=1)          # [N, G] preference lists
+    counts = np.zeros(g, dtype=np.int64)
+    out = np.full(xn.shape[0], -1, dtype=np.int64)
+    # process points by how much they "care" (gap between 1st and 2nd choice)
+    gap = d2[np.arange(len(xn)), order[:, 0]] - d2[np.arange(len(xn)), order[:, 1]] if g > 1 else np.zeros(len(xn))
+    for i in np.argsort(gap):
+        for choice in order[i]:
+            if counts[choice] < cap:
+                out[i] = choice
+                counts[choice] += 1
+                break
+        else:  # every grain full (cap * G < N) — put in absolute nearest
+            out[i] = order[i, 0]
+            counts[order[i, 0]] += 1
+    return out

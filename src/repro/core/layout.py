@@ -1,0 +1,48 @@
+"""Block-SoA packing.
+
+The paper's physical layout (§2.4): per-grain data grouped into blocks of B
+vectors, stored contiguously, coordinates dimension-major so vector lanes load
+directly.  In JAX the layout is expressed as array axes order — the kernel
+view of coordinates is [grain, dim, slot] so that a [k, B] panel is one
+contiguous VMEM tile — plus capacity padding so every grain is a whole number
+of blocks and all addressing is affine (pointerless).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def round_up(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+def pack_grains(assign: np.ndarray, n_grains: int, block: int,
+                cap: int | None = None):
+    """Compute the slot layout for a given grain assignment.
+
+    Returns (slot_of_point [N], grain_of_point==assign, cap, counts [G]):
+    point i lives at (assign[i], slot_of_point[i]).
+    """
+    assign = np.asarray(assign)
+    counts = np.bincount(assign, minlength=n_grains)
+    if cap is None:
+        cap = round_up(max(int(counts.max()), block), block)
+    slot = np.zeros(assign.shape[0], dtype=np.int64)
+    cursor = np.zeros(n_grains, dtype=np.int64)
+    for i, g in enumerate(assign):
+        slot[i] = cursor[g]
+        cursor[g] += 1
+    if int(counts.max()) > cap:
+        raise ValueError(
+            f"grain overflow: max count {int(counts.max())} > cap {cap}; "
+            "use balanced_assign or raise cap")
+    return slot, assign, int(cap), counts.astype(np.int32)
+
+
+def scatter_to_grains(values: np.ndarray, assign: np.ndarray, slot: np.ndarray,
+                      n_grains: int, cap: int, fill=0):
+    """Scatter per-point rows [N, ...] into padded [G, cap, ...] storage."""
+    out_shape = (n_grains, cap) + values.shape[1:]
+    out = np.full(out_shape, fill, dtype=values.dtype)
+    out[assign, slot] = values
+    return out

@@ -1,0 +1,55 @@
+"""Per-grain local PCA (tangent space) bases.
+
+Paper §2.2: for each grain with centroid mu_g, construct W_g in R^{d x k}
+from the top-k principal directions of the centered members.  The residual
+sketch basis (dims k..k+s of the same eigendecomposition) captures the
+leading out-of-subspace directions used for the optional s-dim sketch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def grain_pca(x_centered: jax.Array, mask: jax.Array, k: int, s: int = 0):
+    """PCA of one grain's (masked) members.
+
+    Args:
+      x_centered: [cap, d] rows already centered on the grain mean; padded
+        rows are arbitrary.
+      mask: [cap] bool validity.
+      k: tangent dimension.
+      s: sketch dimension (0 = none).
+
+    Returns:
+      (basis [d, k], sketch_basis [d, s] or None, var_captured scalar)
+    """
+    d = x_centered.shape[1]
+    w = mask.astype(x_centered.dtype)
+    n = jnp.maximum(w.sum(), 1.0)
+    xm = x_centered * w[:, None]
+    cov = (xm.T @ xm) / n                                    # [d, d]
+    # eigh returns ascending order
+    eigval, eigvec = jnp.linalg.eigh(cov)
+    eigval = eigval[::-1]
+    eigvec = eigvec[:, ::-1]
+    basis = eigvec[:, :k]                                    # [d, k]
+    sketch = eigvec[:, k:k + s] if s > 0 else None           # [d, s]
+    total = jnp.maximum(jnp.sum(eigval), 1e-30)
+    var_captured = jnp.sum(eigval[:k]) / total
+    return basis, sketch, var_captured
+
+
+def project(v_centered: jax.Array, basis: jax.Array) -> jax.Array:
+    """Eq. 2: z = W^T v'."""
+    return v_centered @ basis
+
+
+def reconstruct(z: jax.Array, basis: jax.Array) -> jax.Array:
+    """v~ = W z (Mode A online reconstruction)."""
+    return z @ basis.T
+
+
+def residual(v_centered: jax.Array, z: jax.Array, basis: jax.Array) -> jax.Array:
+    """Eq. 3: e = v' - W z."""
+    return v_centered - reconstruct(z, basis)

@@ -1,0 +1,123 @@
+"""Dual-mode query planner (paper §2.1, §2.3).
+
+Pipeline per query batch:
+  (1) centroid routing (top-P grains),
+  (2) per-grain tangent projection of the query + quantization envelope filter,
+  (3) Block-SoA scan of surviving grains (reference jnp or Pallas kernel),
+  (4) Mode A: top-k straight from approximate distances;
+      Mode B: gather raw vectors for the C-pool and exact-f32 L2 re-rank.
+
+Everything is fixed-shape and jit-compatible.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import quantize, routing, scan
+from .types import HNTLIndex, SearchResult
+
+BIG = jnp.float32(3.0e38)
+
+
+def project_queries(index: HNTLIndex, q: jax.Array, gids: jax.Array):
+    """Project each query into each probed grain's tangent frame.
+
+    q [Q, d], gids [Q, P] -> dict of per-(query,grain) quantities.
+    """
+    g = index.grains
+    mu = g.mu[gids]                          # [Q, P, d]
+    basis = g.basis[gids]                    # [Q, P, d, k]
+    vc = q[:, None, :] - mu                  # [Q, P, d]
+    zq = jnp.einsum("qpd,qpdk->qpk", vc, basis)          # [Q, P, k]
+    vc2 = jnp.sum(vc * vc, axis=-1)                       # [Q, P]
+    zq2 = jnp.sum(zq * zq, axis=-1)
+    out = {"zq": zq, "vc2": vc2}
+    rq = vc2 - zq2                                        # ||e_q||^2 (W orthonormal)
+    if g.sketch_basis is not None:
+        sb = g.sketch_basis[gids]                         # [Q, P, d, s]
+        sq = jnp.einsum("qpd,qpds->qps", vc, sb)
+        rq = rq - jnp.sum(sq * sq, axis=-1)
+        out["sq"] = sq
+    out["rq"] = jnp.maximum(rq, 0.0)
+    return out
+
+
+def scan_probed(index: HNTLIndex, q: jax.Array, gids: jax.Array,
+                envelope_frac: float, qeff: int,
+                scan_fn=None,
+                extra_mask: Optional[jax.Array] = None):
+    """Stages (2)+(3): project, envelope-filter, Block-SoA scan.
+
+    Returns (dists [Q, P*cap] f32, ids [Q, P*cap] i32).
+    scan_fn: callable with `scan.blocksoa_scan`'s signature (Pallas or ref).
+    extra_mask: [G, cap] bool mixed-recall predicate evaluated in-situ.
+    """
+    g = index.grains
+    proj = project_queries(index, q, gids)
+    scale = g.scale[gids]                                 # [Q, P]
+    res_scale = g.res_scale[gids]
+
+    # Envelope filter: prune structurally-incompatible grains (paper §2.3).
+    keep = quantize.envelope_keep(proj["zq"], scale[..., None] , envelope_frac,
+                                  qmax=qeff)              # [Q, P]
+
+    zq_q = quantize.quantize_coords(proj["zq"], scale[..., None], qmax=qeff)
+    coords = g.coords[gids]                               # [Q, P, k, cap]
+    res = g.res[gids]                                     # [Q, P, cap]
+    valid = g.valid[gids]                                 # [Q, P, cap]
+    ids = g.ids[gids]                                     # [Q, P, cap]
+
+    kw = {}
+    if g.sketch_basis is not None:
+        sk_scale = g.sketch_scale[gids]
+        kw = dict(
+            sq=quantize.quantize_coords(proj["sq"], sk_scale[..., None],
+                                        qmax=127).astype(jnp.int32),
+            sketch=g.sketch[gids],
+            sketch_scale=sk_scale,
+        )
+    if extra_mask is not None:
+        kw["extra_mask"] = extra_mask[gids]
+
+    fn = scan_fn if scan_fn is not None else scan.blocksoa_scan
+    dists = jax.vmap(fn)(zq_q.astype(jnp.int32), proj["rq"], coords, res,
+                         valid, scale, res_scale, **kw)   # [Q, P, cap]
+    # kill pruned grains wholesale
+    dists = jnp.where(keep[..., None], dists, BIG)
+    qn = q.shape[0]
+    return dists.reshape(qn, -1), ids.reshape(qn, -1)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("nprobe", "pool", "topk", "mode", "envelope_frac",
+                     "qeff", "scan_fn"))
+def search(index: HNTLIndex, q: jax.Array, *, nprobe: int, pool: int,
+           topk: int, mode: str = "B", envelope_frac: float = 0.25,
+           qeff: int = 8191, scan_fn=None,
+           extra_mask: Optional[jax.Array] = None) -> SearchResult:
+    """Full HNTL search.  mode='A' self-contained, mode='B' tiered re-rank."""
+    gids, _ = routing.route(index.routing, q, nprobe)
+    dists, ids = scan_probed(index, q, gids, envelope_frac, qeff,
+                             scan_fn=scan_fn, extra_mask=extra_mask)
+
+    if mode == "A":
+        neg_d, pos = jax.lax.top_k(-dists, topk)
+        return SearchResult(ids=jnp.take_along_axis(ids, pos, axis=1),
+                            dists=-neg_d)
+
+    # Mode B: candidate pool C -> exact float32 L2 re-rank from the cold tier.
+    assert index.raw is not None, "Mode B needs the raw (cold) tier"
+    neg_d, pos = jax.lax.top_k(-dists, pool)              # [Q, C]
+    cand_ids = jnp.take_along_axis(ids, pos, axis=1)      # [Q, C]
+    cand_ok = neg_d > -BIG
+    cand = index.raw[jnp.maximum(cand_ids, 0)]            # [Q, C, d]
+    exact = jnp.sum((cand - q[:, None, :]) ** 2, axis=-1)
+    exact = jnp.where(cand_ok, exact, BIG)
+    neg_e, pos_e = jax.lax.top_k(-exact, topk)
+    return SearchResult(ids=jnp.take_along_axis(cand_ids, pos_e, axis=1),
+                        dists=-neg_e)

@@ -1,0 +1,75 @@
+"""Coordinate / residual quantization and the quantization envelope filter.
+
+Paper Eq. 5:  z_hat = round(z / Delta),  r_hat = round(r / Delta_res),
+with z_hat clipped to int16 and r_hat to the unsigned 16-bit range.
+
+The *envelope filter* (paper §2.3) prunes a grain for a given query when the
+projected query saturates (clips) on more than ``envelope_frac`` of the k
+coordinates — the query is structurally outside the grain's tangent patch, so
+quantized distances there would be garbage.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INT16_MAX = 32767
+UINT16_MAX = 65535
+
+
+def fit_scale(z: jax.Array, mask: jax.Array, qmax: int = INT16_MAX,
+              quantile: float = 0.9995, mult: float = 1.25) -> jax.Array:
+    """Per-grain coordinate scale Delta from a high quantile of |z|.
+
+    z: [cap, k]; mask: [cap].  Padded rows excluded by pushing them to 0.
+    """
+    mag = jnp.abs(z) * mask[:, None].astype(z.dtype)
+    q = jnp.quantile(mag.reshape(-1), quantile)
+    return jnp.maximum(q * mult, 1e-12) / qmax
+
+
+def fit_res_scale(r: jax.Array, mask: jax.Array, rmax: int = UINT16_MAX) -> jax.Array:
+    """Per-grain residual scale from the max residual energy."""
+    m = jnp.max(r * mask.astype(r.dtype))
+    return jnp.maximum(m * 1.05, 1e-12) / rmax
+
+
+def quantize_coords(z: jax.Array, scale: jax.Array, qmax: int = INT16_MAX) -> jax.Array:
+    """Eq. 5 left: signed-int16 coordinates."""
+    q = jnp.round(z / scale)
+    return jnp.clip(q, -qmax, qmax).astype(jnp.int16)
+
+
+def dequantize_coords(zq: jax.Array, scale: jax.Array) -> jax.Array:
+    return zq.astype(jnp.float32) * scale
+
+
+def quantize_residual(r: jax.Array, res_scale: jax.Array,
+                      rmax: int = UINT16_MAX) -> jax.Array:
+    """Eq. 5 right: unsigned-16 residual energy (stored widened to int32)."""
+    q = jnp.round(r / res_scale)
+    return jnp.clip(q, 0, rmax).astype(jnp.int32)
+
+
+def dequantize_residual(rq: jax.Array, res_scale: jax.Array) -> jax.Array:
+    return rq.astype(jnp.float32) * res_scale
+
+
+def saturation_fraction(z: jax.Array, scale: jax.Array,
+                        qmax: int = INT16_MAX) -> jax.Array:
+    """Fraction of coordinates that clip when quantized with ``scale``.
+
+    z: [..., k] float coords; scale broadcastable.  Returns [...] in [0, 1].
+    """
+    q = z / scale
+    sat = (jnp.abs(q) >= qmax).astype(jnp.float32)
+    return jnp.mean(sat, axis=-1)
+
+
+def envelope_keep(z_q: jax.Array, scale: jax.Array, frac: float,
+                  qmax: int = INT16_MAX) -> jax.Array:
+    """Envelope filter verdict: True = keep grain, False = prune.
+
+    z_q: the *query's* float coords in this grain's tangent frame.
+    """
+    return saturation_fraction(z_q, scale, qmax) <= frac

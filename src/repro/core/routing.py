@@ -1,0 +1,24 @@
+"""Level-1 hierarchical centroid routing (paper §2.3).
+
+For a query batch Q we compute ambient-space distances to all G grain
+centroids and keep the top-P (nprobe).  Empty grains are never selected.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .types import RoutingPlane
+
+
+def route(plane: RoutingPlane, q: jax.Array, nprobe: int):
+    """Select the top-P closest grains per query.
+
+    q: [Q, d].  Returns (grain_ids [Q, P] i32, grain_d2 [Q, P] f32).
+    """
+    c2 = jnp.sum(plane.centroids * plane.centroids, axis=-1)      # [G]
+    q2 = jnp.sum(q * q, axis=-1, keepdims=True)                   # [Q, 1]
+    d2 = q2 - 2.0 * (q @ plane.centroids.T) + c2[None, :]         # [Q, G]
+    d2 = jnp.where(plane.sizes[None, :] > 0, d2, jnp.float32(3e38))
+    neg_d, idx = jax.lax.top_k(-d2, nprobe)
+    return idx.astype(jnp.int32), -neg_d

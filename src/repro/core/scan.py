@@ -1,0 +1,100 @@
+"""Reference scan implementations (pure jnp).
+
+``blocksoa_scan`` is the semantic oracle for the Pallas kernel
+(`repro.kernels.hntl_scan`).  ``aos_scan`` and ``pointer_chase_scan`` exist to
+reproduce Table 2's layout comparison on real hardware (benchmarks) — same
+math, pessimal memory behaviour.
+
+Integer-math note (TPU adaptation, see DESIGN.md §2): coordinates are stored
+int16 (paper layout) but quantized to an int32-safe effective range
+(qeff = floor(sqrt(2^31 / k) / 2)) so that the accumulated squared distance
+  sum_k (zq - zi)^2  <=  k * (2*qeff)^2  <  2^31
+is exact in int32 — the same constraint a NEON/AVX int16->int32 MAC pipeline
+has.  Scales are applied once per grain at the end (per-grain quantizers).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_BIG = jnp.float32(3.0e38)
+
+
+def block_dist_int(zq: jax.Array, coords: jax.Array) -> jax.Array:
+    """Integer part of Eq. 6 for one grain panel.
+
+    zq:     [k] int32        — quantized query coords in this grain's frame
+    coords: [k, cap] int32   — dimension-major Block-SoA panel
+    returns [cap] int32      — sum_k (zq - z_i)^2
+    """
+    diff = zq[:, None] - coords
+    return jnp.sum(diff * diff, axis=0)
+
+
+def blocksoa_scan(zq: jax.Array, rq: jax.Array, coords: jax.Array,
+                  res: jax.Array, valid: jax.Array, scale: jax.Array,
+                  res_scale: jax.Array,
+                  sq: jax.Array | None = None,
+                  sketch: jax.Array | None = None,
+                  sketch_scale: jax.Array | None = None,
+                  extra_mask: jax.Array | None = None) -> jax.Array:
+    """Approximate distances for every slot of a set of grain panels.
+
+    Shapes (P = probed grains, cap = slots/grain):
+      zq [P, k] i32, rq [P] f32 (already dequantized query residual energy),
+      coords [P, k, cap] i16/i32, res [P, cap] i32, valid [P, cap] bool,
+      scale [P] f32, res_scale [P] f32,
+      sq [P, s] i32 | None, sketch [P, s, cap] i8 | None.
+      extra_mask [P, cap] bool | None — in-situ mixed-recall predicate.
+
+    Returns dists [P, cap] f32 with invalid slots = +BIG.
+    """
+    coords = coords.astype(jnp.int32)
+    d_int = jax.vmap(block_dist_int)(zq, coords)             # [P, cap] i32
+    d = d_int.astype(jnp.float32) * (scale * scale)[:, None]
+    d = d + res.astype(jnp.float32) * res_scale[:, None] + rq[:, None]
+    if sketch is not None:
+        s_int = jax.vmap(block_dist_int)(sq, sketch.astype(jnp.int32))
+        d = d + s_int.astype(jnp.float32) * (sketch_scale * sketch_scale)[:, None]
+    keep = valid
+    if extra_mask is not None:
+        keep = jnp.logical_and(keep, extra_mask)
+    return jnp.where(keep, d, NEG_BIG)
+
+
+def aos_scan(zq: jax.Array, rq: jax.Array, coords_aos: jax.Array,
+             res: jax.Array, valid: jax.Array, scale: jax.Array,
+             res_scale: jax.Array) -> jax.Array:
+    """Array-of-Structures layout scan (Table 2 middle row).
+
+    coords_aos: [P, cap, k] — vector-major; identical math, layout forces a
+    transpose-per-vector access pattern.
+    """
+    coords = coords_aos.astype(jnp.int32)
+    diff = zq[:, None, :] - coords                           # [P, cap, k]
+    d_int = jnp.sum(diff * diff, axis=-1)
+    d = d_int.astype(jnp.float32) * (scale * scale)[:, None]
+    d = d + res.astype(jnp.float32) * res_scale[:, None] + rq[:, None]
+    return jnp.where(valid, d, NEG_BIG)
+
+
+def pointer_chase_scan(zq: jax.Array, rq: jax.Array, coords_flat: jax.Array,
+                       res_flat: jax.Array, next_ptr: jax.Array,
+                       head: jax.Array, n_steps: int, scale: jax.Array,
+                       res_scale: jax.Array) -> jax.Array:
+    """Graph-style traversal (Table 2 bottom row): follow a linked list of
+    node indices; every access is a data-dependent gather.
+
+    coords_flat [N, k] i32, res_flat [N] i32, next_ptr [N] i32, head scalar.
+    Returns dists [n_steps] f32 in visit order.
+    """
+    def body(ptr, _):
+        c = coords_flat[ptr]                                  # gather
+        r = res_flat[ptr]
+        diff = zq - c.astype(jnp.int32)
+        d = jnp.sum(diff * diff).astype(jnp.float32) * scale * scale
+        d = d + r.astype(jnp.float32) * res_scale + rq
+        return next_ptr[ptr], d
+
+    _, dists = jax.lax.scan(body, head, None, length=n_steps)
+    return dists

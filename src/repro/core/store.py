@@ -1,0 +1,222 @@
+"""Aperon log-structured memory layer (paper §1-§2).
+
+Grains are self-contained, so the index maps onto immutable *segments*
+(Memory SSTables).  This module provides the data-plane semantics the paper
+claims graph indexes cannot offer cheaply:
+
+- **append without re-wiring**: new vectors accumulate in a mutable *memtable*
+  scanned exactly; a ``seal()`` freezes it into an immutable HNTL segment.
+  Sealed segments are never modified — no global graph re-wiring, ever.
+- **zero-copy branching**: a branch is a new manifest that *references* the
+  same immutable segments (copy-on-write).  Forks cost O(1) and share all
+  storage — the paper's "parallel counterfactual simulations".
+- **snapshots**: a snapshot is a frozen manifest (list of segment refs +
+  memtable high-water mark).
+- **mixed recall**: each record can carry a symbolic ``tag`` bitmask and a
+  timestamp; predicates are evaluated *in-situ* inside the sequential scan
+  (extra_mask), not as a post-filter.
+- **tiered cold storage**: sealed segments optionally spill raw vectors to a
+  numpy memmap file (the paper's SSD/mmap tier); Mode B re-rank reads from it.
+
+The scan/search data plane is jitted JAX; manifest bookkeeping is plain
+Python (build-time / control-plane, exactly like Aperon's Rust control code).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import tempfile
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import index as index_mod
+from .flat import flat_search
+from .types import HNTLConfig, HNTLIndex, SearchResult
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """An immutable sealed segment: HNTL index + optional cold raw tier."""
+
+    seg_id: int
+    index: HNTLIndex                 # raw=None when cold-tiered
+    n: int
+    id_base: int                     # global id offset of this segment
+    tags: Optional[np.ndarray]       # [n] u32
+    ts: Optional[np.ndarray]         # [n] f32
+    cold_path: Optional[str] = None  # memmap file with raw vectors
+    d: int = 0
+
+    def raw_vectors(self) -> np.ndarray:
+        if self.index.raw is not None:
+            return np.asarray(self.index.raw)
+        return np.memmap(self.cold_path, dtype=np.float32, mode="r",
+                         shape=(self.n, self.d))
+
+
+@dataclasses.dataclass(frozen=True)
+class Manifest:
+    """Immutable snapshot of a store: segment refs + memtable watermark."""
+
+    segments: tuple                  # tuple[Segment, ...]
+    mem_n: int                      # live rows of the (shared) memtable
+
+
+class VectorStore:
+    """Log-structured vector memory with HNTL-indexed sealed segments."""
+
+    def __init__(self, cfg: HNTLConfig, *, seal_threshold: int = 8192,
+                 cold_dir: Optional[str] = None, cold_tier: bool = False):
+        self.cfg = cfg
+        self.seal_threshold = seal_threshold
+        self.cold_tier = cold_tier
+        self.cold_dir = cold_dir or tempfile.mkdtemp(prefix="aperon_cold_")
+        self._segments: list[Segment] = []
+        self._mem: list[np.ndarray] = []
+        self._mem_tags: list[int] = []
+        self._mem_ts: list[float] = []
+        self._next_id = 0
+        self._next_seg = 0
+
+    # ------------------------------------------------------------- write path
+    def add(self, vecs: np.ndarray, tags: Optional[Sequence[int]] = None,
+            ts: Optional[Sequence[float]] = None) -> np.ndarray:
+        """Append vectors; returns assigned global ids."""
+        vecs = np.asarray(vecs, np.float32)
+        n = vecs.shape[0]
+        ids = np.arange(self._next_id, self._next_id + n, dtype=np.int64)
+        self._next_id += n
+        self._mem.extend(list(vecs))
+        self._mem_tags.extend(list(tags) if tags is not None else [0] * n)
+        self._mem_ts.extend(list(ts) if ts is not None else [0.0] * n)
+        if len(self._mem) >= self.seal_threshold:
+            self.seal()
+        return ids
+
+    def seal(self) -> Optional[Segment]:
+        """Freeze the memtable into an immutable HNTL segment."""
+        if not self._mem:
+            return None
+        x = np.stack(self._mem)
+        tags = np.asarray(self._mem_tags, np.uint32)
+        ts = np.asarray(self._mem_ts, np.float32)
+        n = x.shape[0]
+        g = max(1, min(self.cfg.n_grains, n // max(self.cfg.block, 32)))
+        cfg = dataclasses.replace(self.cfg, n_grains=g)
+        idx, _ = index_mod.build(x, cfg, tags=tags, ts=ts,
+                                 keep_raw=not self.cold_tier)
+        cold_path = None
+        if self.cold_tier:
+            cold_path = os.path.join(
+                self.cold_dir, f"seg{self._next_seg:06d}.raw")
+            mm = np.memmap(cold_path, dtype=np.float32, mode="w+",
+                           shape=x.shape)
+            mm[:] = x
+            mm.flush()
+        # ids were assigned sequentially; the memtable holds the last n of them
+        seg = Segment(
+            seg_id=self._next_seg, index=idx, n=n, id_base=self._next_id - n,
+            tags=tags, ts=ts, cold_path=cold_path, d=x.shape[1])
+        self._segments.append(seg)
+        self._next_seg += 1
+        self._mem, self._mem_tags, self._mem_ts = [], [], []
+        return seg
+
+    # ---------------------------------------------------------- control plane
+    def snapshot(self) -> Manifest:
+        return Manifest(segments=tuple(self._segments), mem_n=len(self._mem))
+
+    def branch(self) -> "VectorStore":
+        """Zero-copy fork: new store sharing all sealed segments (CoW)."""
+        child = VectorStore(self.cfg, seal_threshold=self.seal_threshold,
+                            cold_dir=self.cold_dir, cold_tier=self.cold_tier)
+        child._segments = list(self._segments)        # shared immutable refs
+        child._mem = list(self._mem)                  # memtable copied (small)
+        child._mem_tags = list(self._mem_tags)
+        child._mem_ts = list(self._mem_ts)
+        child._next_id = self._next_id
+        child._next_seg = self._next_seg
+        return child
+
+    @property
+    def n_vectors(self) -> int:
+        return sum(s.n for s in self._segments) + len(self._mem)
+
+    # ------------------------------------------------------------- read path
+    def search(self, q: np.ndarray, *, topk: int = 10, mode: str = "B",
+               tag_mask: Optional[int] = None,
+               ts_range: Optional[tuple] = None,
+               manifest: Optional[Manifest] = None, scan_fn=None
+               ) -> SearchResult:
+        """Unified mixed-recall search across sealed segments + memtable.
+
+        tag_mask: keep records with (tag & tag_mask) != 0 (in-situ predicate).
+        ts_range: (lo, hi) keep lo <= ts < hi.
+        """
+        man = manifest or self.snapshot()
+        q = np.asarray(q, np.float32)
+        if q.ndim == 1:
+            q = q[None]
+        all_ids, all_d = [], []
+        for seg in man.segments:
+            extra = None
+            g = seg.index.grains
+            if tag_mask is not None or ts_range is not None:
+                keep = jnp.ones(g.ids.shape, bool)
+                if tag_mask is not None and g.tags is not None:
+                    keep &= (g.tags & jnp.uint32(tag_mask)) != 0
+                if ts_range is not None and g.ts is not None:
+                    lo, hi = ts_range
+                    keep &= (g.ts >= lo) & (g.ts < hi)
+                extra = keep
+            if mode == "B" and seg.index.raw is None:
+                # cold tier: approximate scan in-core, exact re-rank via mmap
+                res = index_mod.search(seg.index, q, self.cfg, topk=max(
+                    topk, self.cfg.pool), mode="A", scan_fn=scan_fn,
+                    extra_mask=extra)
+                raw = seg.raw_vectors()
+                cand = np.asarray(res.ids)
+                # candidates pruned in-scan (validity / mixed-recall mask) come
+                # back with approx dist = BIG; keep them pruned through re-rank
+                cand_ok = (cand >= 0) & (np.asarray(res.dists) < 1e38)
+                exact = np.sum(
+                    (raw[np.maximum(cand, 0)] - q[:, None, :]) ** 2, axis=-1)
+                exact = np.where(cand_ok, exact, 3e38)
+                order = np.argsort(exact, axis=1)[:, :topk]
+                ids = np.take_along_axis(cand, order, axis=1)
+                d = np.take_along_axis(exact, order, axis=1)
+            else:
+                res = index_mod.search(seg.index, q, self.cfg, topk=topk,
+                                       mode=mode, scan_fn=scan_fn,
+                                       extra_mask=extra)
+                ids, d = np.asarray(res.ids), np.asarray(res.dists)
+            ids = np.where(ids >= 0, ids + seg.id_base, -1)
+            all_ids.append(ids)
+            all_d.append(d)
+        if man.mem_n > 0:
+            # hot tail: exact scan (the paper's unsealed memtable semantics)
+            mem = np.stack(self._mem[:man.mem_n])
+            keep = np.ones(man.mem_n, bool)
+            if tag_mask is not None:
+                keep &= (np.asarray(self._mem_tags[:man.mem_n], np.uint32)
+                         & np.uint32(tag_mask)) != 0
+            if ts_range is not None:
+                tsv = np.asarray(self._mem_ts[:man.mem_n], np.float32)
+                keep &= (tsv >= ts_range[0]) & (tsv < ts_range[1])
+            base = self._next_id - len(self._mem)
+            # mask *before* top-k so filtered-out rows cannot shadow valid ones
+            d_all = np.sum((mem[None, :, :] - q[:, None, :]) ** 2, axis=-1)
+            d_all = np.where(keep[None, :], d_all, 3e38)
+            kk = min(topk, man.mem_n)
+            order = np.argsort(d_all, axis=1)[:, :kk]
+            all_ids.append(order.astype(np.int64) + base)
+            all_d.append(np.take_along_axis(d_all, order, axis=1))
+        ids = np.concatenate(all_ids, axis=1)
+        d = np.concatenate(all_d, axis=1)
+        order = np.argsort(d, axis=1)[:, :topk]
+        return SearchResult(
+            ids=jnp.asarray(np.take_along_axis(ids, order, axis=1)),
+            dists=jnp.asarray(np.take_along_axis(d, order, axis=1)))

@@ -1,0 +1,145 @@
+"""Core datatypes for the HNTL index.
+
+Everything that participates in a jitted search is a pytree of fixed-shape
+arrays.  Build-time structures (manifests, segments) live in ``store.py`` and
+are plain Python.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Static configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HNTLConfig:
+    """Static (hashable) configuration of an HNTL index.
+
+    Mirrors the paper's notation: ambient dim ``d``, tangent dim ``k``,
+    residual sketch dim ``s``, block size ``B``, grain count ``G``.
+    """
+
+    d: int = 768                 # ambient dimensionality
+    k: int = 32                  # local tangent (PCA) dimensionality
+    s: int = 8                   # residual sketch dimensionality (0 = off)
+    block: int = 128             # Block-SoA block size B (TPU lane width)
+    n_grains: int = 64           # G — number of grains (routing plane size)
+    nprobe: int = 8              # top-P grains visited per query
+    pool: int = 20               # candidate pool C handed to the re-ranker
+    envelope_frac: float = 0.25  # saturation fraction above which a grain is pruned
+    coord_bits: int = 16         # quantized coordinate width (int16)
+    # Quantile of |z| used to set the quantization scale Delta per grain.
+    scale_quantile: float = 0.9995
+    # Safety factor: scale covers scale_mult * quantile(|z|).
+    scale_mult: float = 1.25
+    kmeans_iters: int = 25
+    seed: int = 0
+
+    @property
+    def qmax(self) -> int:
+        return (1 << (self.coord_bits - 1)) - 1  # 32767 for int16
+
+    @property
+    def bytes_per_vector(self) -> int:
+        """DRAM bytes per vector in the compact index (paper §3.2: 66 B)."""
+        return 2 * self.k + (self.s if self.s else 0) + 2  # coords + sketch + residual
+
+    @property
+    def block_bytes(self) -> int:
+        """Eq. 7: BlockBytes = B * (2k + s + 6)."""
+        return self.block * (2 * self.k + self.s + 6)
+
+
+# ---------------------------------------------------------------------------
+# Index pytrees
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class RoutingPlane:
+    """Level-1 routing: grain centroids in the ambient space."""
+
+    centroids: jax.Array       # [G, d] f32
+    sizes: jax.Array           # [G] i32 — live vectors per grain
+
+    @property
+    def n_grains(self) -> int:
+        return self.centroids.shape[0]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GrainStore:
+    """Level-2 pointerless Block-SoA storage.
+
+    All arrays are padded to ``cap`` slots per grain (cap % block == 0);
+    ``valid`` masks the padding.  Addressing is affine in (grain, slot):
+    there are no neighbour lists or indirection anywhere in the scan path.
+
+    ``coords`` is kept dimension-major *inside the kernel view* ([G, k, cap])
+    so a VMEM panel load is a contiguous [k, B] tile — the TPU analogue of the
+    paper's dimension-major SoA cache lines.
+    """
+
+    coords: jax.Array          # [G, k, cap] i16 — quantized tangent coords (dim-major)
+    res: jax.Array             # [G, cap] i32  — quantized residual energy (unsigned range)
+    sketch: Optional[jax.Array]  # [G, s, cap] i8 or None — residual sketch (dim-major)
+    ids: jax.Array             # [G, cap] i32  — global vector ids (-1 = padding)
+    valid: jax.Array           # [G, cap] bool
+    basis: jax.Array           # [G, d, k] f32 — local PCA bases W_g
+    mu: jax.Array              # [G, d] f32    — grain centroids (== routing centroids)
+    scale: jax.Array           # [G] f32       — coordinate quantization step Delta_g
+    res_scale: jax.Array       # [G] f32       — residual quantization step Delta_res,g
+    sketch_basis: Optional[jax.Array]  # [G, d, s] f32 or None — residual sketch basis
+    sketch_scale: Optional[jax.Array]  # [G] f32 or None
+    tags: Optional[jax.Array] = None   # [G, cap] u32 — mixed-recall symbolic tags
+    ts: Optional[jax.Array] = None     # [G, cap] f32 — mixed-recall timestamps
+
+    @property
+    def n_grains(self) -> int:
+        return self.coords.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.coords.shape[1]
+
+    @property
+    def cap(self) -> int:
+        return self.coords.shape[2]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class HNTLIndex:
+    """A complete, immutable HNTL index (one segment)."""
+
+    routing: RoutingPlane
+    grains: GrainStore
+    # Cold tier: raw float vectors, only touched by Mode B re-rank.
+    raw: Optional[jax.Array]   # [N, d] f32 or None (Mode A-only index)
+
+    @property
+    def n_vectors(self) -> int:
+        return int(self.raw.shape[0]) if self.raw is not None else -1
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SearchResult:
+    """Top-k result of a (batched) query."""
+
+    ids: jax.Array             # [Q, topk] i32
+    dists: jax.Array           # [Q, topk] f32 (approx for Mode A, exact L2^2 for Mode B)
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total bytes of all array leaves in a pytree."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return sum(x.size * x.dtype.itemsize for x in leaves if hasattr(x, "dtype"))

@@ -1,0 +1,58 @@
+"""Elastic re-meshing: survive node loss / cluster resize without data loss.
+
+Checkpoints are mesh-agnostic (saved unsharded, see checkpoint/manager.py),
+so the *cold* path is restore-on-new-mesh.  This module adds the *hot* path:
+re-laying-out a live TrainState onto a new mesh directly with device_put —
+no host round-trip for leaves whose sharding is unchanged.
+
+Policy helper ``shrink_mesh`` builds the largest usable (data, model) mesh
+from the surviving device list, preferring to shrink the data axis (pure DP
+capacity) and keep the model axis intact (so TP-sharded weights keep their
+layout and only the batch needs re-balancing — the cheap direction).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from .sharding import ShardingRules, default_rules, infer_param_specs
+
+
+def shrink_mesh(devices: Sequence, model_parallel: int,
+                axis_names=("data", "model")) -> Mesh:
+    """Largest (data, model_parallel) mesh from the surviving devices."""
+    n = len(devices)
+    data = n // model_parallel
+    if data < 1:
+        raise ValueError(
+            f"{n} devices cannot host model axis {model_parallel}")
+    use = data * model_parallel
+    import numpy as np
+    dev = np.asarray(devices[:use]).reshape(data, model_parallel)
+    return Mesh(dev, axis_names)
+
+
+def reshard_tree(tree, new_rules: ShardingRules, spec_tree=None):
+    """device_put every leaf onto the new mesh.  ``spec_tree`` defaults to
+    inferred parameter specs (works for params/opt-state trees)."""
+    if spec_tree is None:
+        spec_tree = infer_param_specs(tree, new_rules)
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(
+            x, NamedSharding(new_rules.mesh, s)), tree, spec_tree)
+
+
+def remesh_train_state(state, new_mesh: Mesh, *,
+                       rules: Optional[ShardingRules] = None):
+    """Re-lay-out a TrainState after the mesh changed (node loss / grow)."""
+    rules = rules or default_rules(new_mesh)
+    new_params = reshard_tree(state.params, rules)
+    new_m = reshard_tree(state.opt_state["m"], rules)
+    new_v = reshard_tree(state.opt_state["v"], rules)
+    import dataclasses
+    return dataclasses.replace(
+        state, params=new_params,
+        opt_state={"m": new_m, "v": new_v,
+                   "count": jax.device_get(state.opt_state["count"])})

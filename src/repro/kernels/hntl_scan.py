@@ -1,0 +1,196 @@
+"""Pallas TPU kernel for the HNTL Block-SoA quantized scan (paper §3.3).
+
+TPU adaptation of the paper's NEON/AVX engine (DESIGN.md §2): the scan is
+lifted to query-batched matmul form so the MXU does the heavy lifting —
+
+    D_int[Q, B] = ||zq||^2 1^T + 1 ||z_i||^2^T - 2 * Zq @ Z^T
+
+with int16 coordinates widened to int32 inside VMEM and int32 accumulation
+(`preferred_element_type=int32`), exact because quantization is int32-safe
+(core/index.int32_safe_qmax).  Per-grain scales and residual terms are fused
+into the epilogue, as is the validity / mixed-recall mask — the paper's
+"in-situ predicate check inside the scan loop".
+
+Layout: the coordinate panel arrives dimension-major `[k, cap]` (Block-SoA);
+one (k, BLK_C) tile is resident in VMEM while query tiles stream — the VMEM
+analogue of the paper's cache-line-aligned blocks.
+
+Grid: (grains, query-tiles, cap-tiles).  Every block index is affine in the
+grid — no gathers, no pointers anywhere in the kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_BIG = 3.0e38  # python float: Pallas kernels may not capture traced constants
+
+BLK_Q = 128   # query-tile rows   (MXU dimension)
+BLK_C = 128   # cap-tile columns  (lane dimension)
+
+
+def _scan_kernel(zq_ref, rq_ref, coords_ref, res_ref, valid_ref,
+                 scale_ref, res_scale_ref, out_ref):
+    """One (grain g, query tile qi, cap tile ci) cell.
+
+    zq_ref:     [BLK_Q, k] i32   — quantized queries in grain-g frame
+    rq_ref:     [BLK_Q, 1] f32   — query residual energies (dequantized)
+    coords_ref: [k, BLK_C] i16   — Block-SoA coordinate panel (dim-major)
+    res_ref:    [1, BLK_C] i32   — quantized residual energies
+    valid_ref:  [1, BLK_C] i32   — validity/mixed-recall mask (0/1)
+    scale_ref:     [1, 1] f32    — Delta_g
+    res_scale_ref: [1, 1] f32    — Delta_res,g
+    out_ref:    [BLK_Q, BLK_C] f32
+    """
+    zq = zq_ref[...]                                   # i32 [BLK_Q, k]
+    panel = coords_ref[...].astype(jnp.int32)          # [k, BLK_C]
+
+    # MXU cross term with exact int32 accumulation.
+    cross = jax.lax.dot_general(
+        zq, panel, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)              # [BLK_Q, BLK_C]
+    zq2 = jnp.sum(zq * zq, axis=1, keepdims=True)      # [BLK_Q, 1]
+    zi2 = jnp.sum(panel * panel, axis=0, keepdims=True)  # [1, BLK_C]
+    d_int = zq2 + zi2 - 2 * cross                      # exact int32
+
+    scale = scale_ref[0, 0]
+    res_scale = res_scale_ref[0, 0]
+    d = d_int.astype(jnp.float32) * (scale * scale)
+    d = d + res_ref[...].astype(jnp.float32) * res_scale   # + r_i
+    d = d + rq_ref[...]                                    # + r_q
+
+    keep = valid_ref[...] != 0
+    out_ref[...] = jnp.where(keep, d, jnp.float32(NEG_BIG))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def hntl_scan(zq, rq, coords, res, valid, scale, res_scale, *,
+              interpret: bool = True):
+    """Batched-query Block-SoA scan over P grain panels.
+
+    Args (P grains, Q queries, k dims, cap slots; Q % BLK_Q == 0 handled by
+    padding inside):
+      zq     [P, Q, k] i32 — queries projected+quantized per grain frame
+      rq     [P, Q] f32
+      coords [P, k, cap] i16
+      res    [P, cap] i32
+      valid  [P, cap] bool
+      scale, res_scale [P] f32
+
+    Returns dists [P, Q, cap] f32 (+BIG on invalid slots).
+    """
+    p, q, k = zq.shape
+    cap = coords.shape[2]
+    q_pad = -q % BLK_Q
+    c_pad = -cap % BLK_C
+    if q_pad:
+        zq = jnp.pad(zq, ((0, 0), (0, q_pad), (0, 0)))
+        rq = jnp.pad(rq, ((0, 0), (0, q_pad)))
+    if c_pad:
+        coords = jnp.pad(coords, ((0, 0), (0, 0), (0, c_pad)))
+        res = jnp.pad(res, ((0, 0), (0, 0), (0, c_pad)))
+        valid = jnp.pad(valid, ((0, 0), (0, 0), (0, c_pad)))
+    qp, capp = q + q_pad, cap + c_pad
+
+    grid = (p, qp // BLK_Q, capp // BLK_C)  # affine — no pointers anywhere
+    out = pl.pallas_call(
+        _scan_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, BLK_Q, k), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((None, BLK_Q, 1), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((None, k, BLK_C), lambda g, i, j: (g, 0, j)),
+            pl.BlockSpec((None, 1, BLK_C), lambda g, i, j: (g, 0, j)),
+            pl.BlockSpec((None, 1, BLK_C), lambda g, i, j: (g, 0, j)),
+            pl.BlockSpec((None, 1, 1), lambda g, i, j: (g, 0, 0)),
+            pl.BlockSpec((None, 1, 1), lambda g, i, j: (g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (None, BLK_Q, BLK_C), lambda g, i, j: (g, i, j)),
+        out_shape=jax.ShapeDtypeStruct((p, qp, capp), jnp.float32),
+        interpret=interpret,
+    )(
+        zq,
+        rq[..., None],
+        coords,
+        res[:, None, :],
+        valid[:, None, :].astype(jnp.int32),
+        scale[:, None, None],
+        res_scale[:, None, None],
+    )
+    return out[:, :q, :cap]
+
+
+# ---------------------------------------------------------------------------
+# Single-query (VPU) variant — the serving path: one query per grain panel.
+# ---------------------------------------------------------------------------
+
+
+def _scan_single_kernel(zq_ref, rq_ref, coords_ref, res_ref, valid_ref,
+                        scale_ref, res_scale_ref, out_ref):
+    """One (panel p, cap tile ci) cell; Q == 1 so the MXU would idle —
+    this is a pure VPU broadcast-subtract-square-reduce over the sublane
+    (k) axis, the TPU analogue of the paper's NEON lane loop.
+
+    zq_ref:     [k, 1] i32      coords_ref: [k, BLK_C] i16
+    rq_ref:     [1, 1] f32      res_ref:    [1, BLK_C] i32
+    valid_ref:  [1, BLK_C] i32  out_ref:    [1, BLK_C] f32
+    """
+    zq = zq_ref[...]                                    # [k, 1] i32
+    panel = coords_ref[...].astype(jnp.int32)           # [k, BLK_C]
+    diff = zq - panel                                   # broadcast over lanes
+    d_int = jnp.sum(diff * diff, axis=0, keepdims=True)  # [1, BLK_C] exact i32
+    scale = scale_ref[0, 0]
+    d = d_int.astype(jnp.float32) * (scale * scale)
+    d = d + res_ref[...].astype(jnp.float32) * res_scale_ref[0, 0]
+    d = d + rq_ref[0, 0]
+    keep = valid_ref[...] != 0
+    out_ref[...] = jnp.where(keep, d, jnp.float32(NEG_BIG))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def hntl_scan_single(zq, rq, coords, res, valid, scale, res_scale, *,
+                     interpret: bool = True):
+    """Single-query Block-SoA scan over P independent grain panels.
+
+    zq [P, k] i32, rq [P] f32, coords [P, k, cap] i16, res [P, cap] i32,
+    valid [P, cap] bool, scale/res_scale [P] f32.  Returns [P, cap] f32.
+    """
+    p, k = zq.shape
+    cap = coords.shape[2]
+    c_pad = -cap % BLK_C
+    if c_pad:
+        coords = jnp.pad(coords, ((0, 0), (0, 0), (0, c_pad)))
+        res = jnp.pad(res, ((0, 0), (0, c_pad)))
+        valid = jnp.pad(valid, ((0, 0), (0, c_pad)))
+    capp = cap + c_pad
+
+    grid = (p, capp // BLK_C)
+    out = pl.pallas_call(
+        _scan_single_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, k, 1), lambda g, j: (g, 0, 0)),
+            pl.BlockSpec((None, 1, 1), lambda g, j: (g, 0, 0)),
+            pl.BlockSpec((None, k, BLK_C), lambda g, j: (g, 0, j)),
+            pl.BlockSpec((None, 1, BLK_C), lambda g, j: (g, 0, j)),
+            pl.BlockSpec((None, 1, BLK_C), lambda g, j: (g, 0, j)),
+            pl.BlockSpec((None, 1, 1), lambda g, j: (g, 0, 0)),
+            pl.BlockSpec((None, 1, 1), lambda g, j: (g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, 1, BLK_C), lambda g, j: (g, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((p, 1, capp), jnp.float32),
+        interpret=interpret,
+    )(
+        zq[:, :, None],
+        rq[:, None, None],
+        coords,
+        res[:, None, :],
+        valid[:, None, :].astype(jnp.int32),
+        scale[:, None, None],
+        res_scale[:, None, None],
+    )
+    return out[:, 0, :cap]

@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_BIG = jnp.float32(3.0e38)
+
+
+def hntl_scan_ref(zq, rq, coords, res, valid, scale, res_scale):
+    """Oracle for kernels.hntl_scan.hntl_scan (batched-query form).
+
+    zq [P, Q, k] i32, rq [P, Q] f32, coords [P, k, cap] i16,
+    res [P, cap] i32, valid [P, cap] bool, scale/res_scale [P] f32.
+    Returns [P, Q, cap] f32.
+    """
+    c = coords.astype(jnp.int32)
+    diff = zq[:, :, :, None] - c[:, None, :, :]          # [P, Q, k, cap]
+    d_int = jnp.sum(diff * diff, axis=2)                 # [P, Q, cap]
+    d = d_int.astype(jnp.float32) * (scale * scale)[:, None, None]
+    d = d + res.astype(jnp.float32)[:, None, :] * res_scale[:, None, None]
+    d = d + rq[:, :, None]
+    return jnp.where(valid[:, None, :], d, NEG_BIG)
+
+
+def hntl_scan_single_ref(zq, rq, coords, res, valid, scale, res_scale):
+    """Oracle for the single-query (VPU) kernel variant.
+
+    zq [P, k] i32, rq [P] f32, coords [P, k, cap], res [P, cap],
+    valid [P, cap], scale/res_scale [P].  Returns [P, cap] f32.
+    """
+    out = hntl_scan_ref(zq[:, None, :], rq[:, None], coords, res, valid,
+                        scale, res_scale)
+    return out[:, 0, :]
+
+
+def topc_select_ref(dists, ids, c):
+    """Oracle for streaming top-C selection: smallest C distances.
+
+    dists [Q, M] f32, ids [Q, M] i32 -> (dists [Q, C], ids [Q, C]) sorted.
+    """
+    neg, pos = jax.lax.top_k(-dists, c)
+    return -neg, jnp.take_along_axis(ids, pos, axis=1)

@@ -1,0 +1,349 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod AOT dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces, with ZERO real allocation (ShapeDtypeStruct
+inputs, abstract params):
+  - compiled memory_analysis()  (bytes/device — proves the cell fits),
+  - compiled cost_analysis()    (HLO FLOPs / bytes for the roofline),
+  - collective bytes parsed from the optimized HLO text (all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute),
+  - the three roofline terms vs TPU v5e peaks.
+
+Results stream incrementally into results/dryrun/<cell>.json so an
+interrupted sweep resumes where it stopped.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --multi-pod     # 2x16x16
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+
+from ..configs import SHAPES, list_archs
+from ..distributed import sharding as shd
+from .mesh import make_production_mesh
+from .specs import build_cell, cell_in_shardings
+
+# TPU v5e peaks (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[^=]*=\s*\(?([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output bytes of every collective op in the optimized HLO."""
+    out = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        kind, dtype, dims = m.group(1), m.group(2), m.group(3)
+        nbytes = _DTYPE_BYTES.get(dtype, 4)
+        for d in dims.split(","):
+            if d:
+                nbytes *= int(d)
+        out[kind] = out.get(kind, 0) + nbytes
+        out["total"] = out.get("total", 0) + nbytes
+    return out
+
+
+def roofline(flops: float, hbm_bytes: float, coll_bytes: float,
+             n_chips: int) -> dict:
+    """All inputs are PER-DEVICE quantities (XLA cost analysis runs on the
+    SPMD-partitioned per-device module; validated against 6ND/chip), so the
+    per-step time bound of each term is quantity / per-chip peak.  The
+    spec's "HLO / (chips x peak)" form is equivalent with global HLO
+    quantities (= per-device x chips)."""
+    del n_chips
+    t_compute = flops / PEAK_FLOPS
+    t_memory = hbm_bytes / HBM_BW
+    t_coll = coll_bytes / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    terms["bottleneck"] = dom
+    total = max(t_compute, t_memory, t_coll)
+    terms["compute_fraction"] = t_compute / total if total > 0 else 0.0
+    return terms
+
+
+def _shrink_layers(cfg, n_layers: int):
+    import dataclasses
+    kw = {"n_layers": n_layers}
+    if cfg.n_enc_layers:
+        kw["n_enc_layers"] = max(1, n_layers)
+    return dataclasses.replace(cfg, **kw)
+
+
+def run_cell_extrapolated(arch: str, shape: str, *, out_dir: str,
+                          force: bool = False, variant: str = None,
+                          cfg_transform=None, serve_params: bool = False,
+                          multi_pod: bool = False) -> dict:
+    """Measurement via two-point layer extrapolation.
+
+    For fixed input shapes every HLO-level quantity (flops, bytes,
+    collective bytes) is affine in the layer count L: f(L) = base + per_l*L
+    (base = embeddings/logits/CE; per_l = one layer fwd+bwd incl. remat).
+    We compile UNROLLED at two small depths L1 < L2 (pattern-aligned),
+    solve for (base, per_l), and report at the real depth — identical
+    semantics to full unrolling at a tiny fraction of the compile cost
+    (validated against full-unroll cells; see EXPERIMENTS.md §Dry-run).
+    Peak memory comes from a scan-mode compile at the REAL depth (buffer
+    liveness is not affine in L).
+    """
+    from ..configs import get_config
+    cfg0 = get_config(arch)
+    if cfg_transform is not None:
+        cfg0 = cfg_transform(cfg0)
+    pat = len(cfg0.pattern)
+    l1, l2 = 2 * pat, 4 * pat
+    l_real = cfg0.n_layers
+
+    def tf(nl):
+        def f(cfg):
+            if cfg_transform is not None:
+                cfg = cfg_transform(cfg)
+            return _shrink_layers(cfg, nl)
+        return f
+
+    mesh_tag = "pod2" if multi_pod else "pod1"
+    cell_id = f"{arch}__{shape}__{mesh_tag}" + (f"__{variant}" if variant
+                                                else "")
+    path = os.path.join(out_dir, cell_id + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            cached = json.load(f)
+        if cached.get("status") == "ok":
+            print(f"[dryrun] {cell_id}: cached ok")
+            return cached
+
+    sub = os.path.join(out_dir, "_extrap")
+    r1 = run_cell(arch, shape, multi_pod=multi_pod, out_dir=sub, force=True,
+                  measurement=True, variant=(variant or "") + f"L{l1}",
+                  cfg_transform=tf(l1), serve_params=serve_params)
+    r2 = run_cell(arch, shape, multi_pod=multi_pod, out_dir=sub, force=True,
+                  measurement=True, variant=(variant or "") + f"L{l2}",
+                  cfg_transform=tf(l2), serve_params=serve_params)
+    rp = run_cell(arch, shape, multi_pod=multi_pod, out_dir=sub, force=True,
+                  measurement=False, variant=(variant or "") + "Lfull-scan",
+                  cfg_transform=cfg_transform, serve_params=serve_params)
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_tag, "variant": variant,
+           "measurement": "extrapolated", "extrap_depths": [l1, l2],
+           "status": "ok"}
+    if r1["status"] != "ok" or r2["status"] != "ok":
+        rec.update({"status": "error",
+                    "error": r1.get("error") or r2.get("error")})
+    else:
+        def lin(key, coll_kind=None):
+            v1 = r1[key] if coll_kind is None else \
+                r1[key].get(coll_kind, 0)
+            v2 = r2[key] if coll_kind is None else \
+                r2[key].get(coll_kind, 0)
+            per_l = (v2 - v1) / (l2 - l1)
+            return v1 + per_l * (l_real - l1)
+        flops = lin("flops")
+        hbm = lin("hbm_bytes")
+        coll = {k: lin("collective_bytes", k)
+                for k in set(list(r1["collective_bytes"]) +
+                             list(r2["collective_bytes"]))}
+        n_chips = r1["n_chips"]
+        rec.update({
+            "n_chips": n_chips,
+            "flops": flops,
+            "hbm_bytes": hbm,
+            "collective_bytes": coll,
+            "bytes_per_device": rp.get("bytes_per_device")
+            if rp["status"] == "ok" else None,
+            "roofline": roofline(flops, hbm, coll.get("total", 0.0),
+                                 n_chips),
+            "model_params": _full_cfg(arch, cfg_transform).param_count(),
+            "model_flops_per_device":
+                _model_flops(arch, shape, cfg_transform) / n_chips,
+        })
+        rec["useful_flops_ratio"] = (rec["model_flops_per_device"] / flops
+                                     if flops else None)
+        rec["compile_s"] = (r1.get("compile_s", 0) + r2.get("compile_s", 0)
+                            + rp.get("compile_s", 0))
+        print(f"[dryrun] {cell_id}: OK (extrapolated from L{l1},L{l2}) "
+              f"bottleneck={rec['roofline']['bottleneck']}")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def _full_cfg(arch, cfg_transform=None):
+    from ..configs import get_config
+    cfg = get_config(arch)
+    if cfg_transform is not None:
+        cfg = cfg_transform(cfg)
+    return cfg
+
+
+def _model_flops(arch, shape, cfg_transform=None):
+    cfg = _full_cfg(arch, cfg_transform)
+    sh_spec = SHAPES[shape]
+    n_active = cfg.active_param_count()
+    if sh_spec.kind == "train":
+        return 6 * n_active * sh_spec.seq_len * sh_spec.global_batch
+    if sh_spec.kind == "prefill":
+        return 2 * n_active * sh_spec.seq_len * sh_spec.global_batch
+    return 2 * n_active * sh_spec.global_batch
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool, out_dir: str,
+             force: bool = False, measurement: bool = None,
+             variant: str = None, cfg_transform=None,
+             serve_params: bool = False, donate_caches: bool = False,
+             mesh_override=None) -> dict:
+    """measurement=True lowers with every loop unrolled (slow compile,
+    loop-exact cost analysis) — the single-pod roofline mode.  The
+    multi-pod pass defaults to scan-mode lowering: it proves the pod-axis
+    sharding compiles (per spec the roofline table is single-pod only)."""
+    if measurement is None:
+        measurement = not multi_pod
+    mesh_tag = "pod2" if multi_pod else "pod1"
+    cell_id = f"{arch}__{shape}__{mesh_tag}"
+    if variant:
+        cell_id += f"__{variant}"
+    path = os.path.join(out_dir, cell_id + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            cached = json.load(f)
+        if cached.get("status") == "ok":
+            print(f"[dryrun] {cell_id}: cached ok")
+            return cached
+
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_tag,
+           "variant": variant, "measurement": bool(measurement),
+           "status": "running"}
+    t0 = time.time()
+    try:
+        if mesh_override is not None:   # same chip count, different shape
+            import math
+            n = math.prod(mesh_override)
+            mesh = jax.make_mesh(mesh_override, ("data", "model"),
+                                 devices=jax.devices()[:n])
+        else:
+            mesh = make_production_mesh(multi_pod=multi_pod)
+        n_chips = mesh.devices.size
+        rules = shd.default_rules(
+            mesh, seq_sharded=(shape in ("prefill_32k", "long_500k")),
+            serve_params=serve_params)
+        sh = SHAPES[shape]
+        step_fn, inputs, cfg = build_cell(arch, shape, cfg_transform)
+        in_sh = cell_in_shardings(inputs, cfg, rules, sh.kind,
+                                  sh.global_batch)
+        from ..models import lowering as lw
+        import contextlib
+        # measurement-grade lowering: every structural loop unrolled so
+        # cost_analysis counts real trip counts (XLA counts while bodies
+        # once — verified; see EXPERIMENTS.md §Dry-run methodology).
+        ctx = lw.unrolled(attn_chunks=8, wkv_chunks=8) if measurement \
+            else contextlib.nullcontext()
+        donate = ()
+        if donate_caches and SHAPES[shape].kind in ("decode", "long_decode"):
+            donate = (2,)               # (params, token, caches, pos)
+        with mesh, shd.use_rules(rules), ctx:
+            jitted = jax.jit(step_fn, in_shardings=in_sh,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*inputs)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+
+        flops = float(cost.get("flops", 0.0))
+        hbm_bytes = float(cost.get("bytes accessed", 0.0))
+        sh_spec = SHAPES[shape]
+        n_active = cfg.active_param_count()
+        if sh_spec.kind == "train":
+            model_flops = 6 * n_active * sh_spec.seq_len * sh_spec.global_batch
+        elif sh_spec.kind == "prefill":
+            model_flops = 2 * n_active * sh_spec.seq_len * sh_spec.global_batch
+        else:  # decode: one token per sequence
+            model_flops = 2 * n_active * sh_spec.global_batch
+        rec.update({
+            "status": "ok",
+            "model_flops_per_device": model_flops / n_chips,
+            "useful_flops_ratio": (model_flops / n_chips) / flops
+            if flops else None,
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "n_chips": int(n_chips),
+            "flops": flops,
+            "hbm_bytes": hbm_bytes,
+            "collective_bytes": coll,
+            "bytes_per_device": {
+                "argument": getattr(mem, "argument_size_in_bytes", None),
+                "output": getattr(mem, "output_size_in_bytes", None),
+                "temp": getattr(mem, "temp_size_in_bytes", None),
+                "peak": getattr(mem, "peak_memory_in_bytes", None),
+            },
+            "roofline": roofline(flops, hbm_bytes,
+                                 coll.get("total", 0.0), n_chips),
+            "model_params": cfg.param_count(),
+            "model_params_active": cfg.active_param_count(),
+        })
+        print(f"[dryrun] {cell_id}: OK lower {t_lower:.0f}s "
+              f"compile {t_compile:.0f}s "
+              f"bottleneck={rec['roofline']['bottleneck']}")
+    except Exception as e:                                   # noqa: BLE001
+        rec.update({"status": "error", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-4000:]})
+        print(f"[dryrun] {cell_id}: FAIL {type(e).__name__}: {e}")
+    rec["wall_s"] = round(time.time() - t0, 1)
+    os.makedirs(out_dir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                results.append(run_cell(arch, shape, multi_pod=mp,
+                                        out_dir=args.out, force=args.force))
+    n_ok = sum(r["status"] == "ok" for r in results)
+    print(f"\n[dryrun] {n_ok}/{len(results)} cells ok")
+    return 0 if n_ok == len(results) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,327 @@
+"""Abstract input/state specs + step builders for every (arch x shape) cell.
+
+``input_specs(arch, shape)`` returns ShapeDtypeStruct stand-ins (weak-type
+correct, shardable, zero allocation) for every input of the lowered step:
+  train cells   -> (TrainState, {"tokens","labels",...})
+  prefill cells -> (params, tokens/frames, ...)
+  decode cells  -> (params, token, caches, pos)
+
+``step_fn(arch, shape)`` returns the jit-able python callable the dry-run
+lowers, and ``shardings(...)`` the matching in_shardings pytrees.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import get_config, get_shape
+from ..distributed import sharding as shd
+from ..models import Model, get_model
+from ..models import encdec as encdec_mod
+from ..models import hntl_attention as H
+from ..models import transformer as T
+from ..models.config import ModelConfig
+from ..optim.adamw import AdamW, warmup_cosine
+from ..train.step import TrainState, make_train_step
+
+SDS = jax.ShapeDtypeStruct
+
+# Whisper: the assigned seq axis is the *encoder memory* (frames); the
+# decoder target length is the model's max_target_len (448).
+WHISPER_DEC_LEN = 448
+VLM_PATCHES = 1024
+
+
+def make_optimizer(total_steps: int = 10_000) -> AdamW:
+    return AdamW(lr=warmup_cosine(3e-4, 200, total_steps))
+
+
+def long_decode_cfg(cfg: ModelConfig) -> ModelConfig:
+    """Full-config retrieval geometry for the 500k cell: grain = 4096
+    tokens, tail = one grain, pool 128, nprobe 8."""
+    return dataclasses.replace(cfg, kv_cap=4096, kv_tail=4096, kv_kt=16,
+                               kv_nprobe=8, kv_pool=128)
+
+
+# ---------------------------------------------------------------------------
+# Abstract builders (eval_shape — no allocation)
+# ---------------------------------------------------------------------------
+
+
+def abstract_params(model: Model):
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def abstract_state(model: Model, optimizer: AdamW):
+    def mk():
+        params = model.init(jax.random.PRNGKey(0))
+        return TrainState(params=params, opt_state=optimizer.init(params),
+                          step=jnp.zeros((), jnp.int32))
+    return jax.eval_shape(mk)
+
+
+def train_batch_specs(cfg: ModelConfig, batch: int, seq: int):
+    if cfg.family == "encdec":
+        return {"frames": SDS((batch, seq, cfg.d_model), jnp.float32),
+                "tokens": SDS((batch, WHISPER_DEC_LEN), jnp.int32),
+                "labels": SDS((batch, WHISPER_DEC_LEN), jnp.int32)}
+    b = {"tokens": SDS((batch, seq), jnp.int32),
+         "labels": SDS((batch, seq), jnp.int32)}
+    if cfg.family == "vlm":
+        b["positions"] = SDS((3, batch, seq), jnp.int32)
+        b["patch_embeds"] = SDS((batch, VLM_PATCHES, cfg.d_model),
+                                jnp.bfloat16)
+    return b
+
+
+def _linear_cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: T.init_cache(cfg, batch, max_len))
+
+
+def _retrieval_cache_specs(cfg: ModelConfig, batch: int, seq: int):
+    """Caches for long_500k: KVIndex on global-attn layers, ring/state else."""
+    sealed = seq - cfg.kv_tail
+    assert sealed % cfg.kv_cap == 0, (sealed, cfg.kv_cap)
+
+    def layer_cache(spec):
+        if spec.kind == "attn" and spec.window is None:
+            return {"mixer": H.kv_index_specs(cfg, batch, sealed,
+                                              cfg.compute_dtype), "ffn": ()}
+        return jax.eval_shape(
+            lambda: T._layer_cache_init(spec, cfg, batch, seq,
+                                        cfg.compute_dtype))
+
+    group = {f"l{i}": layer_cache(s) for i, s in enumerate(cfg.pattern)}
+    def stack(x):
+        return SDS((cfg.n_groups,) + x.shape, x.dtype)
+    stacked = jax.tree_util.tree_map(stack, group) if cfg.n_groups else {}
+    tail = tuple(layer_cache(s) for s in cfg.tail_pattern)
+    return {"groups": stacked, "tail": tail}
+
+
+# ---------------------------------------------------------------------------
+# Step functions per cell kind
+# ---------------------------------------------------------------------------
+
+
+def build_cell(arch: str, shape_name: str, cfg_transform=None):
+    """Returns (step_fn, example_inputs (abstract), cfg) for one cell.
+
+    step_fn(*inputs) is what the dry-run lowers; inputs are SDS pytrees.
+    cfg_transform: optional ModelConfig -> ModelConfig hook (perf variants).
+    """
+    cfg = get_config(arch)
+    if cfg_transform is not None:
+        cfg = cfg_transform(cfg)
+    sh = get_shape(shape_name)
+    model = get_model(cfg)
+    b, s = sh.global_batch, sh.seq_len
+
+    if sh.kind == "train":
+        opt = make_optimizer()
+        step = make_train_step(model, opt, microbatches=1)
+        state = abstract_state(model, opt)
+        batch = train_batch_specs(cfg, b, s)
+        return step, (state, batch), cfg
+
+    if cfg.family == "encdec":
+        return _build_encdec_serve_cell(model, cfg, sh)
+
+    params = abstract_params(model)
+    if sh.kind == "prefill":
+        def prefill_step(params, tokens, positions=None):
+            return model.prefill(params, tokens, positions=positions,
+                                 max_len=s)
+        tokens = SDS((b, s), jnp.int32)
+        if cfg.mrope_sections is not None:
+            return (prefill_step, (params, tokens, SDS((3, b, s), jnp.int32)),
+                    cfg)
+        return prefill_step, (params, tokens), cfg
+
+    if sh.kind == "decode":
+        caches = _linear_cache_specs(cfg, b, s)
+        def decode(params, token, caches, pos):
+            return model.decode_step(params, token, caches, pos)
+        return decode, (params, SDS((b,), jnp.int32), caches,
+                        SDS((b,), jnp.int32)), cfg
+
+    if sh.kind == "long_decode":
+        if cfg.is_attention_free or cfg.family in ("ssm", "hybrid"):
+            # natively sub-quadratic: recurrent state + ring caches; the
+            # cache capacity is window-bounded, not seq-bounded.
+            caches = _linear_cache_specs(cfg, b, s if not cfg.pattern else
+                                         max([sp.window or 0
+                                              for sp in cfg.pattern] + [1024]))
+            def decode(params, token, caches, pos):
+                return model.decode_step(params, token, caches, pos)
+            return decode, (params, SDS((b,), jnp.int32), caches,
+                            SDS((b,), jnp.int32)), cfg
+        lcfg = long_decode_cfg(cfg)
+        lmodel = get_model(lcfg)
+        caches = _retrieval_cache_specs(lcfg, b, s)
+        def decode(params, token, caches, pos):
+            return lmodel.decode_step(params, token, caches, pos)
+        return decode, (params, SDS((b,), jnp.int32), caches,
+                        SDS((b,), jnp.int32)), lcfg
+
+    raise ValueError(sh.kind)
+
+
+def _build_encdec_serve_cell(model: Model, cfg: ModelConfig, sh):
+    b, s = sh.global_batch, sh.seq_len
+    params = abstract_params(model)
+    if sh.kind == "prefill":
+        def enc_step(params, frames):
+            memory = model.encode(params, frames)
+            return encdec_mod.build_cross_cache(params, cfg, memory)
+        return enc_step, (params, SDS((b, s, cfg.d_model), jnp.float32)), cfg
+
+    if sh.kind == "decode":
+        cross = {"k": SDS((cfg.n_layers, b, s, cfg.n_heads, cfg.head_dim),
+                          cfg.compute_dtype),
+                 "v": SDS((cfg.n_layers, b, s, cfg.n_heads, cfg.head_dim),
+                          cfg.compute_dtype)}
+        self_c = jax.eval_shape(lambda: encdec_mod.init_self_cache(cfg, b))
+        def dec_step(params, token, self_cache, cross_cache, pos):
+            return encdec_mod.decode_step(params, cfg, token, self_cache,
+                                          cross_cache, pos)
+        return dec_step, (params, SDS((b,), jnp.int32), self_c, cross,
+                          SDS((b,), jnp.int32)), cfg
+
+    if sh.kind == "long_decode":
+        lcfg = long_decode_cfg(cfg)
+        # encoder memory fully sealed (it is static): no tail needed, but
+        # kv_index_specs carries a (kv_tail) ring we keep for uniformity.
+        idx = H.kv_index_specs(lcfg, b, s - lcfg.kv_tail, lcfg.compute_dtype)
+        cross = jax.tree_util.tree_map(
+            lambda x: SDS((cfg.n_layers,) + x.shape, x.dtype), idx)
+        self_c = jax.eval_shape(lambda: encdec_mod.init_self_cache(cfg, b))
+        def dec_step(params, token, self_cache, cross_idx, pos):
+            return encdec_mod.decode_step_retrieval(
+                params, lcfg, token, self_cache, cross_idx, pos)
+        return dec_step, (params, SDS((b,), jnp.int32), self_c, cross,
+                          SDS((b,), jnp.int32)), lcfg
+    raise ValueError(sh.kind)
+
+
+# ---------------------------------------------------------------------------
+# Shardings for the cell inputs
+# ---------------------------------------------------------------------------
+
+_CACHE_LEAF_RULES = {
+    # name -> ordered logical axes attempted per trailing dims
+    "k": ("cache_batch", "cache_seq", "kv_heads_cache", "head_dim_cache"),
+    "v": ("cache_batch", "cache_seq", "kv_heads_cache", "head_dim_cache"),
+    "centroids": ("cache_batch", "kv_heads_cache", "cache_grains", None),
+    "basis": ("cache_batch", "kv_heads_cache", "cache_grains", None, None),
+    "coords": ("cache_batch", "kv_heads_cache", "cache_grains", None, None),
+    "res": ("cache_batch", "kv_heads_cache", "cache_grains", None),
+    "scale": ("cache_batch", "kv_heads_cache", "cache_grains"),
+    "res_scale": ("cache_batch", "kv_heads_cache", "cache_grains"),
+    "k_raw": ("cache_batch", "cache_seq", "kv_heads_cache", "head_dim_cache"),
+    "v_raw": ("cache_batch", "cache_seq", "kv_heads_cache", "head_dim_cache"),
+    "tail_k": ("cache_batch", None, "kv_heads_cache", "head_dim_cache"),
+    "tail_v": ("cache_batch", None, "kv_heads_cache", "head_dim_cache"),
+    "h": ("cache_batch", "rnn"),
+    "conv": ("cache_batch", None, "rnn"),
+    "s": ("cache_batch", "act_heads", None, None),
+    "shift": ("cache_batch", None),
+}
+
+
+def cache_rules(rules: shd.ShardingRules, batch: int) -> shd.ShardingRules:
+    """Extend activation rules with cache-leaf logical axes.
+
+    batch==1 (long_500k): batch unshardable -> the grain/seq axes take the
+    data axis; batch>1: batch takes data, seq/grains replicate.
+    """
+    data_axes = rules.rules["batch"]
+    extra = {
+        "cache_batch": data_axes if batch > 1 else None,
+        "cache_seq": None if batch > 1 else data_axes,
+        "cache_grains": None if batch > 1 else data_axes,
+        "kv_heads_cache": ("model",),
+        "head_dim_cache": None,   # fallback only (see below)
+    }
+    return shd.ShardingRules(mesh=rules.mesh, rules={**rules.rules, **extra})
+
+
+def cache_leaf_spec(path, leaf, crules: shd.ShardingRules):
+    keys = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+    name = keys[-1]
+    axes = _CACHE_LEAF_RULES.get(name)
+    if axes is None:
+        return P()
+    if len(axes) < len(leaf.shape):     # leading group-stack dims
+        axes = (None,) * (len(leaf.shape) - len(axes)) + tuple(axes)
+    axes = axes[:len(leaf.shape)]
+    spec = list(crules.spec_for_shape(leaf.shape, axes))
+    # fallback: if kv heads did not shard (indivisible), shard head_dim
+    if name in ("k", "v", "k_raw", "v_raw", "tail_k", "tail_v") \
+            and len(spec) >= 4 and spec[-2] is None \
+            and leaf.shape[-1] % crules.mesh.shape["model"] == 0 \
+            and "model" not in [a for a in spec if a]:
+        spec[-1] = "model"
+    return P(*spec)
+
+
+def cell_in_shardings(inputs, cfg, rules: shd.ShardingRules, kind: str,
+                      batch: int):
+    """in_shardings pytree matching build_cell's inputs."""
+    mesh = rules.mesh
+    ns = lambda spec: NamedSharding(mesh, spec)
+    crules = cache_rules(rules, batch)
+    data_axes = rules.rules["batch"]
+
+    def batch_leaf(path, leaf):
+        keys = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+        name = keys[-1] if keys else ""
+        if name == "positions" and len(leaf.shape) == 3:
+            return ns(rules.spec_for_shape(leaf.shape,
+                                           (None, "batch", "seq")))
+        ax = ("batch",) + (None,) * (len(leaf.shape) - 1)
+        return ns(rules.spec_for_shape(leaf.shape, ax))
+
+    def params_shardings(tree):
+        return jax.tree_util.tree_map(
+            lambda s: ns(s), shd.infer_param_specs(tree, rules),
+            is_leaf=lambda x: isinstance(x, P))
+
+    def cache_shardings(tree):
+        return jax.tree_util.tree_map_with_path(
+            lambda p, l: ns(cache_leaf_spec(p, l, crules)), tree)
+
+    if kind == "train":
+        state, batch_specs = inputs
+        st_sh = TrainState(
+            params=params_shardings(state.params),
+            opt_state={
+                "m": params_shardings(state.opt_state["m"]),
+                "v": params_shardings(state.opt_state["v"]),
+                "count": ns(P())},
+            step=ns(P()))
+        return (st_sh, jax.tree_util.tree_map_with_path(batch_leaf,
+                                                        batch_specs))
+
+    if kind == "prefill":
+        params = inputs[0]
+        rest = tuple(jax.tree_util.tree_map_with_path(batch_leaf, x)
+                     for x in inputs[1:])
+        return (params_shardings(params),) + rest
+
+    # decode / long_decode: (params, token, caches..., pos) — caches are the
+    # dict/tuple-structured entries; scalars per-seq shard on batch.
+    out = [params_shardings(inputs[0])]
+    for x in inputs[1:]:
+        if isinstance(x, SDS) and x.ndim <= 1:
+            out.append(ns(P(data_axes if (x.ndim == 1 and batch > 1
+                                          and x.shape[0] % rules.axis_size(
+                                              data_axes) == 0) else None)))
+        else:
+            out.append(cache_shardings(x))
+    return tuple(out)

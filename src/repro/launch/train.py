@@ -1,0 +1,71 @@
+"""Training launcher: mesh-aware pjit training with fault tolerance.
+
+Examples (CPU container: use --host-mesh 1,1 and a smoke arch):
+  PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b --smoke \
+      --steps 50 --batch 8 --seq 128
+On a real cluster this same entry point runs under
+``jax.distributed.initialize()`` with the production mesh.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from ..configs import get_config, get_smoke_config
+from ..data.tokens import MarkovLM
+from ..distributed import sharding as shd
+from ..models import get_model
+from ..optim.adamw import AdamW, warmup_cosine
+from ..train.trainer import Trainer, TrainerConfig
+from .mesh import make_host_mesh
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--host-mesh", default="1,1",
+                    help="data,model axis sizes over local devices")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = get_model(cfg)
+    optimizer = AdamW(lr=warmup_cosine(args.lr, min(50, args.steps // 10 + 1),
+                                       args.steps))
+    data = MarkovLM(vocab=cfg.vocab, seed=args.seed)
+
+    dm, tm = (int(x) for x in args.host_mesh.split(","))
+    mesh = make_host_mesh(dm, tm)
+    rules = shd.default_rules(mesh)
+
+    def data_fn(step):
+        b = data.batch(step, args.batch, args.seq)
+        return {k: jax.numpy.asarray(v) for k, v in b.items()}
+
+    tcfg = TrainerConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                         ckpt_dir=args.ckpt_dir,
+                         microbatches=args.microbatches)
+    with mesh, shd.use_rules(rules):
+        trainer = Trainer(model, optimizer, data_fn, tcfg,
+                          rng=jax.random.PRNGKey(args.seed))
+        state = trainer.run()
+    losses = [h["loss"] for h in trainer.history]
+    if losses:
+        print(f"[train] first loss {losses[0]:.4f} -> last {losses[-1]:.4f} "
+              f"(uniform = {np.log(cfg.vocab):.4f})")
+    return state
+
+
+if __name__ == "__main__":
+    main()

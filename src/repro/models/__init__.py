@@ -1,0 +1,54 @@
+"""Model zoo: a uniform functional API over all assigned architectures.
+
+``Model`` bundles the pure functions of one architecture; everything is
+jit/pjit-friendly (cfg is static, params/batches are pytrees).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from . import encdec, transformer
+from .config import LayerSpec, ModelConfig
+
+__all__ = ["LayerSpec", "ModelConfig", "Model", "get_model"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ---- training ----------------------------------------------------
+    def init(self, rng):
+        if self.cfg.family == "encdec":
+            return encdec.init_params(rng, self.cfg)
+        return transformer.init_params(rng, self.cfg)
+
+    def loss(self, params, batch):
+        if self.cfg.family == "encdec":
+            return encdec.loss_fn(params, self.cfg, batch)
+        return transformer.loss_fn(params, self.cfg, batch)
+
+    # ---- serving -------------------------------------------------------
+    def prefill(self, params, tokens, **kw):
+        assert self.cfg.family != "encdec"
+        return transformer.prefill(params, self.cfg, tokens, **kw)
+
+    def decode_step(self, params, token, caches, pos):
+        assert self.cfg.family != "encdec"
+        return transformer.decode_step(params, self.cfg, token, caches, pos)
+
+    def init_cache(self, batch: int, max_len: int):
+        assert self.cfg.family != "encdec"
+        return transformer.init_cache(self.cfg, batch, max_len)
+
+    # ---- enc-dec serving ----------------------------------------------
+    def encode(self, params, frames):
+        return encdec.encode(params, self.cfg, frames)
+
+    def encdec_decode_step(self, params, token, self_cache, cross_cache, pos):
+        return encdec.decode_step(params, self.cfg, token, self_cache,
+                                  cross_cache, pos)
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

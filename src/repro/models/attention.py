@@ -1,0 +1,137 @@
+"""Attention: chunked (flash-style) training/prefill path + decode path.
+
+The chunked path never materializes the full [S, T] score matrix: it scans
+over KV chunks with an online-softmax accumulator, bounding activation memory
+at seq 32k/500k.  Supports GQA, causal masks, sliding windows (gemma2 /
+recurrentgemma local layers) and gemma2 attn-logit soft-capping.
+
+All einsums accumulate in f32 (``preferred_element_type``); outputs return to
+the compute dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .common import softcap
+
+NEG_INF = -1.0e30
+
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: int | None):
+    """Additive mask bias [..., S_q, S_k] from position tensors."""
+    ok = jnp.ones(q_pos.shape[:-1] + (q_pos.shape[-1], k_pos.shape[-1]), bool)
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    if causal:
+        ok &= kp <= qp
+    if window is not None:
+        ok &= kp > qp - window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def attention(q, k, v, *, causal: bool = True, window: int | None = None,
+              logit_cap: float | None = None, q_offset=0,
+              kv_chunk: int = 1024, scale: float | None = None,
+              kv_valid_len=None, p_bf16: bool = False):
+    """Chunked multi-head attention.
+
+    q [B, S, Hq, hd]; k, v [B, T, Hkv, hd]; Hq % Hkv == 0 (GQA).
+    q_offset: absolute position of q[0] (prefill continuation / decode).
+    kv_valid_len: optional [B] number of valid kv positions (decode caches).
+    Returns [B, S, Hq, hd].
+    """
+    b, s, hq, hd = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    if scale is None:
+        scale = hd ** -0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(b, s, hkv, g, hd)
+
+    q_pos = q_offset + jnp.arange(s)
+
+    from .lowering import flags as _lflags
+    if _lflags().attn_chunks:                    # bound unrolled chunk count
+        kv_chunk = max(128, -(-t // _lflags().attn_chunks))
+    kv_chunk = min(kv_chunk, t)                  # no padding for short kv
+    n_chunks = max(1, -(-t // kv_chunk))
+    t_pad = n_chunks * kv_chunk - t
+    if t_pad:
+        k = jnp.pad(k, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, kv_chunk, hkv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, kv_chunk, hkv, hd).transpose(1, 0, 2, 3, 4)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        ci, k_i, v_i = inputs
+        k_pos = ci * kv_chunk + jnp.arange(kv_chunk)
+        # scores [B, S, Hkv, G, kv_chunk]
+        sc = jnp.einsum("bshgd,bthd->bshgt", qf, k_i.astype(jnp.float32))
+        if logit_cap is not None:
+            sc = softcap(sc, logit_cap)
+        bias = _mask_bias(q_pos, k_pos, causal, window)     # [S, kv_chunk]
+        if t_pad:                                # mask chunk padding slots
+            bias = bias + jnp.where(k_pos < t, 0.0, NEG_INF)[None, :]
+        sc = sc + bias[None, :, None, None, :]
+        if kv_valid_len is not None:
+            ok = k_pos[None, :] < kv_valid_len[:, None]     # [B, kv_chunk]
+            sc = sc + jnp.where(ok, 0.0, NEG_INF)[:, None, None, None, :]
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        if p_bf16:     # flash-attn convention: bf16 P, f32 accumulator
+            pv = jnp.einsum("bshgt,bthd->bshgd", p.astype(jnp.bfloat16),
+                            v_i, preferred_element_type=jnp.float32)
+        else:
+            pv = jnp.einsum("bshgt,bthd->bshgd", p, v_i.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, s, hkv, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, s, hkv, g), jnp.float32)
+    a0 = jnp.zeros((b, s, hkv, g, hd), jnp.float32)
+    from .lowering import flags
+    if flags().unroll_layers:        # measurement-grade lowering (dry-run)
+        carry = (m0, l0, a0)
+        for ci in range(n_chunks):
+            carry, _ = step(carry, (jnp.asarray(ci), kc[ci], vc[ci]))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(
+            step, (m0, l0, a0), (jnp.arange(n_chunks), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, s, hq, hd).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, q_pos, k_pos, *,
+                     window: int | None = None,
+                     logit_cap: float | None = None,
+                     scale: float | None = None):
+    """Single-token decode: q [B, 1, Hq, hd] against cache [B, T, Hkv, hd].
+
+    q_pos [B] i32 — absolute position of the query token.
+    k_pos [B, T] i32 — absolute position held by each cache slot (-1 = empty).
+    Works for both linear caches (k_pos = arange) and ring caches of windowed
+    layers (k_pos wraps; see transformer._ring_positions).
+    Single pass — scores are [B, Hq, T], small even at T = 500k.
+    """
+    b, _, hq, hd = q.shape
+    t, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    if scale is None:
+        scale = hd ** -0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(b, hkv, g, hd)
+    sc = jnp.einsum("bhgd,bthd->bhgt", qf, k_cache.astype(jnp.float32))
+    if logit_cap is not None:
+        sc = softcap(sc, logit_cap)
+    ok = (k_pos >= 0) & (k_pos <= q_pos[:, None])
+    if window is not None:
+        ok &= k_pos > (q_pos[:, None] - window)
+    sc = jnp.where(ok[:, None, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhgt,bthd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, hq, hd).astype(q.dtype)

@@ -1,0 +1,192 @@
+"""Shared model building blocks: norms, activations, RoPE variants, embeddings.
+
+Pure-JAX (no flax): parameters are nested dicts of jnp arrays; every module is
+an ``init(rng, ...) -> params`` plus an ``apply(params, x, ...) -> y`` pair.
+Compute dtype is bf16 with f32 where numerically load-bearing (norm stats,
+attention softmax, CE); parameter dtype is configured per run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.bfloat16):
+    """Truncated-normal fan-in init (LeCun-style), the LM-training default."""
+    fan_in = shape[in_axis]
+    std = 1.0 / np.sqrt(fan_in)
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape,
+                                              jnp.float32)).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.bfloat16):
+    """std = 1/sqrt(d): pairs with ``embed_scale`` (gemma) and keeps tied
+    unembedding logits O(1) at init."""
+    std = 1.0 / np.sqrt(shape[-1])
+    return (std * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(dim: int, dtype=jnp.bfloat16):
+    return {"scale": jnp.zeros((dim,), dtype)}  # gemma-style (1 + scale)
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm_init(dim: int, dtype=jnp.bfloat16):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def make_norm(kind: str):
+    if kind == "rms":
+        return rmsnorm_init, rmsnorm
+    if kind == "layer":
+        return layernorm_init, layernorm
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Activations / softcap
+# ---------------------------------------------------------------------------
+
+ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+def softcap(x, cap):
+    """gemma2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (full / partial / multimodal M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(rotary_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, rotary_dim, 2, dtype=jnp.float32)
+                            / rotary_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0,
+               rotary_dim: int | None = None,
+               mrope_sections: tuple | None = None) -> jax.Array:
+    """Rotate ``x [..., S, H, hd]`` by position-dependent phases.
+
+    positions: [B, S] int32, or [3, B, S] for M-RoPE (temporal, h, w streams).
+    rotary_dim: if < hd, only the leading dims rotate (stablelm partial RoPE).
+    mrope_sections: per-stream frequency-block sizes summing to rotary_dim//2
+      (qwen2-vl: different frequency bands take positions from different
+      streams).
+    """
+    hd = x.shape[-1]
+    rd = rotary_dim if rotary_dim is not None else hd
+    freqs = rope_freqs(rd, theta)                        # [rd//2]
+
+    if mrope_sections is not None:
+        assert positions.ndim == 3, "M-RoPE needs [3, B, S] positions"
+        # angle [B, S, rd//2]: each frequency block reads its own stream
+        ang_all = positions[..., None].astype(jnp.float32) * freqs  # [3,B,S,rd//2]
+        parts, start = [], 0
+        for i, sec in enumerate(mrope_sections):
+            parts.append(ang_all[i, :, :, start:start + sec])
+            start += sec
+        angle = jnp.concatenate(parts, axis=-1)          # [B, S, rd//2]
+    else:
+        angle = positions[..., None].astype(jnp.float32) * freqs  # [B, S, rd//2]
+
+    cos = jnp.cos(angle)[:, :, None, :]                  # [B, S, 1, rd//2]
+    sin = jnp.sin(angle)[:, :, None, :]
+    xr, x_pass = x[..., :rd], x[..., rd:]
+    x1, x2 = jnp.split(xr.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    if rd < hd:
+        out = jnp.concatenate([out, x_pass.astype(jnp.float32)], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, dim: int) -> np.ndarray:
+    """Whisper-style fixed sinusoidal table [n, dim] (f32 numpy, build-time)."""
+    log_timescale = np.log(10000.0) / (dim // 2 - 1)
+    inv = np.exp(-log_timescale * np.arange(dim // 2))
+    t = np.arange(n)[:, None] * inv[None, :]
+    return np.concatenate([np.sin(t), np.cos(t)], axis=1).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed(table: jax.Array, tokens: jax.Array, scale_by_dim: bool = False):
+    out = jnp.take(table, tokens, axis=0)
+    if scale_by_dim:
+        out = out * jnp.asarray(np.sqrt(table.shape[1]), out.dtype)
+    return out
+
+
+def unembed(table: jax.Array, x: jax.Array):
+    """Tied unembedding: logits = x @ table.T in f32 accumulation."""
+    return jnp.einsum("...d,vd->...v", x, table,
+                      preferred_element_type=jnp.float32)
+
+
+def scan_layers(body, init, xs):
+    """lax.scan over stacked layers — or an unrolled python loop under the
+    measurement-grade lowering mode (see models/lowering.py)."""
+    from .lowering import flags
+    if not flags().unroll_layers:
+        return jax.lax.scan(body, init, xs)
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    carry, ys = init, []
+    for i in range(n):
+        xi = jax.tree_util.tree_map(lambda a: a[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: jax.Array | None = None):
+    """Token-mean CE in f32; logits [..., V], labels [...] int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,257 @@
+"""Whisper-style encoder-decoder backbone (audio frontend is a stub).
+
+Per the assignment, ``input_specs()`` supplies precomputed frame embeddings
+[B, T, d] (the conv1/conv2 mel frontend is out of scope); the encoder adds
+sinusoidal positions and runs bidirectional self-attention.  The decoder is
+a standard pre-LN causal transformer with cross-attention over the encoder
+memory and learned positions.
+
+Serving interpretation of the decode shapes (DESIGN.md): for an enc-dec
+model, "one new token against a KV cache of seq_len" means *cross-attention
+over an encoder memory of seq_len frames* (the natural long-context axis for
+Whisper); the self cache stays at max_target_len.  ``long_500k`` therefore
+exercises the paper's Mode B directly: the encoder memory is HNTL-indexed
+and cross-attention retrieves top-C frames (models/hntl_attention.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import constrain
+from .attention import attention, decode_attention
+from .common import (cross_entropy, dense_init, embed, embed_init,
+                     layernorm, layernorm_init, scan_layers,
+                     sinusoidal_positions, unembed)
+from .config import ModelConfig
+from .ffn import mlp_apply, mlp_init
+
+
+def _attn_init(key, d, h, hd, dtype):
+    ks = jax.random.split(key, 4)
+    return {"wq": dense_init(ks[0], (d, h, hd), 0, dtype),
+            "wk": dense_init(ks[1], (d, h, hd), 0, dtype),
+            "wv": dense_init(ks[2], (d, h, hd), 0, dtype),
+            "wo": dense_init(ks[3], (h, hd, d), 0, dtype)}
+
+
+def _enc_layer_init(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": layernorm_init(cfg.d_model, dtype),
+            "attn": _attn_init(k1, cfg.d_model, cfg.n_heads, cfg.head_dim,
+                               dtype),
+            "ln2": layernorm_init(cfg.d_model, dtype),
+            "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, "gelu", dtype)}
+
+
+def _dec_layer_init(key, cfg: ModelConfig, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": layernorm_init(cfg.d_model, dtype),
+            "self_attn": _attn_init(k1, cfg.d_model, cfg.n_heads,
+                                    cfg.head_dim, dtype),
+            "ln_x": layernorm_init(cfg.d_model, dtype),
+            "cross_attn": _attn_init(k2, cfg.d_model, cfg.n_heads,
+                                     cfg.head_dim, dtype),
+            "ln2": layernorm_init(cfg.d_model, dtype),
+            "mlp": mlp_init(k3, cfg.d_model, cfg.d_ff, "gelu", dtype)}
+
+
+def init_params(key, cfg: ModelConfig):
+    dtype = cfg.compute_dtype
+    n = cfg.n_enc_layers + cfg.n_layers + 2
+    keys = jax.random.split(key, n)
+    enc_layers = [_enc_layer_init(keys[i], cfg, dtype)
+                  for i in range(cfg.n_enc_layers)]
+    dec_layers = [_dec_layer_init(keys[cfg.n_enc_layers + i], cfg, dtype)
+                  for i in range(cfg.n_layers)]
+    stack = lambda ls: jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ls)
+    return {
+        "enc": {"layers": stack(enc_layers),
+                "final_ln": layernorm_init(cfg.d_model, dtype)},
+        "dec": {"embedding": embed_init(keys[-2], (cfg.vocab, cfg.d_model),
+                                        dtype),
+                "pos_embedding": embed_init(
+                    keys[-1], (cfg.max_target_len, cfg.d_model), dtype),
+                "layers": stack(dec_layers),
+                "final_ln": layernorm_init(cfg.d_model, dtype)},
+    }
+
+
+def _mha(p, xq, xkv, *, causal, q_offset=0):
+    h, hd = p["wq"].shape[1], p["wq"].shape[2]
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", xkv, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", xkv, p["wv"])
+    q = constrain(q, "batch", "seq", "act_heads", None)
+    out = attention(q, k, v, causal=causal, q_offset=q_offset)
+    del h, hd
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames [B, T, d] precomputed embeddings -> memory [B, T, d]."""
+    t = frames.shape[1]
+    pos = jnp.asarray(sinusoidal_positions(t, cfg.d_model))
+    x = (frames.astype(cfg.compute_dtype)
+         + pos[None].astype(cfg.compute_dtype))
+    x = constrain(x, "batch", "seq", "act_embed")
+
+    def layer_fn(x, lp):
+        h = layernorm(lp["ln1"], x, cfg.norm_eps)
+        x = x + _mha(lp["attn"], h, h, causal=False)
+        h = layernorm(lp["ln2"], x, cfg.norm_eps)
+        x = x + mlp_apply(lp["mlp"], h, "gelu")
+        return constrain(x, "batch", "seq", "act_embed"), None
+
+    body = jax.checkpoint(layer_fn) if cfg.remat else layer_fn
+    x, _ = scan_layers(body, x, params["enc"]["layers"])
+    return layernorm(params["enc"]["final_ln"], x, cfg.norm_eps)
+
+
+def decode(params, cfg: ModelConfig, tokens, memory, q_offset=0):
+    """Teacher-forced decoder forward.  tokens [B, S] -> hidden [B, S, d]."""
+    b, s = tokens.shape
+    x = embed(params["dec"]["embedding"], tokens)
+    pos_tab = params["dec"]["pos_embedding"]
+    x = x + jax.lax.dynamic_slice_in_dim(pos_tab, q_offset, s, 0)[None]
+    x = constrain(x, "batch", "seq", "act_embed")
+
+    def layer_fn(x, lp):
+        h = layernorm(lp["ln1"], x, cfg.norm_eps)
+        x = x + _mha(lp["self_attn"], h, h, causal=True, q_offset=q_offset)
+        h = layernorm(lp["ln_x"], x, cfg.norm_eps)
+        x = x + _mha(lp["cross_attn"], h, memory, causal=False)
+        h = layernorm(lp["ln2"], x, cfg.norm_eps)
+        x = x + mlp_apply(lp["mlp"], h, "gelu")
+        return constrain(x, "batch", "seq", "act_embed"), None
+
+    body = jax.checkpoint(layer_fn) if cfg.remat else layer_fn
+    x, _ = scan_layers(body, x, params["dec"]["layers"])
+    return layernorm(params["dec"]["final_ln"], x, cfg.norm_eps)
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    """batch: {"frames" [B,T,d], "tokens" [B,S], "labels" [B,S]}."""
+    memory = encode(params, cfg, batch["frames"])
+    hidden = decode(params, cfg, batch["tokens"], memory)
+    logits = unembed(params["dec"]["embedding"], hidden)
+    logits = constrain(logits, "batch", "seq", "act_vocab")
+    mask = batch["labels"] >= 0
+    ce = cross_entropy(logits, jnp.maximum(batch["labels"], 0), mask)
+    return ce, {"ce": ce, "aux": 0.0}
+
+
+# ---------------------------------------------------------------------------
+# Serving: cross K/V precomputed once; self cache is a small linear cache.
+# ---------------------------------------------------------------------------
+
+
+def build_cross_cache(params, cfg: ModelConfig, memory):
+    """Per-layer cross-attention K/V [L, B, T, H, hd] from encoder memory."""
+    def layer_kv(lp):
+        k = jnp.einsum("btd,dhk->bthk", memory, lp["cross_attn"]["wk"])
+        v = jnp.einsum("btd,dhk->bthk", memory, lp["cross_attn"]["wv"])
+        return {"k": k, "v": v}
+    return jax.vmap(layer_kv)(params["dec"]["layers"])
+
+
+def init_self_cache(cfg: ModelConfig, batch: int):
+    t = cfg.max_target_len
+    z = jnp.zeros((cfg.n_layers, batch, t, cfg.n_heads, cfg.head_dim),
+                  cfg.compute_dtype)
+    return {"k": z, "v": z}
+
+
+def decode_step(params, cfg: ModelConfig, token, self_cache, cross_cache,
+                pos):
+    """One decode token.  token [B], pos [B]; cross_cache from
+    ``build_cross_cache`` (or an HNTL retrieval cache, see hntl_attention).
+    Returns (logits [B, V], new self_cache)."""
+    b = token.shape[0]
+    x = embed(params["dec"]["embedding"], token[:, None])
+    x = x + params["dec"]["pos_embedding"][pos][:, None, :]
+
+    def layer_fn(x, inp):
+        lp, sc, cc = inp
+        h = layernorm(lp["ln1"], x, cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["self_attn"]["wq"])
+        k_new = jnp.einsum("bsd,dhk->bshk", h, lp["self_attn"]["wk"])
+        v_new = jnp.einsum("bsd,dhk->bshk", h, lp["self_attn"]["wv"])
+        bidx = jnp.arange(b)
+        kc = sc["k"].at[bidx, pos].set(k_new[:, 0])
+        vc = sc["v"].at[bidx, pos].set(v_new[:, 0])
+        t_cache = kc.shape[1]
+        k_pos = jnp.broadcast_to(jnp.arange(t_cache)[None], (b, t_cache))
+        out = decode_attention(q, kc, vc, pos, k_pos)
+        x = x + jnp.einsum("bshk,hkd->bsd", out, lp["self_attn"]["wo"])
+
+        h = layernorm(lp["ln_x"], x, cfg.norm_eps)
+        qx = jnp.einsum("bsd,dhk->bshk", h, lp["cross_attn"]["wq"])
+        t_mem = cc["k"].shape[1]
+        mem_pos = jnp.broadcast_to(jnp.arange(t_mem)[None], (b, t_mem))
+        ox = decode_attention(qx, cc["k"], cc["v"],
+                              jnp.full((b,), t_mem, jnp.int32), mem_pos)
+        x = x + jnp.einsum("bshk,hkd->bsd", ox, lp["cross_attn"]["wo"])
+
+        h = layernorm(lp["ln2"], x, cfg.norm_eps)
+        x = x + mlp_apply(lp["mlp"], h, "gelu")
+        return x, {"k": kc, "v": vc}
+
+    x, new_cache = scan_layers(
+        layer_fn, x,
+        (params["dec"]["layers"], self_cache, cross_cache))
+    x = layernorm(params["dec"]["final_ln"], x, cfg.norm_eps)
+    logits = unembed(params["dec"]["embedding"], x)[:, 0, :]
+    return logits, new_cache
+
+
+def build_cross_index(params, cfg: ModelConfig, memory):
+    """Seal the encoder memory into per-layer HNTL-KV indexes (Mode B for
+    cross-attention).  memory [B, T, d]; T must divide by cfg.kv_cap."""
+    from .hntl_attention import build_kv_index
+
+    def layer_idx(lp):
+        k = jnp.einsum("btd,dhk->bthk", memory, lp["cross_attn"]["wk"])
+        v = jnp.einsum("btd,dhk->bthk", memory, lp["cross_attn"]["wv"])
+        return build_kv_index(k, v, cfg)
+    return jax.vmap(layer_idx)(params["dec"]["layers"])
+
+
+def decode_step_retrieval(params, cfg: ModelConfig, token, self_cache,
+                          cross_idx, pos):
+    """decode_step with HNTL-retrieval cross-attention over a sealed
+    encoder memory (the long_500k path).  cross_idx: per-layer KVIndex
+    (leaves stacked on a leading n_layers axis)."""
+    from .hntl_attention import retrieval_cross_attention
+    b = token.shape[0]
+    x = embed(params["dec"]["embedding"], token[:, None])
+    x = x + params["dec"]["pos_embedding"][pos][:, None, :]
+
+    def layer_fn(x, inp):
+        lp, sc, ci = inp
+        h = layernorm(lp["ln1"], x, cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["self_attn"]["wq"])
+        k_new = jnp.einsum("bsd,dhk->bshk", h, lp["self_attn"]["wk"])
+        v_new = jnp.einsum("bsd,dhk->bshk", h, lp["self_attn"]["wv"])
+        bidx = jnp.arange(b)
+        kc = sc["k"].at[bidx, pos].set(k_new[:, 0])
+        vc = sc["v"].at[bidx, pos].set(v_new[:, 0])
+        t_cache = kc.shape[1]
+        k_pos = jnp.broadcast_to(jnp.arange(t_cache)[None], (b, t_cache))
+        out = decode_attention(q, kc, vc, pos, k_pos)
+        x = x + jnp.einsum("bshk,hkd->bsd", out, lp["self_attn"]["wo"])
+
+        h = layernorm(lp["ln_x"], x, cfg.norm_eps)
+        qx = jnp.einsum("bsd,dhk->bshk", h, lp["cross_attn"]["wq"])
+        ox = retrieval_cross_attention(qx, ci, cfg)
+        x = x + jnp.einsum("bshk,hkd->bsd", ox, lp["cross_attn"]["wo"])
+
+        h = layernorm(lp["ln2"], x, cfg.norm_eps)
+        x = x + mlp_apply(lp["mlp"], h, "gelu")
+        return x, {"k": kc, "v": vc}
+
+    x, new_cache = scan_layers(
+        layer_fn, x, (params["dec"]["layers"], self_cache, cross_idx))
+    x = layernorm(params["dec"]["final_ln"], x, cfg.norm_eps)
+    logits = unembed(params["dec"]["embedding"], x)[:, 0, :]
+    return logits, new_cache

@@ -1,0 +1,128 @@
+"""Channel mixers: dense gated MLPs and fixed-capacity top-k MoE.
+
+The MoE dispatch is the standard capacity-bounded scheme (jit-friendly and
+SPMD-partitionable): tokens are ranked within their chosen expert via a
+stable argsort; each expert processes a fixed-capacity [E, C, d] slab
+(sharded expert-parallel over the ``model`` axis); combine scatters results
+back weighted by the (optionally renormalized) gate probabilities.  Overflow
+tokens beyond capacity are dropped (their residual path passes through),
+which is the classic Switch/GShard trade; capacity_factor=1.25 by default.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import constrain
+from .common import ACTS, dense_init
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d: int, ff: int, kind: str, dtype):
+    ks = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {"w_gate": dense_init(ks[0], (d, ff), 0, dtype),
+                "w_up": dense_init(ks[1], (d, ff), 0, dtype),
+                "w_down": dense_init(ks[2], (ff, d), 0, dtype)}
+    return {"w_up": dense_init(ks[0], (d, ff), 0, dtype),
+            "w_down": dense_init(ks[1], (ff, d), 0, dtype)}
+
+
+def mlp_apply(params, x, kind: str):
+    if kind in ("swiglu", "geglu"):
+        act = ACTS["silu"] if kind == "swiglu" else ACTS["gelu"]
+        h = act(x @ params["w_gate"]) * (x @ params["w_up"])
+    else:
+        h = ACTS["gelu"](x @ params["w_up"])
+    h = constrain(h, "batch", "seq", "act_mlp")
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+
+
+def moe_init(key, d: int, ff: int, n_experts: int, dtype):
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, n_experts), 0, jnp.float32),
+        "e_gate": dense_init(ks[1], (n_experts, d, ff), 1, dtype),
+        "e_up": dense_init(ks[2], (n_experts, d, ff), 1, dtype),
+        "e_down": dense_init(ks[3], (n_experts, ff, d), 1, dtype),
+    }
+
+
+def _capacity(n_tokens: int, n_experts: int, top_k: int,
+              capacity_factor: float) -> int:
+    c = int(n_tokens * top_k / n_experts * capacity_factor)
+    return max(8, -(-c // 8) * 8)           # pad to sublane multiple
+
+
+def moe_apply(params, x, *, top_k: int, capacity_factor: float = 1.25,
+              norm_topk: bool = True):
+    """x [B, S, d] -> [B, S, d] plus aux load-balance loss.
+
+    Returns (y, aux) where aux = mean(load * importance) * E (Switch LB loss).
+    """
+    b, s, d = x.shape
+    e = params["router"].shape[1]
+    t = b * s
+    xf = x.reshape(t, d)
+
+    gate_logits = (xf.astype(jnp.float32) @ params["router"])      # [T, E]
+    probs = jax.nn.softmax(gate_logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, top_k)                      # [T, K]
+    if norm_topk:
+        top_p = top_p / jnp.maximum(
+            jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance aux: fraction routed vs mean prob per expert.
+    importance = jnp.mean(probs, axis=0)                            # [E]
+    onehot_top1 = jax.nn.one_hot(top_e[:, 0], e, dtype=jnp.float32)
+    load = jnp.mean(onehot_top1, axis=0)
+    aux = jnp.sum(importance * load) * e
+
+    cap = _capacity(t, e, top_k, capacity_factor)
+
+    # ---- dispatch: rank tokens within their expert (stable over token id)
+    flat_e = top_e.reshape(-1)                                      # [T*K]
+    flat_tok = jnp.repeat(jnp.arange(t), top_k)
+    flat_w = top_p.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)                        # [T*K]
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=e)                         # [E]
+    offsets = jnp.cumsum(counts) - counts                           # [E]
+    rank_sorted = jnp.arange(t * top_k) - offsets[sorted_e]
+    rank = jnp.zeros_like(rank_sorted).at[order].set(rank_sorted)   # [T*K]
+
+    in_cap = rank < cap
+    slot_e = jnp.where(in_cap, flat_e, e)      # OOB row e -> dropped by mode
+    slot_c = jnp.where(in_cap, rank, 0)
+
+    disp_tok = jnp.full((e, cap), t, jnp.int32)                     # sentinel t
+    disp_tok = disp_tok.at[slot_e, slot_c].set(
+        flat_tok.astype(jnp.int32), mode="drop")
+    disp_w = jnp.zeros((e, cap), jnp.float32).at[slot_e, slot_c].set(
+        flat_w, mode="drop")
+
+    xpad = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)], axis=0)
+    xe = xpad[disp_tok]                                             # [E, C, d]
+    xe = constrain(xe, "act_experts", None, None)
+
+    # ---- expert computation (grouped gemm over the expert-parallel slab)
+    h = ACTS["silu"](jnp.einsum("ecd,edf->ecf", xe, params["e_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", xe, params["e_up"])
+    h = constrain(h, "act_experts", None, "act_mlp")
+    ye = jnp.einsum("ecf,efd->ecd", h, params["e_down"])            # [E, C, d]
+    ye = constrain(ye, "act_experts", None, None)
+
+    # ---- combine: weighted scatter-add back to token order
+    yw = ye.astype(jnp.float32) * disp_w[..., None]
+    y = jnp.zeros((t + 1, d), jnp.float32).at[disp_tok.reshape(-1)].add(
+        yw.reshape(-1, d), mode="drop")[:t]
+    return y.reshape(b, s, d).astype(x.dtype), aux

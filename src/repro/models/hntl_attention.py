@@ -1,0 +1,370 @@
+"""HNTL-KV retrieval attention: the paper's Mode B as long-context decode.
+
+For 500k-token decoding, scanning the full KV cache per step is
+memory-bandwidth-bound (500k x hd reads per head per layer).  HNTL-KV
+replaces it with the paper's two-level route-then-scan:
+
+  sealed region (positions [0, S)): contiguous ``kv_cap``-token chunks are
+    *grains* (the LSM "sealed segment" semantics — no re-wiring, ever).
+    Each grain holds a centroid, a local tangent basis over its (post-RoPE)
+    keys, int16 quantized coordinates in Block-SoA layout and int32 residual
+    energies.  A decode query routes to top-P grains (+ quantization envelope
+    filter), scans their panels with integer math (kernels/hntl_scan), and
+    re-ranks the global top-C candidates exactly against the raw keys in HBM
+    (the "cold tier" — touched only for C tokens, not S).
+  hot tail (positions [S, S+Wt)): a ring buffer scanned exactly — the
+    unsealed "memtable".  Decode steps append here; resealing into new
+    grains is a host-side control-plane op (seal_tail), exactly like
+    Aperon's segment seal.
+
+Candidate metric note: grains index keys under L2; attention wants large
+q.k.  Since the top-C pool is re-scored with *exact* dot products inside the
+softmax, the approximation only affects which tokens enter the pool —
+paper Mode B semantics (approximate candidate generation, exact re-rank).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.index import int32_safe_qmax
+from ..kernels import ops
+from .common import softcap
+
+NEG_INF = -1.0e30
+BIG = 3.0e38
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class KVIndex:
+    """Per-layer HNTL index over one attention layer's key cache.
+
+    Shapes: B batch, KV kv-heads, G grains, hd head dim, kt tangent dim,
+    cap tokens/grain, S = G*cap sealed tokens, Wt tail slots.
+    """
+    centroids: jax.Array    # [B, KV, G, hd] f32
+    basis: jax.Array        # [B, KV, G, hd, kt] f32
+    coords: jax.Array       # [B, KV, G, kt, cap] i16 (Block-SoA, dim-major)
+    res: jax.Array          # [B, KV, G, cap] i32
+    scale: jax.Array        # [B, KV, G] f32
+    res_scale: jax.Array    # [B, KV, G] f32
+    k_raw: jax.Array        # [B, S, KV, hd] — cold tier (exact re-rank);
+    v_raw: jax.Array        #   int8 when cfg.kv_sq8 (paper §4 SQ8 tier)
+    tail_k: jax.Array       # [B, Wt, KV, hd] — hot memtable ring
+    tail_v: jax.Array       # [B, Wt, KV, hd]
+    k_scale: Optional[jax.Array] = None   # [B, KV] sq8 dequant scales
+    v_scale: Optional[jax.Array] = None
+
+    @property
+    def n_grains(self) -> int:
+        return self.centroids.shape[2]
+
+    @property
+    def cap(self) -> int:
+        return self.coords.shape[-1]
+
+    @property
+    def sealed_len(self) -> int:
+        return self.k_raw.shape[1]
+
+
+def kv_index_specs(cfg, batch: int, sealed_len: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct stand-ins for the dry-run (no allocation)."""
+    kv, hd, kt, cap = cfg.n_kv_heads, cfg.head_dim, cfg.kv_kt, cfg.kv_cap
+    g = sealed_len // cap
+    sds = jax.ShapeDtypeStruct
+    meta_dt = jnp.bfloat16 if cfg.kv_bf16_meta else jnp.float32
+    raw_dt = jnp.int8 if cfg.kv_sq8 else dtype
+    sc = None
+    if cfg.kv_sq8:
+        sc = sds((batch, kv), jnp.float32)
+    return KVIndex(
+        centroids=sds((batch, kv, g, hd), meta_dt),
+        basis=sds((batch, kv, g, hd, kt), meta_dt),
+        coords=sds((batch, kv, g, kt, cap), jnp.int16),
+        res=sds((batch, kv, g, cap), jnp.int32),
+        scale=sds((batch, kv, g), jnp.float32),
+        res_scale=sds((batch, kv, g), jnp.float32),
+        k_raw=sds((batch, sealed_len, kv, hd), raw_dt),
+        v_raw=sds((batch, sealed_len, kv, hd), raw_dt),
+        tail_k=sds((batch, cfg.kv_tail, kv, hd), dtype),
+        tail_v=sds((batch, cfg.kv_tail, kv, hd), dtype),
+        k_scale=sc, v_scale=sc,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Build (host/jit mixed; used by tests, examples and the serving engine)
+# ---------------------------------------------------------------------------
+
+
+def _build_one_grain(keys, kt: int, qmax: int):
+    """keys [cap, hd] f32 -> grain arrays.  vmapped over (B, KV, G)."""
+    mu = jnp.mean(keys, axis=0)
+    xc = keys - mu
+    cov = xc.T @ xc / keys.shape[0]
+    _, vecs = jnp.linalg.eigh(cov)                    # ascending
+    basis = vecs[:, ::-1][:, :kt]                     # [hd, kt]
+    z = xc @ basis                                    # [cap, kt]
+    mag = jnp.quantile(jnp.abs(z), 0.9995)
+    scale = jnp.maximum(mag * 1.25, 1e-12) / qmax
+    zq = jnp.clip(jnp.round(z / scale), -qmax, qmax).astype(jnp.int16)
+    r = jnp.maximum(jnp.sum(xc * xc, axis=1) - jnp.sum(z * z, axis=1), 0.0)
+    res_scale = jnp.maximum(jnp.max(r) * 1.05, 1e-12) / 65535
+    rq = jnp.clip(jnp.round(r / res_scale), 0, 65535).astype(jnp.int32)
+    return mu, basis, zq.T, rq, scale, res_scale      # coords dim-major
+
+
+def build_kv_index(k_raw, v_raw, cfg) -> KVIndex:
+    """Seal a [B, S, KV, hd] key cache into an HNTL-KV index.
+
+    S must be a multiple of cfg.kv_cap.  Post-RoPE keys expected.
+    """
+    b, s, kv, hd = k_raw.shape
+    cap, kt = cfg.kv_cap, cfg.kv_kt
+    assert s % cap == 0, (s, cap)
+    g = s // cap
+    qmax = int32_safe_qmax(kt)
+    keys = k_raw.astype(jnp.float32).transpose(0, 2, 1, 3) \
+        .reshape(b, kv, g, cap, hd)
+    fn = jax.vmap(jax.vmap(jax.vmap(
+        lambda kk: _build_one_grain(kk, kt, qmax))))
+    mu, basis, coords, rq, scale, res_scale = fn(keys)
+    wt = cfg.kv_tail
+    tail_dt = k_raw.dtype
+    k_sc = v_sc = None
+    if cfg.kv_bf16_meta:
+        mu, basis = mu.astype(jnp.bfloat16), basis.astype(jnp.bfloat16)
+    if cfg.kv_sq8:          # paper §4: SQ8 cold-tier offloading
+        k_sc = jnp.max(jnp.abs(k_raw.astype(jnp.float32)),
+                       axis=(1, 3)) / 127.0 + 1e-12          # [B, KV]
+        v_sc = jnp.max(jnp.abs(v_raw.astype(jnp.float32)),
+                       axis=(1, 3)) / 127.0 + 1e-12
+        k_raw = jnp.clip(jnp.round(
+            k_raw.astype(jnp.float32) / k_sc[:, None, :, None]),
+            -127, 127).astype(jnp.int8)
+        v_raw = jnp.clip(jnp.round(
+            v_raw.astype(jnp.float32) / v_sc[:, None, :, None]),
+            -127, 127).astype(jnp.int8)
+    return KVIndex(
+        centroids=mu, basis=basis, coords=coords, res=rq,
+        scale=scale, res_scale=res_scale,
+        k_raw=k_raw, v_raw=v_raw,
+        tail_k=jnp.zeros((b, wt, kv, hd), tail_dt),
+        tail_v=jnp.zeros((b, wt, kv, hd), tail_dt),
+        k_scale=k_sc, v_scale=v_sc,
+    )
+
+
+# ---------------------------------------------------------------------------
+# The retrieval decode path
+# ---------------------------------------------------------------------------
+
+
+def _retrieve_pool(qh, idx: KVIndex, cfg, *, scan_backend: str = "auto"):
+    """Route -> envelope filter -> Block-SoA scan -> top-C exact candidates.
+
+    qh [B, KV, gq, hd] f32 queries (grouped onto kv heads).
+    Returns (log_c [B,KV,gq,C] exact dot-product logits, v_cand
+    [B,KV,gq,C,hd], pool).
+    """
+    b, kv, gq, hd = qh.shape
+    g, kt, cap = idx.n_grains, cfg.kv_kt, idx.cap
+    nprobe = min(cfg.kv_nprobe, g)
+    pool = min(cfg.kv_pool, nprobe * cap)
+    qmax = int32_safe_qmax(kt)
+    scale_attn = cfg.attn_scale if cfg.attn_scale is not None else hd ** -0.5
+
+    # ---- level 1: centroid routing (paper 2.3) ---------------------------
+    cent = idx.centroids                                   # [B,KV,G,hd]
+    d2 = (jnp.sum(qh * qh, -1)[..., None]
+          - 2.0 * jnp.einsum("bkgh,bkGh->bkgG", qh, cent)
+          + jnp.sum(cent * cent, -1)[:, :, None, :])       # [B,KV,gq,G]
+    _, gsel = jax.lax.top_k(-d2, nprobe)                   # [B,KV,gq,P]
+
+    # ---- gather grain panels (affine in (grain, slot) — pointerless) -----
+    def takeg(arr):
+        """arr [B,KV,G,...] -> [B,KV,gq,P,...] gathered at gsel."""
+        return jax.vmap(jax.vmap(
+            lambda a, i: a[i]))(arr, gsel.reshape(b, kv, -1)) \
+            .reshape((b, kv, gq, nprobe) + arr.shape[3:])
+
+    mu_s = takeg(idx.centroids)                            # [B,KV,gq,P,hd]
+    basis_s = takeg(idx.basis)                             # [...,hd,kt]
+    coords_s = takeg(idx.coords)                           # [...,kt,cap]
+    res_s = takeg(idx.res)                                 # [...,cap]
+    scale_s = takeg(idx.scale)                             # [B,KV,gq,P]
+    rscale_s = takeg(idx.res_scale)
+
+    # ---- level 2: tangent projection + envelope filter -------------------
+    vc = qh[:, :, :, None, :] - mu_s.astype(jnp.float32)  # [B,KV,gq,P,hd]
+    z = jnp.einsum("bkgph,bkgphT->bkgpT", vc,
+                   basis_s.astype(jnp.float32))            # [...,kt]
+    rq = jnp.maximum(jnp.sum(vc * vc, -1) - jnp.sum(z * z, -1), 0.0)
+    zs = z / scale_s[..., None]
+    sat = jnp.mean((jnp.abs(zs) >= qmax).astype(jnp.float32), axis=-1)
+    keep_grain = sat <= cfg.kv_envelope_frac               # [B,KV,gq,P]
+    # fallback: never prune *all* routed grains (keep the nearest one)
+    none_kept = ~jnp.any(keep_grain, axis=-1, keepdims=True)
+    keep_grain = keep_grain | (none_kept
+                               & (jnp.arange(nprobe) == 0)[None, None, None])
+    zq = jnp.clip(jnp.round(zs), -qmax, qmax).astype(jnp.int32)
+
+    # ---- Block-SoA integer scan (the paper's engine) ----------------------
+    pn = b * kv * gq * nprobe
+    dists = ops.scan_single(
+        zq.reshape(pn, kt), rq.reshape(pn),
+        coords_s.reshape(pn, kt, cap), res_s.reshape(pn, cap),
+        jnp.ones((pn, cap), bool), scale_s.reshape(pn),
+        rscale_s.reshape(pn), backend=scan_backend)
+    dists = dists.reshape(b, kv, gq, nprobe, cap)
+    dists = jnp.where(keep_grain[..., None], dists, BIG)
+
+    # ---- top-C candidate pool -> exact re-rank (Mode B) -------------------
+    flat = dists.reshape(b, kv, gq, nprobe * cap)
+    neg_d, pos_sel = jax.lax.top_k(-flat, pool)            # [B,KV,gq,C]
+    token_pos = (jnp.take_along_axis(
+        gsel.reshape(b, kv, gq, nprobe, 1),
+        pos_sel[..., None] // cap, axis=3)[..., 0] * cap
+        + pos_sel % cap)                                   # [B,KV,gq,C]
+    cand_ok = neg_d > -BIG / 2
+
+    kr = idx.k_raw.transpose(0, 2, 1, 3)                   # [B,KV,S,hd]
+    vr = idx.v_raw.transpose(0, 2, 1, 3)
+    def takes(arr, idxs):
+        return jax.vmap(jax.vmap(lambda a, i: a[i]))(
+            arr, idxs.reshape(b, kv, -1)).reshape(
+                (b, kv, gq, pool, hd))
+    k_cand = takes(kr, token_pos)                          # [B,KV,gq,C,hd]
+    v_cand = takes(vr, token_pos)
+    if idx.k_scale is not None:                            # sq8 dequant (C only)
+        k_cand = k_cand.astype(jnp.float32) \
+            * idx.k_scale[:, :, None, None, None]
+        v_cand = v_cand.astype(jnp.float32) \
+            * idx.v_scale[:, :, None, None, None]
+
+    qs = qh * scale_attn
+    log_c = jnp.einsum("bkgh,bkgch->bkgc", qs, k_cand.astype(jnp.float32))
+    log_c = softcap(log_c, cfg.attn_logit_cap)
+    log_c = jnp.where(cand_ok, log_c, NEG_INF)
+    return log_c, v_cand, pool
+
+
+def retrieval_decode_attention(q, k_new, v_new, idx: KVIndex, q_pos, cfg,
+                               *, scan_backend: str = "auto"):
+    """One-token attention over (sealed HNTL index + exact hot tail).
+
+    q, k_new, v_new [B, 1, H*, hd] (post-RoPE); q_pos [B] absolute position.
+    Returns (out [B, 1, Hq, hd], updated KVIndex with the token in the tail).
+    """
+    b, _, hq, hd = q.shape
+    kv = idx.centroids.shape[1]
+    gq = hq // kv
+    s_sealed = idx.sealed_len
+    wt = idx.tail_k.shape[1]
+    scale_attn = cfg.attn_scale if cfg.attn_scale is not None else hd ** -0.5
+
+    # ---- tail append (the memtable write) --------------------------------
+    slot = jnp.mod(q_pos - s_sealed, wt)
+    bidx = jnp.arange(b)
+    tail_k = idx.tail_k.at[bidx, slot].set(k_new[:, 0])
+    tail_v = idx.tail_v.at[bidx, slot].set(v_new[:, 0])
+
+    qh = q[:, 0].astype(jnp.float32).reshape(b, kv, gq, hd)
+    log_c, v_cand, pool = _retrieve_pool(qh, idx, cfg,
+                                         scan_backend=scan_backend)
+    qs = qh * scale_attn
+
+    # ---- exact hot-tail logits (the unsealed memtable) ---------------------
+    i_slot = jnp.arange(wt)[None, :]
+    prev = q_pos[:, None]
+    tpos = prev - jnp.mod(prev - (i_slot + s_sealed), wt)  # abs pos per slot
+    tail_ok = (tpos >= s_sealed) & (tpos <= prev)          # [B, Wt]
+    tk = tail_k.astype(jnp.float32).transpose(0, 2, 1, 3)  # [B,KV,Wt,hd]
+    tv = tail_v.astype(jnp.float32).transpose(0, 2, 1, 3)
+    log_t = jnp.einsum("bkgh,bkth->bkgt", qs, tk)
+    log_t = softcap(log_t, cfg.attn_logit_cap)
+    log_t = jnp.where(tail_ok[:, None, None, :], log_t, NEG_INF)
+
+    # ---- fused softmax over pool + tail ------------------------------------
+    logits = jnp.concatenate([log_c, log_t], axis=-1)      # [B,KV,gq,C+Wt]
+    p = jax.nn.softmax(logits, axis=-1)
+    out = (jnp.einsum("bkgc,bkgch->bkgh", p[..., :pool],
+                      v_cand.astype(jnp.float32))
+           + jnp.einsum("bkgt,bkth->bkgh", p[..., pool:], tv))
+    out = out.reshape(b, 1, hq, hd).astype(q.dtype)
+
+    new_idx = dataclasses.replace(idx, tail_k=tail_k, tail_v=tail_v)
+    return out, new_idx
+
+
+def retrieval_cross_attention(q, idx: KVIndex, cfg, *,
+                              scan_backend: str = "auto"):
+    """Attention over a *static* sealed memory (whisper cross-attention).
+
+    q [B, 1, Hq, hd]; no tail append — encoder memory never grows.
+    Returns out [B, 1, Hq, hd].
+    """
+    b, _, hq, hd = q.shape
+    kv = idx.centroids.shape[1]
+    gq = hq // kv
+    qh = q[:, 0].astype(jnp.float32).reshape(b, kv, gq, hd)
+    log_c, v_cand, pool = _retrieve_pool(qh, idx, cfg,
+                                         scan_backend=scan_backend)
+    p = jax.nn.softmax(log_c, axis=-1)
+    out = jnp.einsum("bkgc,bkgch->bkgh", p, v_cand.astype(jnp.float32))
+    return out.reshape(b, 1, hq, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Control-plane: seal the hot tail into new grains (host-side, between steps)
+# ---------------------------------------------------------------------------
+
+
+def seal_tail(idx: KVIndex, tail_len: int, cfg) -> KVIndex:
+    """Freeze full cap-sized chunks of the tail into new sealed grains.
+
+    Mirrors Aperon's memtable seal: immutable append, no re-wiring of
+    existing grains.  Host-side; returns a new (larger) KVIndex.
+    """
+    cap = cfg.kv_cap
+    n_new = tail_len // cap
+    if n_new == 0:
+        return idx
+    take = n_new * cap
+    k_new = idx.tail_k[:, :take]
+    v_new = idx.tail_v[:, :take]
+    sub = build_kv_index(k_new, v_new, cfg)
+    rest_k = jnp.concatenate(
+        [idx.tail_k[:, take:], jnp.zeros_like(idx.tail_k[:, :take])], axis=1)
+    rest_v = jnp.concatenate(
+        [idx.tail_v[:, take:], jnp.zeros_like(idx.tail_v[:, :take])], axis=1)
+    return KVIndex(
+        centroids=jnp.concatenate([idx.centroids, sub.centroids], axis=2),
+        basis=jnp.concatenate([idx.basis, sub.basis], axis=2),
+        coords=jnp.concatenate([idx.coords, sub.coords], axis=2),
+        res=jnp.concatenate([idx.res, sub.res], axis=2),
+        scale=jnp.concatenate([idx.scale, sub.scale], axis=2),
+        res_scale=jnp.concatenate([idx.res_scale, sub.res_scale], axis=2),
+        k_raw=jnp.concatenate([idx.k_raw, k_new], axis=1),
+        v_raw=jnp.concatenate([idx.v_raw, v_new], axis=1),
+        tail_k=rest_k, tail_v=rest_v,
+    )
+
+
+def reference_decode_attention(q, k_all, v_all, q_pos, cfg):
+    """Exact full-cache decode attention (the oracle HNTL-KV approximates).
+
+    q [B,1,Hq,hd]; k_all/v_all [B,T,KV,hd] hold positions [0, q_pos]."""
+    from .attention import decode_attention
+    b = q.shape[0]
+    t = k_all.shape[1]
+    k_pos = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    return decode_attention(q, k_all, v_all, q_pos, k_pos,
+                            logit_cap=cfg.attn_logit_cap,
+                            scale=cfg.attn_scale)

@@ -1,0 +1,45 @@
+"""Lowering-mode flags: loop unrolling for measurement-grade AOT compiles.
+
+XLA's ``cost_analysis`` counts a while-loop body ONCE regardless of trip
+count (verified on this container — see EXPERIMENTS.md §Dry-run), which
+would silently undercount FLOPs/bytes/collectives of scanned layer stacks
+by ~n_layers.  For the dry-run we therefore lower with every structural
+loop unrolled:
+
+  - layer-group scans -> python loops over sliced stacked params,
+  - chunked-attention kv scans -> python loops (chunk count bounded),
+  - RWKV time recurrence -> the *chunked* block-parallel WKV form
+    (matmul per chunk — also the TPU-native formulation) with a python
+    chunk loop.
+
+Runtime behaviour is unchanged by default (flags off => lax.scan paths).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass
+class LoweringFlags:
+    unroll_layers: bool = False
+    attn_chunks: Optional[int] = None     # unrolled kv-chunk count
+    wkv_chunks: Optional[int] = None      # unrolled wkv chunk count
+
+
+_STACK = [LoweringFlags()]
+
+
+def flags() -> LoweringFlags:
+    return _STACK[-1]
+
+
+@contextlib.contextmanager
+def unrolled(attn_chunks: int = 8, wkv_chunks: int = 8):
+    _STACK.append(LoweringFlags(unroll_layers=True, attn_chunks=attn_chunks,
+                                wkv_chunks=wkv_chunks))
+    try:
+        yield
+    finally:
+        _STACK.pop()

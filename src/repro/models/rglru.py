@@ -1,0 +1,126 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin hybrid layers).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_a x_t)          (recurrence gate, block-diagonal)
+    i_t = sigmoid(W_x x_t)          (input gate,      block-diagonal)
+    a_t = exp(-c * softplus(L) * r_t),  c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses ``jax.lax.associative_scan`` (log-depth, TPU-parallel);
+decode is a single fused state update.  The block wraps the recurrence with
+the Griffin structure: gated GeLU branch x causal depthwise conv1d branch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init
+
+_C = 8.0
+_EPS = 1e-6
+
+
+def rg_block_init(key, d: int, r: int, n_blocks: int, conv_width: int, dtype):
+    ks = jax.random.split(key, 7)
+    bs = r // n_blocks
+    # Lambda init so a^c in ~(0.9, 0.999) (Griffin appendix)
+    u = jax.random.uniform(ks[5], (r,), jnp.float32, 0.9 ** 2, 0.999 ** 2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))            # softplus^-1
+    return {
+        "w_gate_rnn": dense_init(ks[0], (d, r), 0, dtype),     # gelu branch
+        "w_in": dense_init(ks[1], (d, r), 0, dtype),           # conv branch
+        "w_out": dense_init(ks[2], (r, d), 0, dtype),
+        "conv_w": dense_init(ks[3], (conv_width, r), 0, dtype),
+        "conv_b": jnp.zeros((r,), dtype),
+        # block-diagonal gates [n_blocks, bs, 2*bs] (recurrence | input)
+        "gate_w": dense_init(ks[4], (n_blocks, bs, 2 * bs), 1, jnp.float32),
+        "gate_b": jnp.zeros((n_blocks, 2 * bs), jnp.float32),
+        "lambda_p": lam,                                       # [r] f32
+    }
+
+
+def causal_conv(x, w, b, state=None):
+    """Depthwise causal conv1d.  x [B, S, r], w [W, r].
+
+    state: [B, W-1, r] trailing context from the previous segment (decode).
+    Returns (y [B, S, r], new_state [B, W-1, r]).
+    """
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)                   # [B, S+W-1, r]
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(width)) + b
+    new_state = xp[:, -(width - 1):, :] if width > 1 else state
+    return y.astype(x.dtype), new_state
+
+
+def _gates(params, x):
+    """Block-diagonal recurrence/input gates.  x [B, S, r] -> (r_t, i_t)."""
+    b, s, r = x.shape
+    nb = params["gate_w"].shape[0]
+    xb = x.reshape(b, s, nb, r // nb).astype(jnp.float32)
+    g = jnp.einsum("bsnh,nhk->bsnk", xb, params["gate_w"]) + params["gate_b"]
+    g = g.reshape(b, s, 2 * r)
+    rt = jax.nn.sigmoid(g[..., :r])
+    it = jax.nn.sigmoid(g[..., r:])
+    return rt, it
+
+
+def rglru(params, x, h0=None):
+    """The RG-LRU recurrence over a full segment (training/prefill).
+
+    x [B, S, r]; h0 [B, r] initial state.  Returns (y [B, S, r], h_S [B, r]).
+    """
+    rt, it = _gates(params, x)
+    log_a = -_C * jax.nn.softplus(params["lambda_p"]) * rt     # [B, S, r] f32
+    a = jnp.exp(log_a)
+    gated = it * x.astype(jnp.float32)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), _EPS)) * gated
+
+    if h0 is not None:
+        beta = beta.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_acc, h = jax.lax.associative_scan(combine, (a, beta), axis=1)
+    return h.astype(x.dtype), h[:, -1, :]
+
+
+def rglru_step(params, x, h):
+    """One decode step.  x [B, 1, r], h [B, r] -> (y [B, 1, r], h')."""
+    rt, it = _gates(params, x)
+    log_a = -_C * jax.nn.softplus(params["lambda_p"]) * rt[:, 0]
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), _EPS)) \
+        * (it[:, 0] * x[:, 0].astype(jnp.float32))
+    h_new = a * h.astype(jnp.float32) + beta
+    return h_new[:, None, :].astype(x.dtype), h_new
+
+
+def rg_block_apply(params, x, state=None):
+    """Griffin recurrent block.  x [B, S, d].
+
+    state: None (training) or {"h": [B, r], "conv": [B, W-1, r]}.
+    Returns (y [B, S, d], new_state or None).
+    """
+    gate = jax.nn.gelu(x @ params["w_gate_rnn"], approximate=True)
+    u = x @ params["w_in"]
+    conv_state = state["conv"] if state is not None else None
+    u, new_conv = causal_conv(u, params["conv_w"], params["conv_b"], conv_state)
+    if state is not None and x.shape[1] == 1:
+        h, h_last = rglru_step(params, u, state["h"])
+    else:
+        h0 = state["h"] if state is not None else None
+        h, h_last = rglru(params, u, h0)
+    y = (gate * h) @ params["w_out"]
+    new_state = {"h": h_last, "conv": new_conv} if state is not None else None
+    return y, new_state
+
+
+def rg_state_init(batch: int, r: int, conv_width: int, dtype):
+    return {"h": jnp.zeros((batch, r), jnp.float32),
+            "conv": jnp.zeros((batch, conv_width - 1, r), dtype)}

@@ -1,0 +1,227 @@
+"""RWKV-6 "Finch" blocks: data-dependent-decay time-mix + channel-mix.
+
+Time-mix recurrence per head (head size N), following arXiv:2404.05892:
+
+    out_t = r_t . (S_{t-1} + (u * k_t) outer v_t)
+    S_t   = diag(w_t) S_{t-1} + k_t outer v_t
+
+with data-dependent per-channel decay w_t = exp(-exp(w0 + lora_w(x~_t))) and
+data-dependent token-shift interpolation (ddlerp) feeding r/k/v/w/g.  The
+sequential state S is [B, H, N, N]; training runs a time scan (the chunked
+block-parallel form is a perf-iteration candidate, see EXPERIMENTS.md §Perf).
+Attention-free: the HNTL-KV technique is inapplicable here by construction
+(DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init
+
+_LORA = 32
+_LORA_W = 64
+
+
+def timemix_init(key, d: int, head_size: int, dtype):
+    h = d // head_size
+    ks = jax.random.split(key, 12)
+    return {
+        # ddlerp: base mix mu_x plus 5 per-stream deltas via a shared lora
+        "mu_x": jnp.zeros((d,), jnp.float32),
+        "mu_rkvwg": jnp.zeros((5, d), jnp.float32),
+        "lora_a": dense_init(ks[0], (d, 5 * _LORA), 0, jnp.float32),
+        "lora_b": dense_init(ks[1], (5, _LORA, d), 1, jnp.float32),
+        # decay
+        "w0": jnp.full((d,), -6.0, jnp.float32),
+        "wlora_a": dense_init(ks[2], (d, _LORA_W), 0, jnp.float32),
+        "wlora_b": dense_init(ks[3], (_LORA_W, d), 0, jnp.float32),
+        "u": 0.1 * jax.random.normal(ks[4], (h, head_size), jnp.float32),
+        "wr": dense_init(ks[5], (d, d), 0, dtype),
+        "wk": dense_init(ks[6], (d, d), 0, dtype),
+        "wv": dense_init(ks[7], (d, d), 0, dtype),
+        "wg": dense_init(ks[8], (d, d), 0, dtype),
+        "wo": dense_init(ks[9], (d, d), 0, dtype),
+        "ln_x_scale": jnp.ones((d,), jnp.float32),
+        "ln_x_bias": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def channelmix_init(key, d: int, ff: int, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.zeros((d,), jnp.float32),
+        "mu_r": jnp.zeros((d,), jnp.float32),
+        "cm_wr": dense_init(ks[0], (d, d), 0, dtype),
+        "cm_w": dense_init(ks[1], (d, ff), 0, dtype),
+        "cm_w2": dense_init(ks[2], (ff, d), 0, dtype),
+    }
+
+
+def _shifted(x, last=None):
+    """Token shift: x_{t-1} (zeros / carried state at t=0).  x [B, S, d]."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    else:
+        last = last[:, None, :].astype(x.dtype)
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def _ddlerp(params, x, xprev):
+    """Data-dependent interpolation producing the 5 mixed streams r,k,v,w,g."""
+    delta = (xprev - x).astype(jnp.float32)
+    base = x.astype(jnp.float32) + delta * params["mu_x"]
+    lo = jnp.tanh(base @ params["lora_a"])                    # [B,S,5*L]
+    b, s, _ = lo.shape
+    lo = lo.reshape(b, s, 5, _LORA)
+    dyn = jnp.einsum("bsfl,fld->bsfd", lo, params["lora_b"])  # [B,S,5,d]
+    mixed = x.astype(jnp.float32)[:, :, None, :] + delta[:, :, None, :] \
+        * (params["mu_rkvwg"] + dyn)
+    return [mixed[:, :, i, :] for i in range(5)]              # r,k,v,w,g
+
+
+def _wkv_scan(r, k, v, w, u, s0):
+    """The Finch recurrence.  r,k,v,w [B, S, H, N] (w in (0,1)); s0 [B,H,N,N].
+
+    Returns (out [B, S, H, N], s_final).
+    """
+    def step(s, inp):
+        rt, kt, vt, wt = inp                                  # [B, H, N]
+        kv = kt[..., :, None] * vt[..., None, :]              # [B,H,N,N]
+        out = jnp.einsum("bhi,bhij->bhj", rt, s + u[None, :, :, None] * kv)
+        s_new = wt[..., :, None] * s + kv
+        return s_new, out
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    s_final, outs = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(outs, 0, 1), s_final
+
+
+_LOG_CLIP = 30.0
+
+
+def _wkv_chunk_body(r, k, v, w, u, s0):
+    """One chunk of the block-parallel WKV (TPU-native form, DESIGN.md §2).
+
+    r,k,v,w [B, C, H, N]; s0 [B, H, N, N].  Within a chunk, decays are
+    factored through cumulative per-channel products W_t = prod_{s<=t} w_s:
+
+        out_t = (r_t*W_{t-1}) . S0  +  tril_strict((R~ K~^T)) V
+                + (r_t*(u*k_t)) v_t
+        S_C   = diag(W_C) S0 + (W_C/W_j * k_j)^T V
+
+    with R~ = r*W_{t-1}, K~ = k/W_j — two [C,C]/[C,N] matmuls on the MXU
+    instead of C sequential rank-1 updates.  log-space with clipping keeps
+    k/W from overflowing for strong decays.
+    """
+    b, c, h, n = r.shape
+    logw = jnp.log(jnp.maximum(w, 1e-38))                # [B,C,H,N] (<0)
+    cum = jnp.cumsum(logw, axis=1)                       # log W_t
+    cum_prev = cum - logw                                # log W_{t-1}
+    r_t = r * jnp.exp(jnp.clip(cum_prev, -_LOG_CLIP, _LOG_CLIP))
+    k_t = k * jnp.exp(jnp.clip(-cum, -_LOG_CLIP, _LOG_CLIP))
+
+    # cross-token term: strictly causal [C, C] per (B, H)
+    att = jnp.einsum("bihn,bjhn->bhij", r_t, k_t)        # i=query, j=key
+    mask = jnp.tril(jnp.ones((c, c), bool), k=-1)
+    att = jnp.where(mask[None, None], att, 0.0)
+    out = jnp.einsum("bhij,bjhn->bihn", att, v)
+
+    # state term + diagonal (current-token bonus) term
+    out = out + jnp.einsum("bihn,bhnm->bihm", r_t, s0)
+    out = out + jnp.einsum("bihn,bihm->bihm",
+                           r * (u[None, None] * k), v)
+
+    # state update
+    w_end = cum[:, -1][:, :, :, None]                    # [B,H,N,1] log W_C
+    k_scaled = k * jnp.exp(jnp.clip(cum[:, -1][:, None] - cum,
+                                    -_LOG_CLIP, _LOG_CLIP))
+    s_new = jnp.exp(jnp.clip(w_end, -_LOG_CLIP, 0.0)).transpose(0, 1, 2, 3) \
+        * s0 + jnp.einsum("bjhn,bjhm->bhnm", k_scaled, v)
+    return out, s_new
+
+
+def _wkv_chunked(r, k, v, w, u, s0, n_chunks: int):
+    """Chunked WKV with an unrolled python loop over chunks (dry-run /
+    TPU-perf path).  Exact (up to fp assoc.) vs the step scan."""
+    b, s, h, n = r.shape
+    c = -(-s // n_chunks)
+    pad = n_chunks * c - s
+    if pad:
+        zeros = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zeros(r), zeros(k), zeros(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+    outs = []
+    state = s0
+    for ci in range(n_chunks):
+        sl = slice(ci * c, (ci + 1) * c)
+        o, state = _wkv_chunk_body(r[:, sl], k[:, sl], v[:, sl], w[:, sl],
+                                   u, state)
+        outs.append(o)
+    out = jnp.concatenate(outs, axis=1)[:, :s]
+    return out, state
+
+
+def timemix_apply(params, x, head_size: int, state=None):
+    """x [B, S, d].  state: None or {"s": [B,H,N,N], "shift": [B, d]}."""
+    b, s, d = x.shape
+    h = d // head_size
+    xprev = _shifted(x, None if state is None else state["shift"])
+    xr, xk, xv, xw, xg = _ddlerp(params, x, xprev)
+
+    r = (xr.astype(x.dtype) @ params["wr"]).reshape(b, s, h, head_size)
+    k = (xk.astype(x.dtype) @ params["wk"]).reshape(b, s, h, head_size)
+    v = (xv.astype(x.dtype) @ params["wv"]).reshape(b, s, h, head_size)
+    g = jax.nn.silu(xg.astype(x.dtype) @ params["wg"])
+    w = jnp.exp(-jnp.exp(
+        params["w0"] + jnp.tanh(xw @ params["wlora_a"]) @ params["wlora_b"]))
+    w = w.reshape(b, s, h, head_size)
+
+    s0 = state["s"] if state is not None else \
+        jnp.zeros((b, h, head_size, head_size), jnp.float32)
+    from .lowering import flags
+    if flags().wkv_chunks and s > 1:
+        out, s_fin = _wkv_chunked(
+            r.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), w, params["u"], s0,
+            n_chunks=min(flags().wkv_chunks, s))
+    else:
+        out, s_fin = _wkv_scan(r.astype(jnp.float32), k.astype(jnp.float32),
+                               v.astype(jnp.float32), w, params["u"], s0)
+
+    # per-head groupnorm, then output gate
+    o = out.reshape(b, s, h, head_size)
+    mu = jnp.mean(o, axis=-1, keepdims=True)
+    var = jnp.var(o, axis=-1, keepdims=True)
+    o = ((o - mu) * jax.lax.rsqrt(var + 64e-5)).reshape(b, s, d)
+    o = o * params["ln_x_scale"] + params["ln_x_bias"]
+    y = (o.astype(x.dtype) * g) @ params["wo"]
+
+    new_state = None
+    if state is not None:
+        new_state = {"s": s_fin, "shift": x[:, -1, :].astype(jnp.float32)}
+    return y, new_state
+
+
+def channelmix_apply(params, x, state=None):
+    """x [B, S, d].  state: None or {"shift": [B, d]}."""
+    xprev = _shifted(x, None if state is None else state["shift"])
+    delta = (xprev - x).astype(jnp.float32)
+    xk = (x.astype(jnp.float32) + delta * params["mu_k"]).astype(x.dtype)
+    xr = (x.astype(jnp.float32) + delta * params["mu_r"]).astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(xk @ params["cm_w"]))
+    y = jax.nn.sigmoid(xr @ params["cm_wr"]) * (kk @ params["cm_w2"])
+    new_state = None
+    if state is not None:
+        new_state = {"shift": x[:, -1, :].astype(jnp.float32)}
+    return y, new_state
+
+
+def rwkv_state_init(batch: int, d: int, head_size: int):
+    h = d // head_size
+    return {
+        "tm": {"s": jnp.zeros((batch, h, head_size, head_size), jnp.float32),
+               "shift": jnp.zeros((batch, d), jnp.float32)},
+        "cm": {"shift": jnp.zeros((batch, d), jnp.float32)},
+    }

@@ -1,0 +1,522 @@
+"""Decoder-only LM covering the dense / MoE / hybrid / SSM / VLM families.
+
+The model is a repeating ``pattern`` of layers (ModelConfig.pattern); the
+homogeneous repeats are stacked and executed with ``jax.lax.scan`` (compact
+HLO — essential for AOT-compiling 512-device meshes), with an unrolled tail
+for n_layers % len(pattern) != 0.  ``jax.checkpoint`` wraps each scanned
+group when cfg.remat.
+
+Three entry points per model:
+  loss(params, batch)                      — training forward + CE (+MoE aux)
+  prefill(params, tokens, ...)             — forward returning logits + caches
+  decode_step(params, token, caches, pos)  — one-token serving step
+
+Caches are fixed-shape pytrees aligned with the scanned group structure.
+Windowed attention layers use ring caches (window slots, not max_seq),
+the memory trick that makes gemma2 local layers O(window) at 500k contexts.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import constrain
+from . import rglru, rwkv6
+from .attention import attention, decode_attention
+from .common import (apply_rope, cross_entropy, dense_init, embed, embed_init,
+                     make_norm, softcap, unembed)
+from .config import LayerSpec, ModelConfig
+
+MOE_AUX_WEIGHT = 0.01
+
+
+# ---------------------------------------------------------------------------
+# Layer init
+# ---------------------------------------------------------------------------
+
+
+def _attn_init(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 6)
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": dense_init(ks[0], (d, hq, hd), 0, dtype),
+        "wk": dense_init(ks[1], (d, hkv, hd), 0, dtype),
+        "wv": dense_init(ks[2], (d, hkv, hd), 0, dtype),
+        "wo": dense_init(ks[3], (hq, hd, d), 0, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq, hd), dtype)
+        p["bk"] = jnp.zeros((hkv, hd), dtype)
+        p["bv"] = jnp.zeros((hkv, hd), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": jnp.zeros((hd,), dtype)}
+        p["k_norm"] = {"scale": jnp.zeros((hd,), dtype)}
+    return p
+
+
+def _mixer_init(key, spec: LayerSpec, cfg: ModelConfig, dtype):
+    if spec.kind == "attn":
+        return _attn_init(key, cfg, dtype)
+    if spec.kind == "rglru":
+        nb = max(1, cfg.rnn_dim // max(cfg.head_dim, 1))
+        return rglru.rg_block_init(key, cfg.d_model, cfg.rnn_dim, nb,
+                                   cfg.conv_width, dtype)
+    if spec.kind == "rwkv":
+        return rwkv6.timemix_init(key, cfg.d_model, cfg.rwkv_head_size, dtype)
+    raise ValueError(spec.kind)
+
+
+def _ffn_init(key, spec: LayerSpec, cfg: ModelConfig, dtype):
+    from . import ffn
+    if spec.kind == "rwkv":
+        return rwkv6.channelmix_init(key, cfg.d_model, cfg.d_ff, dtype)
+    if cfg.n_experts:
+        return ffn.moe_init(key, cfg.d_model, cfg.d_ff, cfg.n_experts, dtype)
+    return ffn.mlp_init(key, cfg.d_model, cfg.d_ff, cfg.mlp_kind, dtype)
+
+
+def _layer_init(key, spec: LayerSpec, cfg: ModelConfig, dtype):
+    norm_init, _ = make_norm(cfg.norm)
+    k1, k2 = jax.random.split(key)
+    p = {
+        "pre_norm": norm_init(cfg.d_model, dtype),
+        "mixer": _mixer_init(k1, spec, cfg, dtype),
+        "mlp_pre_norm": norm_init(cfg.d_model, dtype),
+        "ffn": _ffn_init(k2, spec, cfg, dtype),
+    }
+    if cfg.post_norm:
+        p["post_norm"] = norm_init(cfg.d_model, dtype)
+        p["mlp_post_norm"] = norm_init(cfg.d_model, dtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig):
+    """Full parameter pytree.  Use jax.eval_shape(init_params, ...) for AOT."""
+    dtype = cfg.compute_dtype
+    n_keys = cfg.n_groups * len(cfg.pattern) + len(cfg.tail_pattern) + 2
+    keys = jax.random.split(key, n_keys)
+    ki = iter(range(n_keys))
+
+    groups = []
+    for _ in range(cfg.n_groups):
+        groups.append({f"l{i}": _layer_init(keys[next(ki)], spec, cfg, dtype)
+                       for i, spec in enumerate(cfg.pattern)})
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *groups) \
+        if groups else {}
+    tail = tuple(_layer_init(keys[next(ki)], spec, cfg, dtype)
+                 for spec in cfg.tail_pattern)
+
+    norm_init, _ = make_norm(cfg.norm)
+    params = {
+        "embedding": embed_init(keys[next(ki)], (cfg.vocab, cfg.d_model),
+                                dtype),
+        "final_norm": norm_init(cfg.d_model, dtype),
+        "groups": stacked,
+        "tail": tail,
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(keys[next(ki) - 1],
+                                       (cfg.vocab, cfg.d_model), dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Layer apply (shared by train forward / prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def _qk_rmsnorm(p, x, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+def _project_qkv(p, x, cfg: ModelConfig, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        q = _qk_rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = _qk_rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    rd = int(cfg.head_dim * cfg.rotary_pct)
+    q = apply_rope(q, positions, cfg.rope_theta, rd, cfg.mrope_sections)
+    k = apply_rope(k, positions, cfg.rope_theta, rd, cfg.mrope_sections)
+    q = constrain(q, "batch", "seq", "act_heads", None)
+    k = constrain(k, "batch", "seq", "act_kv_heads", None)
+    v = constrain(v, "batch", "seq", "act_kv_heads", None)
+    return q, k, v
+
+
+def _attn_apply(p, x, cfg: ModelConfig, spec: LayerSpec, positions):
+    """Full-segment attention (training / prefill).  x [B, S, d]."""
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    out = attention(q, k, v, causal=True, window=spec.window,
+                    logit_cap=cfg.attn_logit_cap, scale=cfg.attn_scale,
+                    p_bf16=cfg.attn_p_bf16)
+    out = constrain(out, "batch", "seq", "act_heads", None)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), (k, v)
+
+
+def _mixer_apply(p, x, cfg, spec, positions, state):
+    """Returns (y, kv_for_cache_or_None, new_state)."""
+    if spec.kind == "attn":
+        if state is not None and x.shape[1] == 1:       # decode step
+            from .hntl_attention import KVIndex
+            if isinstance(state, KVIndex):              # HNTL-KV retrieval
+                y, new_state = _attn_retrieval_decode(p, x, cfg, spec,
+                                                      positions, state)
+            else:
+                y, new_state = _attn_decode(p, x, cfg, spec, positions, state)
+            return y, None, new_state
+        y, kv = _attn_apply(p, x, cfg, spec, positions)
+        return y, kv, state
+    if spec.kind == "rglru":
+        y, new_state = rglru.rg_block_apply(p, x, state)
+        return y, None, new_state
+    if spec.kind == "rwkv":
+        y, new_state = rwkv6.timemix_apply(p, x, cfg.rwkv_head_size, state)
+        return y, None, new_state
+    raise ValueError(spec.kind)
+
+
+def _ffn_apply(p, x, cfg: ModelConfig, spec: LayerSpec, state):
+    """Returns (y, aux, new_state)."""
+    from . import ffn
+    if spec.kind == "rwkv":
+        y, new_state = rwkv6.channelmix_apply(p, x, state)
+        return y, 0.0, new_state
+    if cfg.n_experts:
+        y, aux = ffn.moe_apply(p, x, top_k=cfg.moe_top_k,
+                               capacity_factor=cfg.capacity_factor,
+                               norm_topk=cfg.norm_topk)
+        return y, aux, state
+    return ffn.mlp_apply(p, x, cfg.mlp_kind), 0.0, state
+
+
+def _layer_apply(p, x, cfg: ModelConfig, spec: LayerSpec, positions,
+                 state=None):
+    """One (mixer + channel-mix) layer.  Returns (x, aux, kv, new_state)."""
+    _, norm = make_norm(cfg.norm)
+    h = norm(p["pre_norm"], x, cfg.norm_eps)
+    mixer_state = state.get("mixer") if state is not None else None
+    y, kv, new_mixer_state = _mixer_apply(p["mixer"], h, cfg, spec, positions,
+                                          mixer_state)
+    if cfg.post_norm:
+        y = norm(p["post_norm"], y, cfg.norm_eps)
+    x = x + y
+    h = norm(p["mlp_pre_norm"], x, cfg.norm_eps)
+    ffn_state = state.get("ffn") if state is not None else None
+    y, aux, new_ffn_state = _ffn_apply(p["ffn"], h, cfg, spec, ffn_state)
+    if cfg.post_norm:
+        y = norm(p["mlp_post_norm"], y, cfg.norm_eps)
+    x = x + y
+    x = constrain(x, "batch", "seq", "act_embed")
+    new_state = None
+    if state is not None:
+        new_state = {"mixer": new_mixer_state, "ffn": new_ffn_state}
+    return x, aux, kv, new_state
+
+
+# ---------------------------------------------------------------------------
+# Training / prefill forward (scan over groups)
+# ---------------------------------------------------------------------------
+
+
+def _embed_tokens(params, cfg: ModelConfig, tokens, patch_embeds=None):
+    x = embed(params["embedding"], tokens, scale_by_dim=cfg.embed_scale)
+    if patch_embeds is not None:                       # VLM stub frontend
+        npatch = patch_embeds.shape[1]
+        x = jax.lax.dynamic_update_slice(
+            x, patch_embeds.astype(x.dtype), (0, 1, 0))
+        del npatch
+    return constrain(x, "batch", "seq", "act_embed")
+
+
+def _default_positions(cfg: ModelConfig, batch, seq, offset=0):
+    pos = offset + jnp.arange(seq, dtype=jnp.int32)
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if cfg.mrope_sections is not None:
+        pos = jnp.broadcast_to(pos, (3, batch, seq))   # text-only: all equal
+    return pos
+
+
+def forward(params, cfg: ModelConfig, tokens, positions=None,
+            patch_embeds=None):
+    """Full-segment forward.  Returns (hidden [B, S, d], aux_loss)."""
+    b, s = tokens.shape
+    if positions is None:
+        positions = _default_positions(cfg, b, s)
+    x = _embed_tokens(params, cfg, tokens, patch_embeds)
+
+    def group_fn(carry, gp):
+        x, aux = carry
+        for i, spec in enumerate(cfg.pattern):
+            x, a, _, _ = _layer_apply(gp[f"l{i}"], x, cfg, spec, positions)
+            aux = aux + a
+        return (x, aux), None
+
+    body = group_fn
+    if cfg.remat and cfg.remat_policy != "none":
+        policy = {
+            "full": jax.checkpoint_policies.nothing_saveable,
+            "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        }[cfg.remat_policy]
+        body = jax.checkpoint(group_fn, policy=policy)
+    from .lowering import flags
+    if cfg.n_groups and flags().unroll_layers:
+        carry = (x, 0.0)
+        for gi in range(cfg.n_groups):
+            gp = jax.tree_util.tree_map(lambda a: a[gi], params["groups"])
+            carry, _ = body(carry, gp)
+        x, aux = carry
+    elif cfg.n_groups:
+        (x, aux), _ = jax.lax.scan(body, (x, 0.0), params["groups"])
+    else:
+        aux = 0.0
+    for p, spec in zip(params["tail"], cfg.tail_pattern):
+        x, a, _, _ = _layer_apply(p, x, cfg, spec, positions)
+        aux = aux + a
+
+    _, norm = make_norm(cfg.norm)
+    return norm(params["final_norm"], x, cfg.norm_eps), aux
+
+
+def logits_fn(params, cfg: ModelConfig, hidden):
+    table = params.get("lm_head", params["embedding"])
+    logits = unembed(table, hidden)
+    logits = softcap(logits, cfg.final_logit_cap)
+    return constrain(logits, "batch", "seq", "act_vocab")
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    """batch: {"tokens" [B,S] i32, "labels" [B,S] i32 (-100 = pad),
+    optional "positions", "patch_embeds"}."""
+    hidden, aux = forward(params, cfg, batch["tokens"],
+                          batch.get("positions"), batch.get("patch_embeds"))
+    logits = logits_fn(params, cfg, hidden)
+    mask = batch["labels"] >= 0
+    labels = jnp.maximum(batch["labels"], 0)
+    ce = cross_entropy(logits, labels, mask)
+    total = ce + MOE_AUX_WEIGHT * aux if cfg.n_experts else ce
+    return total, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: caches, prefill, decode
+# ---------------------------------------------------------------------------
+
+
+def _cache_len_for(spec: LayerSpec, max_len: int) -> int:
+    if spec.window is not None:
+        return min(spec.window, max_len)               # ring cache
+    return max_len
+
+
+def _layer_cache_init(spec: LayerSpec, cfg: ModelConfig, batch: int,
+                      max_len: int, dtype):
+    if spec.kind == "attn":
+        t = _cache_len_for(spec, max_len)
+        return {"mixer": {
+            "k": jnp.zeros((batch, t, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((batch, t, cfg.n_kv_heads, cfg.head_dim), dtype),
+        }, "ffn": ()}
+    if spec.kind == "rglru":
+        return {"mixer": rglru.rg_state_init(batch, cfg.rnn_dim,
+                                             cfg.conv_width, dtype),
+                "ffn": ()}
+    if spec.kind == "rwkv":
+        st = rwkv6.rwkv_state_init(batch, cfg.d_model, cfg.rwkv_head_size)
+        return {"mixer": st["tm"], "ffn": st["cm"]}
+    raise ValueError(spec.kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    dtype = cfg.compute_dtype
+    group = {f"l{i}": _layer_cache_init(spec, cfg, batch, max_len, dtype)
+             for i, spec in enumerate(cfg.pattern)}
+    stacked = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_groups,) + x.shape)
+        if hasattr(x, "shape") else x, group) if cfg.n_groups else {}
+    tail = tuple(_layer_cache_init(spec, cfg, batch, max_len, dtype)
+                 for spec in cfg.tail_pattern)
+    return {"groups": stacked, "tail": tail}
+
+
+def _ring_positions(t_cache: int, q_pos, window: Optional[int]):
+    """Absolute position stored in each ring-cache slot given query pos.
+
+    Slot i holds the largest p <= q_pos-1 with p % T == i (T = cache size);
+    empty slots map to -1 via the p >= 0 check in decode_attention.
+    """
+    i = jnp.arange(t_cache)[None, :]
+    prev = q_pos[:, None] - 1                           # last written position
+    p = prev - jnp.mod(prev - i, t_cache)
+    return p
+
+
+def _attn_decode(p, x, cfg: ModelConfig, spec: LayerSpec, positions, state):
+    """x [B, 1, d]; state {"k","v" [B,T,hkv,hd]} plus closed-over q_pos.
+
+    positions here is [B, 1] (or [3, B, 1]) absolute position of the token.
+    """
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+    q_pos = (positions[0] if positions.ndim == 3 else positions)[:, 0]
+    t_cache = state["k"].shape[1]
+    slot = jnp.mod(q_pos, t_cache)
+    bidx = jnp.arange(x.shape[0])
+    k_cache = state["k"].at[bidx, slot].set(k_new[:, 0])
+    v_cache = state["v"].at[bidx, slot].set(v_new[:, 0])
+    if spec.window is not None and t_cache <= spec.window:
+        k_pos = _ring_positions(t_cache, q_pos + 1, spec.window)
+    else:
+        k_pos = jnp.broadcast_to(jnp.arange(t_cache)[None, :],
+                                 (x.shape[0], t_cache))
+    out = decode_attention(q, k_cache, v_cache, q_pos, k_pos,
+                           window=spec.window, logit_cap=cfg.attn_logit_cap,
+                           scale=cfg.attn_scale)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, {"k": k_cache, "v": v_cache}
+
+
+def _attn_retrieval_decode(p, x, cfg: ModelConfig, spec: LayerSpec,
+                           positions, idx):
+    """HNTL-KV long-context decode (paper Mode B as attention)."""
+    from .hntl_attention import retrieval_decode_attention
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+    q_pos = (positions[0] if positions.ndim == 3 else positions)[:, 0]
+    out, new_idx = retrieval_decode_attention(q, k_new, v_new, idx, q_pos,
+                                              cfg)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, new_idx
+
+
+def _write_prefill_cache(cache, kv, spec: LayerSpec, seq_len: int):
+    """Scatter prefill K/V into the (possibly ring) cache."""
+    k, v = kv
+    t_cache = cache["k"].shape[1]
+    if seq_len <= t_cache:
+        k_cache = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+    else:                                              # keep the last window
+        pos = jnp.arange(seq_len - t_cache, seq_len)
+        slots = jnp.mod(pos, t_cache)
+        k_cache = cache["k"].at[:, slots].set(
+            k[:, -t_cache:].astype(cache["k"].dtype))
+        v_cache = cache["v"].at[:, slots].set(
+            v[:, -t_cache:].astype(cache["v"].dtype))
+    return {"k": k_cache, "v": v_cache}
+
+
+def prefill(params, cfg: ModelConfig, tokens, positions=None,
+            patch_embeds=None, max_len: Optional[int] = None):
+    """Forward + cache build.  Returns (last-token logits [B, V], caches).
+
+    max_len: cache capacity for subsequent decode_step calls (>= prompt len;
+    defaults to 2*s so decoding can continue past the prompt).
+    """
+    b, s = tokens.shape
+    if max_len is None:
+        max_len = 2 * s
+    assert max_len >= s, (max_len, s)
+    if positions is None:
+        positions = _default_positions(cfg, b, s)
+    x = _embed_tokens(params, cfg, tokens, patch_embeds)
+    caches = init_cache(cfg, b, max_len=max_len)
+
+    def prefill_layer(x, spec, lp, lc):
+        """Apply one layer in prefill mode; returns (x, new layer cache)."""
+        if spec.kind == "attn":
+            x, _, kv, _ = _layer_apply(lp, x, cfg, spec, positions)
+            return x, {"mixer": _write_prefill_cache(lc["mixer"], kv, spec, s),
+                       "ffn": lc["ffn"]}
+        st0 = jax.tree_util.tree_map(jnp.zeros_like, lc)
+        x, _, _, new_state = _layer_apply(lp, x, cfg, spec, positions, st0)
+        return x, new_state
+
+    def group_fn(x, inp):
+        gp, gc = inp
+        new_gc = dict(gc)
+        for i, spec in enumerate(cfg.pattern):
+            x, new_gc[f"l{i}"] = prefill_layer(x, spec, gp[f"l{i}"],
+                                               gc[f"l{i}"])
+        return x, new_gc
+
+    from .lowering import flags
+    if cfg.n_groups and flags().unroll_layers:
+        gcs = []
+        for gi in range(cfg.n_groups):
+            gp = jax.tree_util.tree_map(lambda a: a[gi], params["groups"])
+            gc = jax.tree_util.tree_map(lambda a: a[gi], caches["groups"])
+            x, gc_new = group_fn(x, (gp, gc))
+            gcs.append(gc_new)
+        group_caches = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *gcs)
+    elif cfg.n_groups:
+        x, group_caches = jax.lax.scan(
+            group_fn, x, (params["groups"], caches["groups"]))
+    else:
+        group_caches = {}
+    # unrolled tail (recurrentgemma's 38 = 12*3 + 2)
+    tail_caches = []
+    for p, spec, tc in zip(params["tail"], cfg.tail_pattern, caches["tail"]):
+        x, tc_new = prefill_layer(x, spec, p, tc)
+        tail_caches.append(tc_new)
+
+    _, norm = make_norm(cfg.norm)
+    hidden = norm(params["final_norm"], x, cfg.norm_eps)
+    logits = logits_fn(params, cfg, hidden[:, -1:, :])[:, 0, :]
+    return logits, {"groups": group_caches, "tail": tuple(tail_caches)}
+
+
+def decode_step(params, cfg: ModelConfig, token, caches, pos):
+    """One serving step.  token [B] i32, pos [B] i32 (position of this token).
+
+    Returns (logits [B, V], new caches).
+    """
+    b = token.shape[0]
+    positions = pos[:, None]
+    if cfg.mrope_sections is not None:
+        positions = jnp.broadcast_to(positions, (3, b, 1))
+    x = _embed_tokens(params, cfg, token[:, None])
+
+    def group_fn(x, inp):
+        gp, gc = inp
+        new_gc = dict(gc)
+        for i, spec in enumerate(cfg.pattern):
+            x, _, _, new_state = _layer_apply(gp[f"l{i}"], x, cfg, spec,
+                                              positions, gc[f"l{i}"])
+            new_gc[f"l{i}"] = new_state
+        return x, new_gc
+
+    from .lowering import flags
+    if cfg.n_groups and flags().unroll_layers:
+        gcs = []
+        for gi in range(cfg.n_groups):
+            gp = jax.tree_util.tree_map(lambda a: a[gi], params["groups"])
+            gc = jax.tree_util.tree_map(lambda a: a[gi], caches["groups"])
+            x, gc_new = group_fn(x, (gp, gc))
+            gcs.append(gc_new)
+        group_caches = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *gcs)
+    elif cfg.n_groups:
+        x, group_caches = jax.lax.scan(
+            group_fn, x, (params["groups"], caches["groups"]))
+    else:
+        group_caches = {}
+    tail_caches = []
+    for p, spec, tc in zip(params["tail"], cfg.tail_pattern, caches["tail"]):
+        x, _, _, new_state = _layer_apply(p, x, cfg, spec, positions, tc)
+        tail_caches.append(new_state)
+
+    _, norm = make_norm(cfg.norm)
+    hidden = norm(params["final_norm"], x, cfg.norm_eps)
+    logits = logits_fn(params, cfg, hidden)[:, 0, :]
+    return logits, {"groups": group_caches, "tail": tuple(tail_caches)}

@@ -1,0 +1,112 @@
+"""AdamW + schedules + global-norm clipping, pure JAX.
+
+Moments are f32 regardless of parameter dtype (bf16 params train stably);
+the update is computed in f32 and cast back.  API mirrors optax
+(init/update) so the trainer stays generic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1) -> Callable:
+    def schedule(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") \
+            else jnp.float32(step)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return schedule
+
+
+def constant(lr: float) -> Callable:
+    return lambda step: jnp.float32(lr)
+
+
+# ---------------------------------------------------------------------------
+# Gradient clipping
+# ---------------------------------------------------------------------------
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable                      # step -> lr
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    max_grad_norm: Optional[float] = 1.0
+
+    def init(self, params):
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree_util.tree_map(f32, params),
+                "v": jax.tree_util.tree_map(f32, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, opt_state, params):
+        """Returns (new_params, new_opt_state, metrics)."""
+        if self.max_grad_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, self.max_grad_norm)
+        else:
+            gnorm = global_norm(grads)
+        count = opt_state["count"] + 1
+        cf = count.astype(jnp.float32)
+        lr = self.lr(count)
+        bc1 = 1.0 - self.b1 ** cf
+        bc2 = 1.0 - self.b2 ** cf
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            m_new = self.b1 * m + (1 - self.b1) * gf
+            v_new = self.b2 * v + (1 - self.b2) * gf * gf
+            mh = m_new / bc1
+            vh = v_new / bc2
+            step = mh / (jnp.sqrt(vh) + self.eps)
+            # decoupled weight decay: skip 1-d params (norms, biases)
+            wd = self.weight_decay if p.ndim >= 2 else 0.0
+            p_new = p.astype(jnp.float32) - lr * (step + wd
+                                                  * p.astype(jnp.float32))
+            return p_new.astype(p.dtype), m_new, v_new
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(opt_state["m"])
+        flat_v = treedef.flatten_up_to(opt_state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v
+               in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+        new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+        new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+        new_state = {"m": new_m, "v": new_v, "count": count}
+        return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

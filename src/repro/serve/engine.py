@@ -1,0 +1,173 @@
+"""Batched serving engine: slot-based continuous batching + HNTL-KV promote.
+
+A fixed pool of ``n_slots`` sequences decodes in lock-step (one jit'd
+decode_step per engine tick); finished slots are refilled from a request
+queue with a (padded, batched) prefill.  For long-lived contexts the engine
+*seals* the linear KV cache into an HNTL-KV retrieval index
+(promote-to-retrieval), after which per-step attention cost is
+O(G + P*cap + C) instead of O(S) — the paper's LSM seal applied to KV.
+
+Single-host reference implementation; the pjit'd production path lowers the
+same decode_step on the mesh (launch/serve.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # [S] int32
+    max_new: int = 32
+    out: Optional[list] = None
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model, params, *, n_slots: int = 4,
+                 max_len: int = 512, temperature: float = 0.0, seed: int = 0):
+        self.model = model
+        self.cfg = model.cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.temperature = temperature
+        self.rng = np.random.default_rng(seed)
+        self.caches = model.init_cache(n_slots, max_len)
+        self.pos = np.zeros(n_slots, np.int64)        # next position per slot
+        self.active: List[Optional[Request]] = [None] * n_slots
+        self.queue: List[Request] = []
+        self._decode = jax.jit(model.decode_step)
+        self._token_buf = np.zeros(n_slots, np.int32)
+        self.steps = 0
+
+    # ------------------------------------------------------------- intake
+    def submit(self, prompt, max_new: int = 32) -> Request:
+        req = Request(rid=len(self.queue), prompt=np.asarray(prompt, np.int32),
+                      max_new=max_new, out=[])
+        self.queue.append(req)
+        return req
+
+    def _fill_slot(self, slot: int, req: Request):
+        """Prefill one request into a slot by single-token decode feed.
+
+        (Per-slot prefill keeps the cache pytree identical across slots; a
+        batched prefill path exists for the cold-start case in serve.py.)
+        """
+        for t, tok in enumerate(req.prompt[:-1]):
+            self._token_buf[:] = 0
+            self._token_buf[slot] = tok
+            pos = jnp.asarray(np.maximum(self.pos, 0), jnp.int32)
+            _, self.caches = self._decode(
+                self.params, jnp.asarray(self._token_buf), self.caches,
+                pos)
+            self.pos[slot] += 1
+        self._token_buf[slot] = req.prompt[-1]
+        self.active[slot] = req
+
+    def _refill(self):
+        for slot in range(self.n_slots):
+            if self.active[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                self.pos[slot] = 0
+                self._fill_slot(slot, req)
+
+    # ------------------------------------------------------------- decode
+    def step(self):
+        """One lock-step decode tick across all slots."""
+        self._refill()
+        if all(a is None for a in self.active):
+            return False
+        pos = jnp.asarray(self.pos, jnp.int32)
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(self._token_buf), self.caches, pos)
+        logits = np.asarray(logits, np.float32)
+        if self.temperature > 0:
+            z = logits / self.temperature
+            z = z - z.max(axis=-1, keepdims=True)
+            p = np.exp(z) / np.exp(z).sum(axis=-1, keepdims=True)
+            nxt = np.array([self.rng.choice(len(row), p=row) for row in p],
+                           np.int32)
+        else:
+            nxt = logits.argmax(axis=-1).astype(np.int32)
+        self.steps += 1
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            self.pos[slot] += 1
+            req.out.append(int(nxt[slot]))
+            if len(req.out) >= req.max_new \
+                    or self.pos[slot] >= self.max_len - 1:
+                req.done = True
+                self.active[slot] = None
+                self._token_buf[slot] = 0
+            else:
+                self._token_buf[slot] = nxt[slot]
+        return True
+
+    def run_to_completion(self, max_ticks: int = 10_000):
+        while (self.queue or any(self.active)) and max_ticks > 0:
+            if not self.step():
+                break
+            max_ticks -= 1
+
+
+def promote_to_retrieval(model, caches, cache_len: int):
+    """Seal a linear decode cache into HNTL-KV retrieval indexes.
+
+    For every *global* attention layer whose linear cache holds >= 1 sealed
+    grain of tokens, replace {"k","v"} with a KVIndex built over positions
+    [0, sealed) — the Aperon memtable seal applied to attention state.
+    Windowed/recurrent layers keep their O(window)/O(1) state untouched.
+    """
+    from ..models import hntl_attention as H
+    from ..models.config import LayerSpec
+    cfg = model.cfg
+    cap = cfg.kv_cap
+    sealed = (cache_len // cap) * cap
+    if sealed == 0:
+        return caches
+
+    def promote_layer(spec: LayerSpec, layer_cache, stacked: bool):
+        if spec.kind != "attn" or spec.window is not None:
+            return layer_cache
+        mix = layer_cache["mixer"]
+
+        def one(kc, vc):
+            k_sealed, v_sealed = kc[:, :sealed], vc[:, :sealed]
+            idx = H.build_kv_index(k_sealed, v_sealed, cfg)
+            tail_src_k = kc[:, sealed:sealed + cfg.kv_tail]
+            tail_src_v = vc[:, sealed:sealed + cfg.kv_tail]
+            pad = cfg.kv_tail - tail_src_k.shape[1]
+            if pad > 0:
+                tail_src_k = jnp.pad(tail_src_k,
+                                     ((0, 0), (0, pad), (0, 0), (0, 0)))
+                tail_src_v = jnp.pad(tail_src_v,
+                                     ((0, 0), (0, pad), (0, 0), (0, 0)))
+            return dataclasses.replace(idx, tail_k=tail_src_k[:, :cfg.kv_tail],
+                                       tail_v=tail_src_v[:, :cfg.kv_tail])
+
+        if stacked:  # [G, B, T, kv, hd] — promote per scanned group
+            idxs = [one(mix["k"][g], mix["v"][g])
+                    for g in range(mix["k"].shape[0])]
+            new_mix = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *idxs)
+        else:
+            new_mix = one(mix["k"], mix["v"])
+        return {"mixer": new_mix, "ffn": layer_cache["ffn"]}
+
+    new_groups = dict(caches["groups"])
+    for i, spec in enumerate(model.cfg.pattern):
+        if f"l{i}" in new_groups:
+            new_groups[f"l{i}"] = promote_layer(spec, caches["groups"][f"l{i}"],
+                                                stacked=True)
+    new_tail = tuple(
+        promote_layer(spec, c, stacked=False)
+        for spec, c in zip(model.cfg.tail_pattern, caches["tail"]))
+    return {"groups": new_groups, "tail": new_tail}

@@ -1,0 +1,141 @@
+"""HNTL core: build/search behaviour + property-based invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import HNTLConfig, build, search
+from repro.core import layout, quantize
+from repro.core.flat import flat_search, recall_at_k
+from repro.core.index import int32_safe_qmax
+from repro.data import synthetic as syn
+
+
+@pytest.fixture(scope="module")
+def aniso_index():
+    x = syn.anisotropic_manifold(4000, 128, intrinsic=12, seed=0)
+    cfg = HNTLConfig(d=128, k=16, s=8, n_grains=16, nprobe=6, pool=32,
+                     block=64)
+    idx, info = build(x, cfg)
+    return x, cfg, idx, info
+
+
+def test_build_info(aniso_index):
+    x, cfg, idx, info = aniso_index
+    assert info.var_captured_mean > 0.9          # manifold: local PCA works
+    assert idx.grains.coords.shape[1] == cfg.k   # dim-major Block-SoA
+    assert idx.grains.coords.dtype == jnp.int16
+    assert idx.grains.cap % cfg.block == 0       # whole blocks (pointerless)
+    assert int(idx.routing.sizes.sum()) == x.shape[0]
+
+
+def test_recall_modes(aniso_index):
+    x, cfg, idx, _ = aniso_index
+    q = syn.queries_from(x, 32)
+    truth = flat_search(jnp.asarray(x), jnp.asarray(q), topk=10)
+    ra = recall_at_k(search(idx, q, cfg, topk=10, mode="A").ids, truth.ids)
+    rb = recall_at_k(search(idx, q, cfg, topk=10, mode="B").ids, truth.ids)
+    assert ra > 0.7, ra
+    assert rb >= ra - 0.05                       # re-rank never much worse
+    assert rb > 0.85, rb
+
+
+def test_isotropic_is_adversarial():
+    """Paper Table 1 row 1: isotropic gaussian defeats tangent projection."""
+    x = syn.isotropic_gaussian(2000, 128, seed=1)
+    cfg = HNTLConfig(d=128, k=16, s=0, n_grains=8, nprobe=8, pool=32,
+                     block=64)
+    idx, info = build(x, cfg)
+    assert info.var_captured_mean < 0.4          # k/d-ish, not ~1
+    q = syn.queries_from(x, 16)
+    truth = flat_search(jnp.asarray(x), jnp.asarray(q), topk=10)
+    rb = recall_at_k(search(idx, q, cfg, topk=10, mode="B").ids, truth.ids)
+    ra = recall_at_k(search(idx, q, cfg, topk=10, mode="A").ids, truth.ids)
+    assert rb >= ra                              # re-rank helps when approx is bad
+
+
+def test_mode_b_exact_on_pool_hit(aniso_index):
+    """If the true NN enters the pool, Mode B must rank it first (exact)."""
+    x, cfg, idx, _ = aniso_index
+    q = x[:8]                                     # queries = corpus points
+    res = search(idx, q, cfg, topk=1, mode="B")
+    assert (np.asarray(res.ids)[:, 0] == np.arange(8)).mean() >= 0.9
+    assert (np.asarray(res.dists)[:, 0] < 1e-3).mean() >= 0.9
+
+
+# ---------------------------------------------------------------------------
+# Properties (hypothesis)
+# ---------------------------------------------------------------------------
+
+
+@given(k=st.integers(1, 128))
+def test_int32_safe_qmax_invariant(k):
+    qmax = int32_safe_qmax(k)
+    assert k * (2 * qmax) ** 2 < 2 ** 31
+    assert qmax <= 32767
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.data())
+def test_quantize_roundtrip_error_bound(data):
+    k = data.draw(st.integers(2, 32))
+    n = data.draw(st.integers(4, 64))
+    scale_mag = data.draw(st.floats(0.01, 10.0))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    z = (rng.standard_normal((n, k)) * scale_mag).astype(np.float32)
+    mask = np.ones(n, bool)
+    qmax = int32_safe_qmax(k)
+    scale = quantize.fit_scale(jnp.asarray(z), jnp.asarray(mask), qmax=qmax,
+                               quantile=1.0, mult=1.0)
+    zq = quantize.quantize_coords(jnp.asarray(z), scale, qmax=qmax)
+    deq = quantize.dequantize_coords(zq, scale)
+    # inside the covered range, error <= scale/2 (+ fp eps)
+    err = np.abs(np.asarray(deq) - z)
+    assert (err <= float(scale) * 0.5 + 1e-5).all()
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.data())
+def test_pack_grains_is_bijective(data):
+    n = data.draw(st.integers(1, 200))
+    g = data.draw(st.integers(1, 8))
+    block = data.draw(st.sampled_from([4, 8, 16]))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    assign = rng.integers(0, g, size=n)
+    slot, assign2, cap, counts = layout.pack_grains(assign, g, block)
+    assert cap % block == 0
+    assert counts.sum() == n
+    coords = set(zip(assign2.tolist(), slot.tolist()))
+    assert len(coords) == n                       # no slot collisions
+    assert (slot < cap).all()
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.data())
+def test_envelope_filter_monotone(data):
+    """Larger saturation fraction can only prune more, never less."""
+    k = data.draw(st.integers(2, 32))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    z = rng.standard_normal(k).astype(np.float32) * 100
+    scale = 0.01
+    sat = float(quantize.saturation_fraction(jnp.asarray(z),
+                                             jnp.float32(scale)))
+    assert 0.0 <= sat <= 1.0
+    keep_strict = bool(quantize.envelope_keep(jnp.asarray(z),
+                                              jnp.float32(scale), 0.1))
+    keep_loose = bool(quantize.envelope_keep(jnp.asarray(z),
+                                             jnp.float32(scale), 0.9))
+    assert keep_loose or not keep_strict          # strict => loose
+
+
+def test_search_respects_extra_mask(aniso_index):
+    x, cfg, idx, _ = aniso_index
+    q = x[:4]
+    # forbid the true NN (the point itself) via the in-situ predicate
+    em = np.ones((idx.grains.n_grains, idx.grains.cap), bool)
+    ids = np.asarray(idx.grains.ids)
+    for i in range(4):
+        em[ids == i] = False
+    res = search(idx, q, cfg, topk=5, mode="B",
+                 extra_mask=jnp.asarray(em))
+    assert not np.isin(np.arange(4), np.asarray(res.ids)).any()

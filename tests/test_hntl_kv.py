@@ -1,0 +1,116 @@
+"""HNTL-KV retrieval attention: the paper's Mode B as an LM feature."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import hntl_attention as H
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(get_smoke_config("phi3-mini-3.8b"),
+                              kv_pool=48, kv_nprobe=3)
+    rng = np.random.default_rng(0)
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    S = 8 * cfg.kv_cap
+    centers = rng.standard_normal((8, hd)).astype(np.float32) * 2
+    k_raw = np.repeat(centers[None, :, None, :], cfg.kv_cap,
+                      axis=2).reshape(1, S, 1, hd)
+    k_raw = np.broadcast_to(k_raw, (2, S, KV, hd)).copy()
+    k_raw += 0.1 * rng.standard_normal(k_raw.shape).astype(np.float32)
+    v_raw = rng.standard_normal((2, S, KV, hd)).astype(np.float32)
+    idx = H.build_kv_index(jnp.asarray(k_raw), jnp.asarray(v_raw), cfg)
+    return cfg, rng, centers, k_raw, v_raw, idx
+
+
+def test_index_geometry(setup):
+    cfg, rng, centers, k_raw, v_raw, idx = setup
+    assert idx.n_grains == 8 and idx.cap == cfg.kv_cap
+    assert idx.coords.dtype == jnp.int16
+    assert idx.sealed_len == k_raw.shape[1]
+    # centroids are grain means of the keys
+    g0 = k_raw[0, :cfg.kv_cap, 0].mean(axis=0)
+    np.testing.assert_allclose(np.asarray(idx.centroids[0, 0, 0]), g0,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_retrieval_matches_exact_attention(setup):
+    cfg, rng, centers, k_raw, v_raw, idx = setup
+    B, S = k_raw.shape[0], k_raw.shape[1]
+    q_pos = jnp.full((B,), S, jnp.int32)
+    q = jnp.asarray(centers[3][None, None, None, :]
+                    + 0.05 * rng.standard_normal((B, 1, cfg.n_heads,
+                                                  cfg.head_dim)), jnp.float32)
+    k_new = jnp.asarray(rng.standard_normal((B, 1, cfg.n_kv_heads,
+                                             cfg.head_dim)), jnp.float32)
+    v_new = jnp.asarray(rng.standard_normal(k_new.shape), jnp.float32)
+    out, new_idx = H.retrieval_decode_attention(q, k_new, v_new, idx, q_pos,
+                                                cfg)
+    ref = H.reference_decode_attention(
+        q, jnp.concatenate([jnp.asarray(k_raw), k_new], axis=1),
+        jnp.concatenate([jnp.asarray(v_raw), v_new], axis=1), q_pos, cfg)
+    err = float(jnp.abs(out.astype(jnp.float32)
+                        - ref.astype(jnp.float32)).max())
+    assert err < 0.05, err
+    # tail got the new token
+    assert not bool(jnp.all(new_idx.tail_k == 0))
+
+
+def test_seal_tail_grows_index(setup):
+    cfg, rng, centers, k_raw, v_raw, idx = setup
+    B = k_raw.shape[0]
+    filled = dataclasses.replace(
+        idx,
+        tail_k=jnp.asarray(rng.standard_normal(
+            (B, cfg.kv_tail, cfg.n_kv_heads, cfg.head_dim)), jnp.float32),
+        tail_v=jnp.asarray(rng.standard_normal(
+            (B, cfg.kv_tail, cfg.n_kv_heads, cfg.head_dim)), jnp.float32))
+    sealed = H.seal_tail(filled, cfg.kv_tail, cfg)
+    assert sealed.n_grains == idx.n_grains + cfg.kv_tail // cfg.kv_cap
+    assert sealed.sealed_len == idx.sealed_len + cfg.kv_tail
+
+
+def test_envelope_fallback_no_nan(setup):
+    """A query far outside every tangent patch must not produce NaNs."""
+    cfg, rng, centers, k_raw, v_raw, idx = setup
+    B = k_raw.shape[0]
+    q = jnp.full((B, 1, cfg.n_heads, cfg.head_dim), 1e4, jnp.float32)
+    k_new = jnp.zeros((B, 1, cfg.n_kv_heads, cfg.head_dim), jnp.float32)
+    out, _ = H.retrieval_decode_attention(q, k_new, k_new, idx,
+                                          jnp.full((B,), idx.sealed_len,
+                                                   jnp.int32), cfg)
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_long_context_decode_step_integration():
+    """Full decode_step with a KVIndex mixer cache on a smoke model."""
+    import dataclasses as dc
+    from repro.models import get_model
+    cfg = dc.replace(get_smoke_config("phi3-mini-3.8b"),
+                     n_layers=2, kv_pool=32, kv_nprobe=2)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B = 2
+    S = 4 * cfg.kv_cap
+    rng = np.random.default_rng(1)
+    k_raw = jnp.asarray(rng.standard_normal(
+        (B, S, cfg.n_kv_heads, cfg.head_dim)), jnp.bfloat16)
+    v_raw = jnp.asarray(rng.standard_normal(k_raw.shape), jnp.bfloat16)
+    idx = H.build_kv_index(k_raw.astype(jnp.float32),
+                           v_raw.astype(jnp.float32), cfg)
+    # stack per group (n_groups = 2 layers of 1-layer pattern)
+    caches = {"groups": jax.tree_util.tree_map(
+        lambda x: jnp.stack([x, x]), {"l0": {"mixer": idx, "ffn": ()}}),
+        "tail": ()}
+    tok = jnp.ones((B,), jnp.int32)
+    pos = jnp.full((B,), S + 1, jnp.int32)
+    logits, new_caches = jax.jit(model.decode_step)(params, tok, caches, pos)
+    assert logits.shape == (B, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+    # the mixer cache survives as a KVIndex with an updated tail
+    new_mix = new_caches["groups"]["l0"]["mixer"]
+    assert isinstance(new_mix, H.KVIndex)

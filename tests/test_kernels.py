@@ -1,0 +1,119 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracle.
+
+Kernels run in interpret mode on CPU (the kernel body executes in python),
+which validates the exact code that compiles for TPU.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.hntl_scan import hntl_scan, hntl_scan_single
+from repro.kernels.ref import hntl_scan_ref, hntl_scan_single_ref
+
+
+def _panel(rng, p, q, k, cap, qmag=500):
+    return dict(
+        zq=rng.integers(-qmag, qmag, (p, q, k)).astype(np.int32),
+        rq=rng.random((p, q)).astype(np.float32),
+        coords=rng.integers(-qmag, qmag, (p, k, cap)).astype(np.int16),
+        res=rng.integers(0, 65535, (p, cap)).astype(np.int32),
+        valid=rng.random((p, cap)) > 0.15,
+        scale=(rng.random(p) * 0.01 + 1e-4).astype(np.float32),
+        res_scale=(rng.random(p) * 1e-3 + 1e-5).astype(np.float32),
+    )
+
+
+SWEEP = [
+    # (P, Q, k, cap) — covers tile-aligned, ragged, and tiny shapes
+    (1, 1, 8, 128),
+    (2, 3, 16, 256),
+    (4, 128, 32, 512),
+    (3, 130, 16, 384),       # non-multiples of both tile dims
+    (2, 5, 64, 128),
+    (1, 256, 8, 1024),
+]
+
+
+@pytest.mark.parametrize("p,q,k,cap", SWEEP)
+def test_batched_scan_matches_oracle(rng, p, q, k, cap):
+    a = _panel(rng, p, q, k, cap)
+    out = hntl_scan(a["zq"], a["rq"], a["coords"], a["res"], a["valid"],
+                    a["scale"], a["res_scale"], interpret=True)
+    ref = hntl_scan_ref(a["zq"], a["rq"], a["coords"], a["res"], a["valid"],
+                        a["scale"], a["res_scale"])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("p,k,cap", [(1, 8, 128), (3, 16, 200), (8, 32, 512)])
+def test_single_scan_matches_oracle(rng, p, k, cap):
+    a = _panel(rng, p, 1, k, cap)
+    out = hntl_scan_single(a["zq"][:, 0], a["rq"][:, 0], a["coords"],
+                           a["res"], a["valid"], a["scale"], a["res_scale"],
+                           interpret=True)
+    ref = hntl_scan_single_ref(a["zq"][:, 0], a["rq"][:, 0], a["coords"],
+                               a["res"], a["valid"], a["scale"],
+                               a["res_scale"])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_int32_exactness_at_extremes(rng):
+    """Quantized coords at the int32-safe max must accumulate exactly."""
+    from repro.core.index import int32_safe_qmax
+    k = 32
+    qmax = int32_safe_qmax(k)
+    p, q, cap = 1, 2, 128
+    zq = np.full((p, q, k), qmax, np.int32)
+    coords = np.full((p, k, cap), -qmax, np.int16)
+    a = _panel(rng, p, q, k, cap)
+    out = hntl_scan(zq, a["rq"], coords, a["res"],
+                    np.ones((p, cap), bool), a["scale"], a["res_scale"],
+                    interpret=True)
+    expected = (k * (2 * qmax) ** 2) * (a["scale"] ** 2)[0] \
+        + a["res"][0].astype(np.float32) * a["res_scale"][0] + a["rq"][0][:, None]
+    np.testing.assert_allclose(np.asarray(out[0]), expected, rtol=1e-6)
+    assert k * (2 * qmax) ** 2 < 2 ** 31          # the invariant itself
+
+
+def test_ops_sketch_and_mask_parity(rng):
+    p, q, k, s, cap = 2, 4, 16, 8, 256
+    a = _panel(rng, p, q, k, cap)
+    sq = rng.integers(-100, 100, (p, q, s)).astype(np.int32)
+    sketch = rng.integers(-100, 100, (p, s, cap)).astype(np.int8)
+    sk_scale = (rng.random(p) * 0.01 + 1e-4).astype(np.float32)
+    em = rng.random((p, cap)) > 0.3
+    kw = dict(sq=sq, sketch=sketch, sketch_scale=sk_scale, extra_mask=em)
+    r = ops.scan_batched(a["zq"], a["rq"], a["coords"], a["res"], a["valid"],
+                         a["scale"], a["res_scale"], backend="ref", **kw)
+    i = ops.scan_batched(a["zq"], a["rq"], a["coords"], a["res"], a["valid"],
+                         a["scale"], a["res_scale"], backend="interpret", **kw)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(i),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_planner_scan_fn_via_vmap(rng):
+    """The kernel must survive jax.vmap (the planner's calling convention)."""
+    p, k, cap, Q = 3, 16, 128, 4
+    a = _panel(rng, p, Q, k, cap)
+    fn = ops.make_planner_scan_fn("interpret")
+    out = jax.vmap(lambda z, r: fn(z, r, jnp.asarray(a["coords"]),
+                                   jnp.asarray(a["res"]),
+                                   jnp.asarray(a["valid"]),
+                                   jnp.asarray(a["scale"]),
+                                   jnp.asarray(a["res_scale"])))(
+        jnp.asarray(a["zq"]).transpose(1, 0, 2), jnp.asarray(a["rq"]).T)
+    ref = hntl_scan_ref(a["zq"], a["rq"], a["coords"], a["res"], a["valid"],
+                        a["scale"], a["res_scale"])
+    np.testing.assert_allclose(np.asarray(out).transpose(1, 0, 2),
+                               np.asarray(ref), rtol=1e-5, atol=1e-4)
+
+
+def test_invalid_slots_get_big(rng):
+    a = _panel(rng, 2, 3, 8, 128)
+    a["valid"][:] = False
+    out = hntl_scan(a["zq"], a["rq"], a["coords"], a["res"], a["valid"],
+                    a["scale"], a["res_scale"], interpret=True)
+    assert (np.asarray(out) > 1e37).all()

@@ -1,0 +1,76 @@
+"""Aperon LSM store: seal, zero-copy branch, snapshots, mixed recall."""
+import numpy as np
+import pytest
+
+from repro.core import HNTLConfig
+from repro.core.store import VectorStore
+from repro.data import synthetic as syn
+
+
+@pytest.fixture(scope="module")
+def store():
+    cfg = HNTLConfig(d=64, k=16, s=0, n_grains=8, nprobe=8, pool=64, block=64)
+    st = VectorStore(cfg, seal_threshold=2048, cold_tier=True)
+    x = syn.clustered(5000, 64, n_clusters=32, seed=0)
+    st.add(x[:2048], tags=[1] * 2048,
+           ts=list(np.linspace(0, 1, 2048, endpoint=False)))
+    st.add(x[2048:4096], tags=[2] * 2048,
+           ts=list(np.linspace(1, 2, 2048, endpoint=False)))
+    st.add(x[4096:], tags=[1] * (5000 - 4096),
+           ts=list(np.linspace(2, 3, 5000 - 4096, endpoint=False)))
+    return st, x
+
+
+def test_seal_creates_immutable_segments(store):
+    st, x = store
+    assert len(st._segments) == 2 and st.n_vectors == 5000
+    assert st._segments[0].index.raw is None        # cold-tiered
+    assert st._segments[0].cold_path is not None
+
+
+def test_exact_self_retrieval(store):
+    st, x = store
+    res = st.search(x[:4], topk=1, mode="B")
+    assert (np.asarray(res.ids)[:, 0] == np.arange(4)).all()
+
+
+def test_mixed_recall_tag_filter(store):
+    st, x = store
+    res = st.search(x[:3], topk=5, mode="B", tag_mask=2)
+    ids = np.asarray(res.ids)
+    assert ((ids >= 2048) & (ids < 4096)).all()      # only tag-2 segment
+
+
+def test_mixed_recall_ts_filter(store):
+    st, x = store
+    res = st.search(x[:3], topk=5, mode="B", ts_range=(1.0, 2.0))
+    ids = np.asarray(res.ids)
+    assert ((ids >= 2048) & (ids < 4096)).all()
+
+
+def test_zero_copy_branch(store):
+    st, x = store
+    child = st.branch()
+    new = np.random.default_rng(7).standard_normal((10, 64)).astype(np.float32)
+    new_ids = child.add(new)
+    assert child.n_vectors == st.n_vectors + 10
+    assert st.n_vectors == 5000                      # parent untouched
+    # segments are shared by reference (zero copy)
+    assert child._segments[0] is st._segments[0]
+    # branch sees its own additions
+    res = child.search(new[:1], topk=1, mode="B")
+    assert int(np.asarray(res.ids)[0, 0]) == int(new_ids[0])
+    # parent cannot see them
+    res_p = st.search(new[:1], topk=1, mode="B")
+    assert int(np.asarray(res_p.ids)[0, 0]) != int(new_ids[0])
+
+
+def test_snapshot_is_stable(store):
+    st, x = store
+    man = st.snapshot()
+    st_extra = st.branch()
+    st_extra.add(np.zeros((5, 64), np.float32))
+    res_before = st.search(x[:2], topk=3, mode="B", manifest=man)
+    res_after = st.search(x[:2], topk=3, mode="B", manifest=man)
+    assert np.array_equal(np.asarray(res_before.ids),
+                          np.asarray(res_after.ids))
