@@ -16,6 +16,7 @@ BENCHES = [
     ("table2_scan", "Paper Table 2: Block-SoA vs AoS vs pointer-chase"),
     ("memory_footprint", "Paper 3.2: 66 B/vec vs HNSW graph bytes"),
     ("sift_scale", "Paper 4: SIFT-like scale recall/QPS/DRAM"),
+    ("segment_scale", "LSM store: fused stacked search vs per-segment loop"),
     ("hntl_kv_decode", "HNTL-KV retrieval decode vs exact attention"),
 ]
 

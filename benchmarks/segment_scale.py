@@ -1,0 +1,84 @@
+"""Fused vs looped multi-segment search: queries/sec vs segment count.
+
+The claim under test: the legacy per-segment Python loop pays one jit
+dispatch + host sync + host merge per sealed segment, so QPS decays with
+segment count even when total corpus size is fixed; the fused
+StackedSegments plane issues ONE jitted call regardless of S, so its QPS is
+flat(ish) and the gap widens with S.  Acceptance floor: fused >= 2x looped
+at 16+ segments.
+
+  PYTHONPATH=src python -m benchmarks.segment_scale [--quick]
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import HNTLConfig
+from repro.core.store import VectorStore
+from repro.data import synthetic as syn
+
+
+def _time(fn, iters: int = 10, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+def build_store(n_total: int, d: int, seg_rows: int, seed: int = 0):
+    """n_total rows split into n_total/seg_rows sealed segments."""
+    cfg = HNTLConfig(d=d, k=16, s=0, n_grains=8, nprobe=8, pool=32,
+                     block=64)
+    st = VectorStore(cfg, seal_threshold=seg_rows)
+    x = syn.clustered(n_total, d, n_clusters=32, seed=seed)
+    for lo in range(0, n_total, seg_rows):
+        st.add(x[lo:lo + seg_rows])
+    assert not st._mem
+    return st, x
+
+
+def run(n_total: int = 65536, d: int = 64, nq: int = 32,
+        seg_counts=(1, 2, 4, 8, 16, 32, 64), iters: int = 10):
+    rng = np.random.default_rng(1)
+    rows = []
+    for s in seg_counts:
+        st, x = build_store(n_total, d, n_total // s)
+        q = (x[rng.integers(0, n_total, nq)]
+             + 0.05 * rng.standard_normal((nq, d))).astype(np.float32)
+        man = st.snapshot()
+        fused = lambda: st.search(q, topk=10, mode="B")        # noqa: E731
+        looped = lambda: st.search(q, topk=10, mode="B",       # noqa: E731
+                                   fused=False, manifest=man)
+        t_fused = _time(fused, iters=iters)
+        t_looped = _time(looped, iters=iters)
+        rows.append({
+            "segments": s,
+            "qps_fused": nq / t_fused,
+            "qps_looped": nq / t_looped,
+            "speedup": t_looped / t_fused,
+        })
+        print(f"  S={s:3d}  fused {nq / t_fused:9.1f} q/s   "
+              f"looped {nq / t_looped:9.1f} q/s   "
+              f"speedup {t_looped / t_fused:5.2f}x")
+    return rows
+
+
+def main(quick: bool = False):
+    print("segments, qps_fused, qps_looped, speedup")
+    rows = run(n_total=16384 if quick else 65536,
+               seg_counts=(1, 4, 16) if quick else (1, 2, 4, 8, 16, 32, 64),
+               iters=5 if quick else 10)
+    big = [r for r in rows if r["segments"] >= 16]
+    if big:
+        worst = min(r["speedup"] for r in big)
+        assert worst >= 2.0, \
+            f"fused < 2x looped at 16+ segments (got {worst:.2f}x)"
+    return rows
+
+
+if __name__ == "__main__":
+    main()

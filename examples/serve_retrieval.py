@@ -40,14 +40,17 @@ def main():
     cfg = dataclasses.replace(get_smoke_config("gemma2-2b"), n_layers=2)
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    engine = ServeEngine(model, params, n_slots=2, max_len=128)
+    # memory= attaches the store as the engine's retrieval tier: every
+    # engine.retrieve() is one fused stacked-segment search, however many
+    # sealed segments the document memory has accumulated
+    engine = ServeEngine(model, params, n_slots=2, max_len=128, memory=store)
 
     # ---- requests: embed -> retrieve (Mode B) -> stuff -> generate --------
     for qi in range(3):
         topic = int(rng.integers(0, 8))
         q_embed = topics[topic] + 0.1 * rng.standard_normal(d_embed)
-        res = store.search(q_embed.astype(np.float32)[None], topk=3,
-                           mode="B", tag_mask=1 << topic)
+        res = engine.retrieve(q_embed.astype(np.float32)[None], topk=3,
+                              mode="B", tag_mask=1 << topic)
         hit_ids = np.asarray(res.ids)[0]
         correct = [topic_of[h] == topic for h in hit_ids if h >= 0]
         context = np.concatenate([doc_tokens[h] for h in hit_ids if h >= 0])

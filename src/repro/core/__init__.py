@@ -1,8 +1,8 @@
 """HNTL core: the paper's contribution as a composable JAX module."""
 from .types import (HNTLConfig, HNTLIndex, GrainStore, RoutingPlane,
-                    SearchResult, tree_bytes)
+                    SearchResult, StackedSegments, tree_bytes)
 from .index import build, search, BuildInfo, int32_safe_qmax
 
 __all__ = ["HNTLConfig", "HNTLIndex", "GrainStore", "RoutingPlane",
-           "SearchResult", "tree_bytes", "build", "search", "BuildInfo",
-           "int32_safe_qmax"]
+           "SearchResult", "StackedSegments", "tree_bytes", "build",
+           "search", "BuildInfo", "int32_safe_qmax"]

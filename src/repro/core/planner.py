@@ -18,9 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from . import quantize, routing, scan
-from .types import HNTLIndex, SearchResult
-
-BIG = jnp.float32(3.0e38)
+from .types import BIG, HNTLIndex, SearchResult, StackedSegments
 
 
 def project_queries(index: HNTLIndex, q: jax.Array, gids: jax.Array):
@@ -121,3 +119,99 @@ def search(index: HNTLIndex, q: jax.Array, *, nprobe: int, pool: int,
     neg_e, pos_e = jax.lax.top_k(-exact, topk)
     return SearchResult(ids=jnp.take_along_axis(cand_ids, pos_e, axis=1),
                         dists=-neg_e)
+
+
+# ---------------------------------------------------------------------------
+# Fused multi-segment search (the LSM store's data plane)
+# ---------------------------------------------------------------------------
+
+
+def _mixed_recall_mask(grains, tag_mask, ts_range):
+    """In-jit [G, cap] predicate + [G] routing pushdown from tag/ts filters.
+
+    Returns (extra_mask | None, grain_ok | None).  grain_ok excludes grains
+    with *zero* matching records from routing, so top-P probes are never
+    spent on segments the filter rules out wholesale.
+    """
+    if tag_mask is None and ts_range is None:
+        return None, None
+    keep = grains.valid
+    if tag_mask is not None and grains.tags is not None:
+        keep = jnp.logical_and(
+            keep, (grains.tags & tag_mask.astype(jnp.uint32)) != 0)
+    if ts_range is not None and grains.ts is not None:
+        lo, hi = ts_range
+        keep = jnp.logical_and(keep, (grains.ts >= lo) & (grains.ts < hi))
+    return keep, jnp.any(keep, axis=1)
+
+
+def _translate_rows(stacked: StackedSegments, rows: jax.Array,
+                    dists: jax.Array) -> jax.Array:
+    """Flat raw rows -> global vector ids (-1 for padding / pruned slots)."""
+    ok = jnp.logical_and(rows >= 0, dists < BIG / 2)
+    gid = stacked.gid_of_row[jnp.maximum(rows, 0)]
+    return jnp.where(ok, gid, jnp.int32(-1))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("nprobe", "pool", "topk", "mode", "envelope_frac",
+                     "qeff", "scan_fn", "route_mode", "seg_shape",
+                     "translate"))
+def search_stacked(stacked: StackedSegments, q: jax.Array, *, nprobe: int,
+                   pool: int, topk: int, mode: str = "B",
+                   envelope_frac: float = 0.25, qeff: int = 8191,
+                   scan_fn=None, route_mode: str = "global",
+                   seg_shape: Optional[tuple] = None, translate: bool = True,
+                   tag_mask: Optional[jax.Array] = None,
+                   ts_range: Optional[tuple] = None) -> SearchResult:
+    """Fused HNTL search across *all* sealed segments in one dispatch.
+
+    Replaces the per-segment Python loop: one global routing pass over the
+    concatenated [S*G] routing plane, one vmapped Block-SoA scan over the
+    surviving grains, one merged candidate pool, one Mode-B exact re-rank.
+
+    route_mode: "global" — top-P over every segment's grains at once (work
+      independent of segment count, the production path); "per_segment" —
+      top-P within each segment (legacy loop semantics; needs seg_shape).
+    translate: map flat raw rows to global ids in-jit.  The cold-tier path
+      sets translate=False and resolves rows -> (segment, local) on the host.
+    tag_mask / ts_range: *traced* mixed-recall predicates evaluated in-situ
+      (and pushed down into routing), so filtered search is still one call.
+    """
+    index = stacked.index
+    extra, grain_ok = _mixed_recall_mask(index.grains, tag_mask, ts_range)
+    if route_mode == "per_segment":
+        # no filter pushdown here: the legacy loop routes unmasked and only
+        # filters in-scan, and this mode's contract is loop-identical probes
+        assert seg_shape is not None, "per_segment routing needs seg_shape"
+        gids, _ = routing.route_per_segment(index.routing, q, nprobe,
+                                            seg_shape)
+    else:
+        gids, _ = routing.route(index.routing, q, nprobe,
+                                grain_mask=grain_ok)
+    dists, rows = scan_probed(index, q, gids, envelope_frac, qeff,
+                              scan_fn=scan_fn, extra_mask=extra)
+
+    if mode == "A":
+        neg_d, pos = jax.lax.top_k(-dists, topk)
+        rows_k = jnp.take_along_axis(rows, pos, axis=1)
+        d_k = -neg_d
+        ids = _translate_rows(stacked, rows_k, d_k) if translate else rows_k
+        return SearchResult(ids=ids, dists=d_k)
+
+    # Mode B: merged candidate pool -> exact f32 re-rank over the fused
+    # warm tier (single gather into the concatenated raw array).
+    assert index.raw is not None, \
+        "in-jit Mode B needs the fused warm tier; cold stores re-rank on host"
+    neg_d, pos = jax.lax.top_k(-dists, pool)                  # [Q, C]
+    cand_rows = jnp.take_along_axis(rows, pos, axis=1)
+    cand_ok = neg_d > -BIG / 2
+    cand = index.raw[jnp.maximum(cand_rows, 0)]               # [Q, C, d]
+    exact = jnp.sum((cand - q[:, None, :]) ** 2, axis=-1)
+    exact = jnp.where(cand_ok, exact, BIG)
+    neg_e, pos_e = jax.lax.top_k(-exact, topk)
+    rows_e = jnp.take_along_axis(cand_rows, pos_e, axis=1)
+    d_e = -neg_e
+    ids = _translate_rows(stacked, rows_e, d_e) if translate else rows_e
+    return SearchResult(ids=ids, dists=d_e)

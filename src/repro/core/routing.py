@@ -2,23 +2,65 @@
 
 For a query batch Q we compute ambient-space distances to all G grain
 centroids and keep the top-P (nprobe).  Empty grains are never selected.
+
+For a :class:`~repro.core.types.StackedSegments` super-index the same
+routine routes over the *concatenated* routing plane of every sealed
+segment at once (global top-P); ``route_per_segment`` instead reproduces
+the legacy per-segment-loop semantics (top-P within each segment) inside
+one fused call, which the parity tests rely on.
+
+``grain_mask`` implements mixed-recall *filter pushdown*: grains without a
+single record matching the tag/ts predicate are excluded from routing, so
+probes are never wasted on segments the filter rules out entirely.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from .types import RoutingPlane
+from .types import BIG, RoutingPlane
 
 
-def route(plane: RoutingPlane, q: jax.Array, nprobe: int):
-    """Select the top-P closest grains per query.
-
-    q: [Q, d].  Returns (grain_ids [Q, P] i32, grain_d2 [Q, P] f32).
-    """
+def _centroid_d2(plane: RoutingPlane, q: jax.Array,
+                 grain_mask: Optional[jax.Array]) -> jax.Array:
+    """Masked query->centroid distances.  q [Q, d] -> d2 [Q, G]."""
     c2 = jnp.sum(plane.centroids * plane.centroids, axis=-1)      # [G]
     q2 = jnp.sum(q * q, axis=-1, keepdims=True)                   # [Q, 1]
     d2 = q2 - 2.0 * (q @ plane.centroids.T) + c2[None, :]         # [Q, G]
-    d2 = jnp.where(plane.sizes[None, :] > 0, d2, jnp.float32(3e38))
+    ok = plane.sizes > 0
+    if grain_mask is not None:
+        ok = jnp.logical_and(ok, grain_mask)
+    return jnp.where(ok[None, :], d2, BIG)
+
+
+def route(plane: RoutingPlane, q: jax.Array, nprobe: int,
+          grain_mask: Optional[jax.Array] = None):
+    """Select the top-P closest grains per query.
+
+    q: [Q, d].  grain_mask: optional [G] bool — additional grain validity
+    (filter pushdown).  Returns (grain_ids [Q, P] i32, grain_d2 [Q, P] f32).
+    """
+    d2 = _centroid_d2(plane, q, grain_mask)
     neg_d, idx = jax.lax.top_k(-d2, nprobe)
     return idx.astype(jnp.int32), -neg_d
+
+
+def route_per_segment(plane: RoutingPlane, q: jax.Array, nprobe: int,
+                      seg_shape: tuple,
+                      grain_mask: Optional[jax.Array] = None):
+    """Top-P routing *within each segment* of a stacked routing plane.
+
+    plane holds S*G fused grains; seg_shape = (S, G) recovers the leading
+    segment axis.  Returns (grain_ids [Q, S*P] i32 — indices into the fused
+    [S*G] grain axis — and grain_d2 [Q, S*P] f32).  Matches the legacy
+    per-segment Python loop's probe set exactly, in one call.
+    """
+    s, g = seg_shape
+    d2 = _centroid_d2(plane, q, grain_mask)                       # [Q, S*G]
+    d2 = d2.reshape(q.shape[0], s, g)
+    neg_d, idx = jax.lax.top_k(-d2, min(nprobe, g))               # [Q, S, P]
+    idx = idx + (jnp.arange(s, dtype=idx.dtype) * g)[None, :, None]
+    return (idx.reshape(q.shape[0], -1).astype(jnp.int32),
+            -neg_d.reshape(q.shape[0], -1))

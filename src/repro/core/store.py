@@ -7,39 +7,63 @@ claims graph indexes cannot offer cheaply:
 - **append without re-wiring**: new vectors accumulate in a mutable *memtable*
   scanned exactly; a ``seal()`` freezes it into an immutable HNTL segment.
   Sealed segments are never modified — no global graph re-wiring, ever.
+- **fused multi-segment search**: sealed segments are lazily padded to a
+  common (G, cap) shape and stacked into one :class:`StackedSegments`
+  super-index; a search over any number of segments is then a *single*
+  jitted dispatch (`planner.search_stacked`) — global routing over the
+  concatenated centroid plane, one vmapped Block-SoA scan, one merged
+  candidate pool, one exact re-rank — instead of a Python loop paying one
+  dispatch + host sync per segment.
+- **compaction**: ``compact()`` merges small sealed segments size-tiered
+  (LSM style) into one rebuilt HNTL segment with remapped global ids,
+  bounding both the segment count and the padding waste of the stack.
 - **zero-copy branching**: a branch is a new manifest that *references* the
   same immutable segments (copy-on-write).  Forks cost O(1) and share all
   storage — the paper's "parallel counterfactual simulations".
-- **snapshots**: a snapshot is a frozen manifest (list of segment refs +
-  memtable high-water mark).
+- **snapshots**: a snapshot is a frozen manifest (segment refs + a captured
+  view of the memtable rows), stable across later seals.
 - **mixed recall**: each record can carry a symbolic ``tag`` bitmask and a
   timestamp; predicates are evaluated *in-situ* inside the sequential scan
-  (extra_mask), not as a post-filter.
+  (extra_mask) and pushed down into routing (grains with zero matching
+  records are never probed), not as a post-filter.
 - **tiered cold storage**: sealed segments optionally spill raw vectors to a
-  numpy memmap file (the paper's SSD/mmap tier); Mode B re-rank reads from it.
+  numpy memmap file (the paper's SSD/mmap tier); Mode B re-rank reads the
+  merged candidate pool from it.
 
 The scan/search data plane is jitted JAX; manifest bookkeeping is plain
 Python (build-time / control-plane, exactly like Aperon's Rust control code).
 """
 from __future__ import annotations
 
+import collections
+import contextlib
 import dataclasses
 import os
 import tempfile
+import uuid
+import weakref
 from typing import Optional, Sequence
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import index as index_mod
-from .flat import flat_search
-from .types import HNTLConfig, HNTLIndex, SearchResult
+from . import planner
+from .types import (BIG, HNTLConfig, HNTLIndex, GrainStore, RoutingPlane,
+                    SearchResult, StackedSegments)
+
+_BIG = np.float32(BIG)
 
 
 @dataclasses.dataclass(frozen=True)
 class Segment:
-    """An immutable sealed segment: HNTL index + optional cold raw tier."""
+    """An immutable sealed segment: HNTL index + optional cold raw tier.
+
+    ``id_map`` is set on *compacted* segments, whose member global ids are no
+    longer a contiguous [id_base, id_base + n) range: it maps the segment's
+    local row r to its global id.  Plain sealed segments keep id_map=None
+    and the affine id_base + r mapping.
+    """
 
     seg_id: int
     index: HNTLIndex                 # raw=None when cold-tiered
@@ -49,6 +73,7 @@ class Segment:
     ts: Optional[np.ndarray]         # [n] f32
     cold_path: Optional[str] = None  # memmap file with raw vectors
     d: int = 0
+    id_map: Optional[np.ndarray] = None  # [n] i64 — local row -> global id
 
     def raw_vectors(self) -> np.ndarray:
         if self.index.raw is not None:
@@ -56,13 +81,169 @@ class Segment:
         return np.memmap(self.cold_path, dtype=np.float32, mode="r",
                          shape=(self.n, self.d))
 
+    def global_ids(self) -> np.ndarray:
+        """Global id of every local row, in build order.  [n] i64."""
+        if self.id_map is not None:
+            return self.id_map
+        return np.arange(self.id_base, self.id_base + self.n, dtype=np.int64)
+
+    def map_local(self, local_ids: np.ndarray) -> np.ndarray:
+        """Translate local candidate ids to global ids (-1 stays -1)."""
+        if self.id_map is None:
+            return np.where(local_ids >= 0, local_ids + self.id_base, -1)
+        return np.where(local_ids >= 0,
+                        self.id_map[np.maximum(local_ids, 0)], -1)
+
+
+def _unlink_quiet(path: str) -> None:
+    with contextlib.suppress(OSError):
+        os.unlink(path)
+
+
+def _reclaim_cold_on_gc(seg: "Segment", path: str) -> None:
+    """Delete a segment's cold memmap when its LAST reference dies.
+
+    Branches, snapshots and the stack cache all hold the same Segment
+    *object*, so tying file lifetime to object lifetime is exactly the CoW
+    contract: a compacted-away segment's file survives for as long as any
+    manifest can still search it, then is reclaimed — cold_dir stays
+    bounded under periodic compaction instead of accumulating dead tiers.
+    (POSIX: a concurrently open memmap keeps reading after the unlink.)
+    """
+    weakref.finalize(seg, _unlink_quiet, path)
+
+
+def _finalize(ids: np.ndarray, d: np.ndarray, topk: int) -> SearchResult:
+    """Merge candidate pools into a fixed [Q, topk] result.
+
+    Slots whose distance carries the pruned sentinel (filtered-out, padding,
+    or fewer candidates than topk) come back as id -1, never as a
+    real-looking id — callers filter hits with ``id >= 0``.
+    """
+    order = np.argsort(d, axis=1)[:, :topk]
+    ids = np.take_along_axis(ids, order, axis=1)
+    d = np.take_along_axis(d, order, axis=1)
+    ids = np.where(d < BIG / 2, ids, -1)
+    if ids.shape[1] < topk:
+        pad = topk - ids.shape[1]
+        ids = np.pad(ids, ((0, 0), (0, pad)), constant_values=-1)
+        d = np.pad(d, ((0, 0), (0, pad)), constant_values=_BIG)
+    return SearchResult(ids=jnp.asarray(ids), dists=jnp.asarray(d))
+
 
 @dataclasses.dataclass(frozen=True)
 class Manifest:
-    """Immutable snapshot of a store: segment refs + memtable watermark."""
+    """Immutable snapshot of a store: segment refs + frozen memtable view.
+
+    The memtable rows are captured by reference (tuple of the row arrays),
+    not by watermark alone: a later ``seal()`` clears the store's live
+    memtable, and a snapshot must keep returning exactly what it saw.
+    """
 
     segments: tuple                  # tuple[Segment, ...]
-    mem_n: int                      # live rows of the (shared) memtable
+    mem_n: int                       # number of captured memtable rows
+    mem: tuple = ()                  # tuple[np.ndarray] — captured rows
+    mem_tags: tuple = ()             # tuple[int]
+    mem_ts: tuple = ()               # tuple[float]
+    mem_base: int = 0                # global id of the first captured row
+
+
+# ---------------------------------------------------------------------------
+# StackedSegments assembly (host control-plane; runs once per manifest change)
+# ---------------------------------------------------------------------------
+
+
+def _pad_to(a: np.ndarray, shape: tuple, fill) -> np.ndarray:
+    out = np.full(shape, fill, dtype=a.dtype)
+    out[tuple(slice(0, s) for s in a.shape)] = a
+    return out
+
+
+def stack_segments(segments: Sequence["Segment"]) -> StackedSegments:
+    """Fuse sealed segments into one :class:`StackedSegments` super-index.
+
+    Every segment's GrainStore is padded to the common (G_max, cap_max)
+    envelope, stacked on a leading segment axis, and the (segment, grain)
+    axes fused to [S*G_max] so the stack routes/scans as a single HNTLIndex.
+    Grain ``ids`` are rewritten to *flat rows* of the concatenated raw tier;
+    ``gid_of_row`` carries the flat-row -> global-id translation (i32: the
+    fused plane addresses at most 2^31 vectors).
+
+    Padding grains get sizes=0 / valid=False (never routed, never counted)
+    and scale=1 (no divide-by-zero in the envelope filter).
+    """
+    segs = list(segments)
+    assert segs, "cannot stack an empty segment list"
+    s_n = len(segs)
+    g0 = segs[0].index.grains
+    gmax = max(s.index.grains.n_grains for s in segs)
+    capmax = max(s.index.grains.cap for s in segs)
+    k = g0.k
+    d = g0.mu.shape[1]
+    has_sketch = g0.sketch is not None
+    warm = all(s.index.raw is not None for s in segs)
+
+    offsets = np.zeros(s_n + 1, np.int64)
+    np.cumsum([s.n for s in segs], out=offsets[1:])
+
+    acc = collections.defaultdict(list)
+    for si, seg in enumerate(segs):
+        g = seg.index.grains
+        assert (g.sketch is not None) == has_sketch, \
+            "segments disagree on sketch presence (mixed cfg.s)"
+        acc["coords"].append(_pad_to(np.asarray(g.coords),
+                                     (gmax, k, capmax), 0))
+        acc["res"].append(_pad_to(np.asarray(g.res), (gmax, capmax), 0))
+        acc["valid"].append(_pad_to(np.asarray(g.valid),
+                                    (gmax, capmax), False))
+        local = np.asarray(g.ids, np.int64)
+        flat = np.where(local >= 0, local + offsets[si], -1).astype(np.int32)
+        acc["ids"].append(_pad_to(flat, (gmax, capmax), -1))
+        acc["basis"].append(_pad_to(np.asarray(g.basis), (gmax, d, k), 0.0))
+        acc["mu"].append(_pad_to(np.asarray(g.mu), (gmax, d), 0.0))
+        acc["scale"].append(_pad_to(np.asarray(g.scale), (gmax,), 1.0))
+        acc["res_scale"].append(_pad_to(np.asarray(g.res_scale),
+                                        (gmax,), 1.0))
+        acc["sizes"].append(_pad_to(np.asarray(seg.index.routing.sizes),
+                                    (gmax,), 0))
+        tags = (np.asarray(g.tags) if g.tags is not None
+                else np.zeros((g.n_grains, g.cap), np.uint32))
+        acc["tags"].append(_pad_to(tags, (gmax, capmax), 0))
+        ts = (np.asarray(g.ts) if g.ts is not None
+              else np.zeros((g.n_grains, g.cap), np.float32))
+        acc["ts"].append(_pad_to(ts, (gmax, capmax), 0.0))
+        if has_sketch:
+            s_dim = g.sketch.shape[1]
+            acc["sketch"].append(_pad_to(np.asarray(g.sketch),
+                                         (gmax, s_dim, capmax), 0))
+            acc["sketch_basis"].append(_pad_to(np.asarray(g.sketch_basis),
+                                               (gmax, d, s_dim), 0.0))
+            acc["sketch_scale"].append(_pad_to(np.asarray(g.sketch_scale),
+                                               (gmax,), 1.0))
+
+    def fuse(name):  # [S, G, ...] -> [S*G, ...]
+        a = np.stack(acc[name])
+        return jnp.asarray(a.reshape((s_n * gmax,) + a.shape[2:]))
+
+    grains = GrainStore(
+        coords=fuse("coords"), res=fuse("res"),
+        sketch=fuse("sketch") if has_sketch else None,
+        ids=fuse("ids"), valid=fuse("valid"), basis=fuse("basis"),
+        mu=fuse("mu"), scale=fuse("scale"), res_scale=fuse("res_scale"),
+        sketch_basis=fuse("sketch_basis") if has_sketch else None,
+        sketch_scale=fuse("sketch_scale") if has_sketch else None,
+        tags=fuse("tags"), ts=fuse("ts"))
+    index = HNTLIndex(
+        routing=RoutingPlane(centroids=grains.mu, sizes=fuse("sizes")),
+        grains=grains,
+        raw=jnp.asarray(np.concatenate(
+            [np.asarray(s.index.raw) for s in segs])) if warm else None)
+    gid_of_row = np.concatenate(
+        [s.global_ids() for s in segs]).astype(np.int32)
+    return StackedSegments(
+        index=index,
+        gid_of_row=jnp.asarray(gid_of_row),
+        row_offset=jnp.asarray(offsets.astype(np.int32)))
 
 
 class VectorStore:
@@ -80,6 +261,11 @@ class VectorStore:
         self._mem_ts: list[float] = []
         self._next_id = 0
         self._next_seg = 0
+        self._cold_tag = uuid.uuid4().hex[:8]   # per-writer cold-file suffix
+        # manifest-keyed LRU of StackedSegments (+ host-side row metadata);
+        # entries keep the segment tuple alive so id()-keys cannot be reused.
+        self._stack_cache: "collections.OrderedDict" = \
+            collections.OrderedDict()
 
     # ------------------------------------------------------------- write path
     def add(self, vecs: np.ndarray, tags: Optional[Sequence[int]] = None,
@@ -96,6 +282,25 @@ class VectorStore:
             self.seal()
         return ids
 
+    def _grain_count(self, n: int) -> int:
+        """Grain budget for a segment of n rows: the configured G per
+        seal_threshold rows, scaled up for (compacted) oversize segments,
+        floored so every grain holds at least one block."""
+        scale = max(1, -(-n // max(self.seal_threshold, 1)))     # ceil div
+        return max(1, min(self.cfg.n_grains * scale,
+                          n // max(self.cfg.block, 32)))
+
+    def _write_cold(self, x: np.ndarray, seg_id: int) -> str:
+        # the per-instance tag keeps writers disjoint: branches share
+        # cold_dir AND the _next_seg counter, so seg_id alone would let a
+        # parent and a child overwrite each other's cold files
+        path = os.path.join(self.cold_dir,
+                            f"seg{seg_id:06d}_{self._cold_tag}.raw")
+        mm = np.memmap(path, dtype=np.float32, mode="w+", shape=x.shape)
+        mm[:] = x
+        mm.flush()
+        return path
+
     def seal(self) -> Optional[Segment]:
         """Freeze the memtable into an immutable HNTL segment."""
         if not self._mem:
@@ -104,30 +309,110 @@ class VectorStore:
         tags = np.asarray(self._mem_tags, np.uint32)
         ts = np.asarray(self._mem_ts, np.float32)
         n = x.shape[0]
-        g = max(1, min(self.cfg.n_grains, n // max(self.cfg.block, 32)))
-        cfg = dataclasses.replace(self.cfg, n_grains=g)
+        cfg = dataclasses.replace(self.cfg, n_grains=self._grain_count(n))
         idx, _ = index_mod.build(x, cfg, tags=tags, ts=ts,
                                  keep_raw=not self.cold_tier)
-        cold_path = None
-        if self.cold_tier:
-            cold_path = os.path.join(
-                self.cold_dir, f"seg{self._next_seg:06d}.raw")
-            mm = np.memmap(cold_path, dtype=np.float32, mode="w+",
-                           shape=x.shape)
-            mm[:] = x
-            mm.flush()
+        cold_path = (self._write_cold(x, self._next_seg)
+                     if self.cold_tier else None)
         # ids were assigned sequentially; the memtable holds the last n of them
         seg = Segment(
             seg_id=self._next_seg, index=idx, n=n, id_base=self._next_id - n,
             tags=tags, ts=ts, cold_path=cold_path, d=x.shape[1])
+        if cold_path is not None:
+            _reclaim_cold_on_gc(seg, cold_path)
         self._segments.append(seg)
         self._next_seg += 1
         self._mem, self._mem_tags, self._mem_ts = [], [], []
         return seg
 
+    # ------------------------------------------------------------ compaction
+    def compact(self, *, fanin: int = 4, tier_factor: int = 4,
+                max_rounds: int = 16) -> int:
+        """Size-tiered LSM compaction of sealed segments.
+
+        Segments are bucketed into size tiers (tier t holds segments of
+        roughly seal_threshold * tier_factor^t rows).  Whenever a tier
+        accumulates ``fanin`` members, the ``fanin`` oldest are merged into
+        one rebuilt HNTL segment — raw vectors concatenated, grains
+        re-partitioned at the merged scale, global ids remapped through
+        ``id_map`` and the cold tier consolidated into a single memmap.
+        Rounds repeat until no tier is full (a merge can cascade upward).
+
+        Keeps the segment count O(fanin * log_tier_factor(N)) so the stacked
+        search plane stays small and its padding waste bounded.  Compaction
+        is copy-on-write like every other manifest op: older snapshots and
+        branches keep referencing the pre-merge segments.
+
+        Returns the number of merges performed.
+        """
+        if fanin < 2:
+            raise ValueError(f"fanin must be >= 2, got {fanin}")
+        if tier_factor < 2:
+            raise ValueError(f"tier_factor must be >= 2, got {tier_factor}")
+        merges = 0
+        for _ in range(max_rounds):
+            if not self._compact_once(fanin, tier_factor):
+                break
+            merges += 1
+        return merges
+
+    def _tier_of(self, n: int, tier_factor: int) -> int:
+        t, size = 0, max(self.seal_threshold, 1)
+        while n >= size * tier_factor:
+            size *= tier_factor
+            t += 1
+        return t
+
+    def _compact_once(self, fanin: int, tier_factor: int) -> bool:
+        tiers: dict[int, list[Segment]] = collections.defaultdict(list)
+        for seg in self._segments:
+            tiers[self._tier_of(seg.n, tier_factor)].append(seg)
+        for t in sorted(tiers):
+            if len(tiers[t]) < fanin:
+                continue
+            group = sorted(tiers[t], key=lambda s: s.seg_id)[:fanin]
+            merged = self._merge_segments(group)
+            gone = {id(s) for s in group}
+            pos = min(i for i, s in enumerate(self._segments)
+                      if id(s) in gone)
+            kept = [s for s in self._segments if id(s) not in gone]
+            kept.insert(pos, merged)
+            self._segments = kept
+            return True
+        return False
+
+    def _merge_segments(self, group: Sequence[Segment]) -> Segment:
+        """Rebuild ``group`` as one segment with remapped global ids."""
+        x = np.concatenate([np.asarray(s.raw_vectors(), np.float32)
+                            for s in group])
+        gids = np.concatenate([s.global_ids() for s in group])
+        tags = np.concatenate(
+            [s.tags if s.tags is not None else np.zeros(s.n, np.uint32)
+             for s in group])
+        ts = np.concatenate(
+            [s.ts if s.ts is not None else np.zeros(s.n, np.float32)
+             for s in group])
+        n, d = x.shape
+        cfg = dataclasses.replace(self.cfg, n_grains=self._grain_count(n))
+        idx, _ = index_mod.build(x, cfg, tags=tags, ts=ts,
+                                 keep_raw=not self.cold_tier)
+        cold_path = (self._write_cold(x, self._next_seg)
+                     if self.cold_tier else None)
+        seg = Segment(seg_id=self._next_seg, index=idx, n=n, id_base=0,
+                      tags=tags, ts=ts, cold_path=cold_path, d=d,
+                      id_map=gids.astype(np.int64))
+        if cold_path is not None:
+            _reclaim_cold_on_gc(seg, cold_path)
+        self._next_seg += 1
+        return seg
+
     # ---------------------------------------------------------- control plane
     def snapshot(self) -> Manifest:
-        return Manifest(segments=tuple(self._segments), mem_n=len(self._mem))
+        return Manifest(segments=tuple(self._segments),
+                        mem_n=len(self._mem), mem=tuple(self._mem),
+                        mem_tags=tuple(self._mem_tags),
+                        mem_ts=tuple(self._mem_ts),
+                        mem_base=self._next_id - len(self._mem))
 
     def branch(self) -> "VectorStore":
         """Zero-copy fork: new store sharing all sealed segments (CoW)."""
@@ -145,21 +430,183 @@ class VectorStore:
     def n_vectors(self) -> int:
         return sum(s.n for s in self._segments) + len(self._mem)
 
+    @property
+    def n_segments(self) -> int:
+        return len(self._segments)
+
     # ------------------------------------------------------------- read path
+    def _stacked_for(self, segments: tuple):
+        """Stacked super-index for a manifest, rebuilt lazily on change."""
+        key = tuple(id(s) for s in segments)
+        hit = self._stack_cache.get(key)
+        if hit is not None:
+            self._stack_cache.move_to_end(key)
+            return hit[1], hit[2], hit[3]
+        stacked = stack_segments(segments)
+        offsets = np.asarray(stacked.row_offset, np.int64)
+        gids = np.asarray(stacked.gid_of_row, np.int64)
+        self._stack_cache[key] = (tuple(segments), stacked, offsets, gids)
+        # each entry pins a full device copy of the fused plane (including
+        # the concatenated warm raw tier), so keep the LRU tiny: 2 covers
+        # the common parent+branch / live+snapshot alternation
+        while len(self._stack_cache) > 2:
+            self._stack_cache.popitem(last=False)
+        return stacked, offsets, gids
+
     def search(self, q: np.ndarray, *, topk: int = 10, mode: str = "B",
                tag_mask: Optional[int] = None,
                ts_range: Optional[tuple] = None,
-               manifest: Optional[Manifest] = None, scan_fn=None
+               manifest: Optional[Manifest] = None, scan_fn=None,
+               nprobe: Optional[int] = None, pool: Optional[int] = None,
+               fused: bool = True, route_mode: str = "global"
                ) -> SearchResult:
         """Unified mixed-recall search across sealed segments + memtable.
 
-        tag_mask: keep records with (tag & tag_mask) != 0 (in-situ predicate).
+        All sealed segments are searched by ONE jitted call on the stacked
+        super-index (``fused=True``, the default); ``fused=False`` keeps the
+        legacy per-segment loop (parity tests, benchmarks).
+
+        tag_mask: keep records with (tag & tag_mask) != 0 (in-situ predicate,
+          pushed down into routing).
         ts_range: (lo, hi) keep lo <= ts < hi.
+        nprobe / pool: override cfg.nprobe / cfg.pool for the fused plane
+          (e.g. exhaustive probing for parity checks).
+        route_mode: "global" (top-P over all segments' grains at once) or
+          "per_segment" (legacy loop probe set, still one dispatch).
         """
         man = manifest or self.snapshot()
         q = np.asarray(q, np.float32)
         if q.ndim == 1:
             q = q[None]
+        if not fused:
+            return self._search_looped(q, man, topk=topk, mode=mode,
+                                       tag_mask=tag_mask, ts_range=ts_range,
+                                       scan_fn=scan_fn)
+        all_ids, all_d = [], []
+        if man.segments:
+            ids_s, d_s = self._search_segments_fused(
+                q, man.segments, topk=topk, mode=mode, tag_mask=tag_mask,
+                ts_range=ts_range, scan_fn=scan_fn, nprobe=nprobe, pool=pool,
+                route_mode=route_mode)
+            all_ids.append(ids_s)
+            all_d.append(d_s)
+        return self._merge_with_memtable(q, man, all_ids, all_d, topk,
+                                         tag_mask, ts_range)
+
+    def _merge_with_memtable(self, q, man: Manifest, all_ids, all_d, topk,
+                             tag_mask, ts_range) -> SearchResult:
+        """Shared result tail of the fused and looped paths: append the
+        memtable pool, handle the empty store, finalize to [Q, topk]."""
+        mem_ids, mem_d = self._search_memtable(q, man, topk, tag_mask,
+                                               ts_range)
+        if mem_ids is not None:
+            all_ids.append(mem_ids)
+            all_d.append(mem_d)
+        if not all_ids:
+            shape = (q.shape[0], topk)
+            return SearchResult(ids=jnp.full(shape, -1, jnp.int32),
+                                dists=jnp.full(shape, _BIG, jnp.float32))
+        return _finalize(np.concatenate(all_ids, axis=1),
+                         np.concatenate(all_d, axis=1), topk)
+
+    def _fused_statics(self, segments: tuple, stacked: StackedSegments,
+                       topk: int, nprobe: Optional[int],
+                       pool: Optional[int], route_mode: str):
+        """Clamp the jit-static knobs to the stacked plane's actual shape."""
+        s_n = len(segments)
+        gmax = stacked.index.grains.n_grains // s_n
+        capmax = stacked.index.grains.cap
+        want_probe = nprobe if nprobe is not None else self.cfg.nprobe
+        if route_mode == "per_segment":
+            probe = min(want_probe, gmax)
+            n_slots = s_n * probe * capmax
+        else:
+            probe = min(want_probe, s_n * gmax)
+            n_slots = probe * capmax
+        # pool >= topk always: Mode B top-k runs over the pool's candidates
+        want_pool = pool if pool is not None else self.cfg.pool
+        pool_eff = min(max(want_pool, topk), n_slots)
+        return probe, pool_eff, min(topk, pool_eff), (s_n, gmax)
+
+    def _search_segments_fused(self, q, segments, *, topk, mode, tag_mask,
+                               ts_range, scan_fn, nprobe, pool, route_mode):
+        """One jitted search over the stacked plane.  Returns numpy
+        (global_ids [Q, k], dists [Q, k])."""
+        stacked, offsets, gids_host = self._stacked_for(segments)
+        probe, pool_eff, topk_eff, seg_shape = self._fused_statics(
+            segments, stacked, topk, nprobe, pool, route_mode)
+        qeff = index_mod.int32_safe_qmax(self.cfg.k, self.cfg.coord_bits)
+        tm = jnp.uint32(tag_mask) if tag_mask is not None else None
+        tr = ((jnp.float32(ts_range[0]), jnp.float32(ts_range[1]))
+              if ts_range is not None else None)
+        kw = dict(nprobe=probe, envelope_frac=self.cfg.envelope_frac,
+                  qeff=qeff, scan_fn=scan_fn, route_mode=route_mode,
+                  seg_shape=seg_shape, tag_mask=tm, ts_range=tr)
+        qj = jnp.asarray(q)
+
+        if mode == "B" and stacked.index.raw is None:
+            # Cold tier: one jitted approximate scan over the whole stack,
+            # then ONE merged-pool exact re-rank from the per-segment memmaps
+            # (host gather — the mmap tier is not addressable from jit).
+            res = planner.search_stacked(stacked, qj, pool=pool_eff,
+                                         topk=pool_eff, mode="A",
+                                         translate=False, **kw)
+            rows = np.asarray(res.ids)
+            ok = (rows >= 0) & (np.asarray(res.dists) < BIG / 2)
+            rows_c = np.maximum(rows, 0)
+            seg_idx = np.searchsorted(offsets, rows_c, side="right") - 1
+            local = rows_c - offsets[seg_idx]
+            cand = np.zeros(rows.shape + (q.shape[1],), np.float32)
+            for si, seg in enumerate(segments):
+                m = ok & (seg_idx == si)
+                if m.any():
+                    cand[m] = seg.raw_vectors()[local[m]]
+            exact = np.sum((cand - q[:, None, :]) ** 2, axis=-1)
+            exact = np.where(ok, exact, _BIG)
+            order = np.argsort(exact, axis=1)[:, :topk_eff]
+            ids = np.where(ok, gids_host[rows_c], -1)
+            return (np.take_along_axis(ids, order, axis=1),
+                    np.take_along_axis(exact, order, axis=1))
+
+        res = planner.search_stacked(stacked, qj, pool=pool_eff,
+                                     topk=topk_eff, mode=mode, **kw)
+        return (np.asarray(res.ids, np.int64),
+                np.asarray(res.dists, np.float32))
+
+    def _search_memtable(self, q, man: Manifest, topk, tag_mask, ts_range):
+        """Hot tail: exact scan (the paper's unsealed memtable semantics).
+
+        Reads the manifest's *captured* rows, never the live memtable — a
+        seal() after snapshot() must not change what the snapshot returns.
+        """
+        if man.mem_n <= 0:
+            return None, None
+        mem = np.stack(man.mem[:man.mem_n])
+        keep = np.ones(man.mem_n, bool)
+        if tag_mask is not None:
+            keep &= (np.asarray(man.mem_tags[:man.mem_n], np.uint32)
+                     & np.uint32(tag_mask)) != 0
+        if ts_range is not None:
+            tsv = np.asarray(man.mem_ts[:man.mem_n], np.float32)
+            keep &= (tsv >= ts_range[0]) & (tsv < ts_range[1])
+        base = man.mem_base
+        # mask *before* top-k so filtered-out rows cannot shadow valid ones
+        d_all = np.sum((mem[None, :, :] - q[:, None, :]) ** 2, axis=-1)
+        d_all = np.where(keep[None, :], d_all, _BIG)
+        kk = min(topk, man.mem_n)
+        order = np.argsort(d_all, axis=1)[:, :kk]
+        return (order.astype(np.int64) + base,
+                np.take_along_axis(d_all, order, axis=1))
+
+    # --------------------------------------------------- legacy looped path
+    def _search_looped(self, q, man: Manifest, *, topk, mode, tag_mask,
+                       ts_range, scan_fn) -> SearchResult:
+        """Per-segment Python-loop search (pre-fusion data plane).
+
+        Kept as the parity oracle for `search` and the baseline for
+        benchmarks/segment_scale.py: one jit dispatch + host sync per
+        segment, per-segment top-k merged by a host argsort.
+        """
         all_ids, all_d = [], []
         for seg in man.segments:
             extra = None
@@ -181,10 +628,10 @@ class VectorStore:
                 cand = np.asarray(res.ids)
                 # candidates pruned in-scan (validity / mixed-recall mask) come
                 # back with approx dist = BIG; keep them pruned through re-rank
-                cand_ok = (cand >= 0) & (np.asarray(res.dists) < 1e38)
+                cand_ok = (cand >= 0) & (np.asarray(res.dists) < BIG / 2)
                 exact = np.sum(
                     (raw[np.maximum(cand, 0)] - q[:, None, :]) ** 2, axis=-1)
-                exact = np.where(cand_ok, exact, 3e38)
+                exact = np.where(cand_ok, exact, _BIG)
                 order = np.argsort(exact, axis=1)[:, :topk]
                 ids = np.take_along_axis(cand, order, axis=1)
                 d = np.take_along_axis(exact, order, axis=1)
@@ -193,30 +640,7 @@ class VectorStore:
                                        mode=mode, scan_fn=scan_fn,
                                        extra_mask=extra)
                 ids, d = np.asarray(res.ids), np.asarray(res.dists)
-            ids = np.where(ids >= 0, ids + seg.id_base, -1)
-            all_ids.append(ids)
+            all_ids.append(seg.map_local(ids))
             all_d.append(d)
-        if man.mem_n > 0:
-            # hot tail: exact scan (the paper's unsealed memtable semantics)
-            mem = np.stack(self._mem[:man.mem_n])
-            keep = np.ones(man.mem_n, bool)
-            if tag_mask is not None:
-                keep &= (np.asarray(self._mem_tags[:man.mem_n], np.uint32)
-                         & np.uint32(tag_mask)) != 0
-            if ts_range is not None:
-                tsv = np.asarray(self._mem_ts[:man.mem_n], np.float32)
-                keep &= (tsv >= ts_range[0]) & (tsv < ts_range[1])
-            base = self._next_id - len(self._mem)
-            # mask *before* top-k so filtered-out rows cannot shadow valid ones
-            d_all = np.sum((mem[None, :, :] - q[:, None, :]) ** 2, axis=-1)
-            d_all = np.where(keep[None, :], d_all, 3e38)
-            kk = min(topk, man.mem_n)
-            order = np.argsort(d_all, axis=1)[:, :kk]
-            all_ids.append(order.astype(np.int64) + base)
-            all_d.append(np.take_along_axis(d_all, order, axis=1))
-        ids = np.concatenate(all_ids, axis=1)
-        d = np.concatenate(all_d, axis=1)
-        order = np.argsort(d, axis=1)[:, :topk]
-        return SearchResult(
-            ids=jnp.asarray(np.take_along_axis(ids, order, axis=1)),
-            dists=jnp.asarray(np.take_along_axis(d, order, axis=1)))
+        return self._merge_with_memtable(q, man, all_ids, all_d, topk,
+                                         tag_mask, ts_range)

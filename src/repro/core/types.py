@@ -12,6 +12,13 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+# Pruned/invalid-slot distance sentinel, shared by the jit data plane
+# (planner, routing) and the host merge (store).  A slot is pruned iff its
+# distance >= BIG / 2; real squared distances never approach that.  Plain
+# float, not a jnp constant: a module-level jnp array would become a leaked
+# tracer if this module were first imported inside an active trace.
+BIG = 3.0e38
+
 # ---------------------------------------------------------------------------
 # Static configuration
 # ---------------------------------------------------------------------------
@@ -128,6 +135,39 @@ class HNTLIndex:
     @property
     def n_vectors(self) -> int:
         return int(self.raw.shape[0]) if self.raw is not None else -1
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class StackedSegments:
+    """All sealed segments of a store fused into one searchable super-index.
+
+    Each segment's ``GrainStore`` is padded to a common ``(G_max, cap_max)``
+    shape and stacked on a leading segment axis; the segment and grain axes
+    are then kept *fused* (``[S*G_max, ...]``) so the whole stack routes and
+    scans exactly like a single ``HNTLIndex`` — one jitted dispatch for any
+    number of segments, instead of a Python loop of per-segment searches.
+
+    Id plumbing: ``index.grains.ids`` holds *flat raw rows* (offsets into the
+    concatenated, unpadded raw tier), and ``gid_of_row`` translates a flat
+    row back to the store's global vector id.  This indirection survives
+    compaction, where a merged segment's global ids are no longer contiguous.
+
+    ``index.raw`` is the concatenated ``[N_total, d]`` warm tier, or ``None``
+    when any member segment is cold-tiered (Mode B then re-ranks the merged
+    candidate pool on the host from the per-segment memmaps).
+
+    Padding grains have ``routing.sizes == 0`` (never routed) and
+    ``valid == False`` everywhere (never scanned).
+    """
+
+    index: HNTLIndex           # fused view: [S*G_max] grains, ids = flat rows
+    gid_of_row: jax.Array      # [N_total] i32 — flat raw row -> global id
+    row_offset: jax.Array      # [S+1] i32 — raw-row range of each segment
+
+    @property
+    def n_segments(self) -> int:
+        return self.row_offset.shape[0] - 1
 
 
 @jax.tree_util.register_dataclass

@@ -22,6 +22,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:                         # jax >= 0.5/0.6: stable API, check_vma kwarg
+    _shard_map = jax.shard_map
+    _SM_CHECK = "check_vma"
+except AttributeError:       # older jax: experimental API, check_rep kwarg
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _SM_CHECK = "check_rep"
+
 
 def _psum_bf16(g, axis):
     return jax.lax.psum(g.astype(jnp.bfloat16), axis).astype(jnp.float32)
@@ -85,8 +92,8 @@ def make_compressed_train_step(model, optimizer, mesh: Mesh, *,
             jax.tree_util.tree_map(batch_spec, batch),
         )
         out_specs = (in_specs[0], in_specs[1], in_specs[2], rep)
-        fn = jax.shard_map(local_step, mesh=mesh, in_specs=in_specs,
-                           out_specs=out_specs, check_vma=False)
+        fn = _shard_map(local_step, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs, **{_SM_CHECK: False})
         return fn(params, opt_state, err, batch)
 
     def init_error(params):

@@ -4,7 +4,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-NEG_BIG = jnp.float32(3.0e38)
+NEG_BIG = 3.0e38   # plain float: a module-level jnp constant would become a
+# tracer if this module is first imported inside an active trace
 
 
 def hntl_scan_ref(zq, rq, coords, res, valid, scale, res_scale):

@@ -19,6 +19,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.store import VectorStore
+from ..core.types import SearchResult
+
 
 @dataclasses.dataclass
 class Request:
@@ -31,13 +34,15 @@ class Request:
 
 class ServeEngine:
     def __init__(self, model, params, *, n_slots: int = 4,
-                 max_len: int = 512, temperature: float = 0.0, seed: int = 0):
+                 max_len: int = 512, temperature: float = 0.0, seed: int = 0,
+                 memory: Optional[VectorStore] = None):
         self.model = model
         self.cfg = model.cfg
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
         self.temperature = temperature
+        self.memory = memory        # optional RAG tier (fused stacked search)
         self.rng = np.random.default_rng(seed)
         self.caches = model.init_cache(n_slots, max_len)
         self.pos = np.zeros(n_slots, np.int64)        # next position per slot
@@ -64,8 +69,11 @@ class ServeEngine:
             self._token_buf[:] = 0
             self._token_buf[slot] = tok
             pos = jnp.asarray(np.maximum(self.pos, 0), jnp.int32)
+            # .copy(): CPU numpy->jax conversion can be zero-copy, and the
+            # reused buffer is mutated next tick while the async decode may
+            # still read the aliased memory (nondeterministic output)
             _, self.caches = self._decode(
-                self.params, jnp.asarray(self._token_buf), self.caches,
+                self.params, jnp.asarray(self._token_buf.copy()), self.caches,
                 pos)
             self.pos[slot] += 1
         self._token_buf[slot] = req.prompt[-1]
@@ -86,7 +94,8 @@ class ServeEngine:
             return False
         pos = jnp.asarray(self.pos, jnp.int32)
         logits, self.caches = self._decode(
-            self.params, jnp.asarray(self._token_buf), self.caches, pos)
+            self.params, jnp.asarray(self._token_buf.copy()), self.caches,
+            pos)
         logits = np.asarray(logits, np.float32)
         if self.temperature > 0:
             z = logits / self.temperature
@@ -116,6 +125,21 @@ class ServeEngine:
             if not self.step():
                 break
             max_ticks -= 1
+
+    # ---------------------------------------------------------- retrieval
+    def retrieve(self, q_embed, *, topk: int = 4, mode: str = "B",
+                 tag_mask: Optional[int] = None,
+                 ts_range: Optional[tuple] = None) -> SearchResult:
+        """Retrieve context docs from the attached vector memory.
+
+        One jitted stacked-segment search regardless of how many sealed
+        segments the memory holds — the serving tier never pays a
+        per-segment dispatch on the request path.
+        """
+        assert self.memory is not None, "engine built without memory="
+        q = np.asarray(q_embed, np.float32)
+        return self.memory.search(q, topk=topk, mode=mode,
+                                  tag_mask=tag_mask, ts_range=ts_range)
 
 
 def promote_to_retrieval(model, caches, cache_len: int):
@@ -153,11 +177,10 @@ def promote_to_retrieval(model, caches, cache_len: int):
             return dataclasses.replace(idx, tail_k=tail_src_k[:, :cfg.kv_tail],
                                        tail_v=tail_src_v[:, :cfg.kv_tail])
 
-        if stacked:  # [G, B, T, kv, hd] — promote per scanned group
-            idxs = [one(mix["k"][g], mix["v"][g])
-                    for g in range(mix["k"].shape[0])]
-            new_mix = jax.tree_util.tree_map(
-                lambda *xs: jnp.stack(xs), *idxs)
+        if stacked:  # [G, B, T, kv, hd] — one vmapped build over all scanned
+            # groups (the stacked-segment fusion applied to the promote path:
+            # no per-group Python-loop dispatch + host-side re-stack)
+            new_mix = jax.vmap(one)(mix["k"], mix["v"])
         else:
             new_mix = one(mix["k"], mix["v"])
         return {"mixer": new_mix, "ffn": layer_cache["ffn"]}

@@ -22,27 +22,46 @@ def served():
 
 
 def test_engine_matches_manual_greedy(served):
+    """Engine bookkeeping oracle: a hand-rolled lock-step decode with the
+    same batch shape must reproduce the engine's greedy output exactly.
+
+    The oracle intentionally runs the engine's *own* compiled decode_step at
+    the engine's batch shape: separate XLA compilations of the same function
+    can fuse differently, and on an untrained smoke model (top-2 logit
+    margins down to ~5e-5, chaotic error amplification across steps) that
+    makes exact greedy-token comparison between two compilations flaky.
+    Each step's token buffer is .copy()'d before jnp.asarray — CPU
+    numpy->jax conversion can alias the host buffer, so mutating a reused
+    buffer races the previous async decode.
+    """
     cfg, model, params = served
     rng = np.random.default_rng(0)
     prompt = rng.integers(0, cfg.vocab, size=8)
+    n_slots, max_new = 2, 6
+    engine = ServeEngine(model, params, n_slots=n_slots, max_len=64)
 
-    # manual single-sequence greedy decode
-    tokens = jnp.asarray(prompt[None], jnp.int32)
-    logits, caches = model.prefill(params, tokens, max_len=64)
+    # manual greedy decode, same executable + lock-step batch as the engine
+    caches = model.init_cache(n_slots, 64)
+    decode = engine._decode
+    token_buf = np.zeros(n_slots, np.int32)
+    pos = np.zeros(n_slots, np.int64)
+    for tok in prompt[:-1]:                       # per-slot prefill feed
+        token_buf[:] = 0
+        token_buf[0] = tok
+        _, caches = decode(params, jnp.asarray(token_buf.copy()), caches,
+                           jnp.asarray(np.maximum(pos, 0), jnp.int32))
+        pos[0] += 1
+    token_buf[0] = prompt[-1]
     out_manual = []
-    cur = int(jnp.argmax(logits[0]))
-    pos = len(prompt)
-    out_manual.append(cur)
-    for _ in range(5):
-        logits, caches = model.decode_step(
-            params, jnp.asarray([cur], jnp.int32), caches,
-            jnp.asarray([pos], jnp.int32))
-        cur = int(jnp.argmax(logits[0]))
+    for _ in range(max_new):
+        logits, caches = decode(params, jnp.asarray(token_buf.copy()), caches,
+                                jnp.asarray(pos, jnp.int32))
+        cur = int(np.asarray(logits[0]).argmax())
         out_manual.append(cur)
-        pos += 1
+        pos[0] += 1
+        token_buf[0] = cur
 
-    engine = ServeEngine(model, params, n_slots=2, max_len=64)
-    req = engine.submit(prompt, max_new=6)
+    req = engine.submit(prompt, max_new=max_new)
     engine.run_to_completion()
     assert req.done
     assert req.out == out_manual, (req.out, out_manual)

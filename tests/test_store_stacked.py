@@ -1,0 +1,299 @@
+"""Fused multi-segment search + compaction (the stacked data plane).
+
+Parity strategy: with exhaustive knobs (probe every grain, pool every slot)
+both the fused stacked search and the legacy per-segment loop reduce to
+exact filtered search, so ids and dists must match bit-for-bit — for warm
+and cold tiers, with and without mixed-recall masks, and across compaction
+(which re-partitions grains but cannot change an exact result).
+"""
+import numpy as np
+import pytest
+
+from repro.core import HNTLConfig
+from repro.core import planner
+from repro.core.store import VectorStore, stack_segments
+
+D, N_SEG, SEG_ROWS = 32, 8, 256
+
+
+def _cfg():
+    # pool == seal_threshold makes the *looped* per-segment Mode B re-rank
+    # exhaustive too, so loop == exact == fused under full probing
+    return HNTLConfig(d=D, k=8, s=0, n_grains=4, nprobe=4, pool=SEG_ROWS,
+                      block=32)
+
+
+def _build(cold: bool) -> tuple:
+    rng = np.random.default_rng(7)
+    st = VectorStore(_cfg(), seal_threshold=SEG_ROWS, cold_tier=cold)
+    x = rng.standard_normal((N_SEG * SEG_ROWS, D)).astype(np.float32)
+    for i in range(N_SEG):
+        st.add(x[i * SEG_ROWS:(i + 1) * SEG_ROWS],
+               tags=[1 << (i % 3)] * SEG_ROWS,
+               ts=[float(i)] * SEG_ROWS)
+    assert st.n_segments == N_SEG and not st._mem
+    q = (x[:6] + 0.01 * rng.standard_normal((6, D))).astype(np.float32)
+    return st, x, q
+
+
+def _exhaustive(st):
+    nprobe = sum(s.index.grains.n_grains for s in st._segments)
+    return dict(nprobe=nprobe, pool=st.n_vectors * 2)
+
+
+@pytest.fixture(scope="module", params=["warm", "cold"])
+def store(request):
+    return _build(request.param == "cold")
+
+
+def _assert_same(res_a, res_b):
+    assert np.array_equal(np.asarray(res_a.ids, np.int64),
+                          np.asarray(res_b.ids, np.int64))
+    np.testing.assert_allclose(np.asarray(res_a.dists),
+                               np.asarray(res_b.dists), rtol=1e-5, atol=1e-5)
+
+
+def test_fused_matches_looped(store):
+    st, x, q = store
+    fused = st.search(q, topk=10, mode="B", **_exhaustive(st))
+    looped = st.search(q, topk=10, mode="B", fused=False)
+    _assert_same(fused, looped)
+
+
+def test_fused_matches_looped_mixed_recall(store):
+    st, x, q = store
+    kw = _exhaustive(st)
+    for filt in (dict(tag_mask=2), dict(ts_range=(2.0, 6.0)),
+                 dict(tag_mask=1, ts_range=(3.0, 7.0))):
+        fused = st.search(q, topk=5, mode="B", **filt, **kw)
+        looped = st.search(q, topk=5, mode="B", fused=False, **filt)
+        _assert_same(fused, looped)
+
+
+def test_fused_mode_a_matches_looped(store):
+    st, x, q = store
+    fused = st.search(q, topk=10, mode="A", **_exhaustive(st))
+    looped = st.search(q, topk=10, mode="A", fused=False)
+    # approx dists are identical per slot (same per-segment quantizers), so
+    # the merged top-k must agree wherever dists are distinct
+    np.testing.assert_allclose(np.asarray(fused.dists),
+                               np.asarray(looped.dists), rtol=1e-5, atol=1e-5)
+
+
+def test_per_segment_route_mode(store):
+    st, x, q = store
+    fused = st.search(q, topk=10, mode="B", route_mode="per_segment",
+                      **_exhaustive(st))
+    looped = st.search(q, topk=10, mode="B", fused=False)
+    _assert_same(fused, looped)
+
+
+def test_single_jitted_dispatch(store, monkeypatch):
+    """>= 8 sealed segments -> exactly ONE jitted search call."""
+    st, x, q = store
+    calls = []
+    real = planner.search_stacked
+
+    def counting(*a, **kw):
+        calls.append(1)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(planner, "search_stacked", counting)
+    st.search(q, topk=10, mode="B")
+    assert st.n_segments >= 8 and len(calls) == 1
+
+
+def test_global_routing_caps_probe_work():
+    """Global top-P probes cfg.nprobe grains total, not per segment — and on
+    clustered data that still finds exact duplicates (self-retrieval)."""
+    from repro.data import synthetic as syn
+    st = VectorStore(_cfg(), seal_threshold=SEG_ROWS)
+    x = syn.clustered(N_SEG * SEG_ROWS, D, n_clusters=16, seed=3)
+    for i in range(N_SEG):
+        st.add(x[i * SEG_ROWS:(i + 1) * SEG_ROWS])
+    assert st.n_segments == N_SEG
+    # 8 probes over the 32-grain fused plane (the legacy loop pays 4 probes
+    # x 8 segments = 32): a quarter of the probe work, exact self-retrieval
+    res = st.search(x[:4], topk=1, mode="B", nprobe=8)
+    assert (np.asarray(res.ids)[:, 0] == np.arange(4)).all()
+
+
+def test_pool_smaller_than_topk_is_clamped(store):
+    """An explicit pool override below topk must not crash Mode B."""
+    st, x, q = store
+    res = st.search(q, topk=10, mode="B", pool=4)
+    assert np.asarray(res.ids).shape == (q.shape[0], 10)
+    assert (np.asarray(res.ids)[:, 0] >= 0).all()
+
+
+def test_snapshot_survives_later_seal():
+    """A snapshot taken mid-memtable keeps returning its captured rows even
+    after a later add() seals (and clears) the live memtable."""
+    st, x, q = _build(False)
+    extra = (np.full((4, D), 2.5)
+             + 0.1 * np.arange(4)[:, None]).astype(np.float32)
+    extra_ids = st.add(extra)                       # memtable, not sealed
+    man = st.snapshot()
+    before = st.search(extra[:1], topk=2, mode="B", manifest=man)
+    st.add(np.zeros((SEG_ROWS, D), np.float32))     # triggers a seal
+    assert not st._mem
+    after = st.search(extra[:1], topk=2, mode="B", manifest=man)
+    _assert_same(before, after)
+    assert int(np.asarray(after.ids)[0, 0]) == int(extra_ids[0])
+
+
+def test_branch_cold_files_do_not_collide():
+    """Parent and child share cold_dir AND the segment counter; their cold
+    files must still be disjoint (per-writer suffix) or they silently
+    overwrite each other's raw tiers."""
+    rng = np.random.default_rng(11)
+    st, _, _ = _build(True)
+    child = st.branch()
+    a = rng.standard_normal((SEG_ROWS, D)).astype(np.float32)
+    b = rng.standard_normal((SEG_ROWS, D)).astype(np.float32)
+    child.add(a)                                   # both seal seg_id N
+    st.add(b)
+    assert child._segments[-1].cold_path != st._segments[-1].cold_path
+    np.testing.assert_array_equal(child._segments[-1].raw_vectors(), a)
+    np.testing.assert_array_equal(st._segments[-1].raw_vectors(), b)
+
+
+def test_filtered_memtable_rows_never_leak_as_hits():
+    """Rows excluded by a predicate must come back as id -1, not as
+    real-looking ids with sentinel distances."""
+    st = VectorStore(_cfg(), seal_threshold=1024)
+    st.add(np.eye(5, D, dtype=np.float32), tags=[1] * 5)   # memtable only
+    res = st.search(np.zeros((1, D), np.float32), topk=3, tag_mask=2)
+    assert (np.asarray(res.ids) == -1).all()
+    # same guarantee through the sealed/stacked path
+    st2, x, q = _build(False)
+    res2 = st2.search(q[:1], topk=3, mode="B", tag_mask=8)  # no tag-8 rows
+    assert (np.asarray(res2.ids) == -1).all()
+
+
+def test_topk_wider_than_plane_pads_with_minus_one():
+    """topk larger than the scannable slot count still returns [Q, topk]."""
+    st = VectorStore(_cfg(), seal_threshold=64)
+    st.add(np.random.default_rng(0).standard_normal((64, D))
+           .astype(np.float32))
+    assert st.n_segments == 1 and not st._mem
+    res = st.search(np.zeros((2, D), np.float32), topk=500, mode="B")
+    ids = np.asarray(res.ids)
+    assert ids.shape == (2, 500)
+    assert (ids[:, :64] >= 0).all() and (ids[:, 64:] == -1).all()
+
+
+def test_stacked_rebuild_on_manifest_change(store):
+    st, x, q = store
+    child = st.branch()
+    new = np.full((SEG_ROWS, D), 0.5, np.float32)
+    new_ids = child.add(new)                        # seals a 9th segment
+    assert child.n_segments == st.n_segments + 1
+    res = child.search(new[:1], topk=1, mode="B")
+    assert int(np.asarray(res.ids)[0, 0]) == int(new_ids[0])
+    # parent store + its cached stack are untouched
+    res_p = st.search(new[:1], topk=1, mode="B")
+    assert int(np.asarray(res_p.ids)[0, 0]) != int(new_ids[0])
+
+
+def test_stack_segments_shapes(store):
+    st, x, q = store
+    stacked = stack_segments(st._segments)
+    gmax = max(s.index.grains.n_grains for s in st._segments)
+    assert stacked.n_segments == st.n_segments
+    assert stacked.index.grains.n_grains == st.n_segments * gmax
+    assert stacked.gid_of_row.shape[0] == st.n_vectors
+    assert int(stacked.index.routing.sizes.sum()) == st.n_vectors
+
+
+# ---------------------------------------------------------------------------
+# Compaction
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cold", [False, True])
+def test_compact_parity_and_id_remap(cold):
+    st, x, q = _build(cold)
+    pre = st.search(q, topk=10, mode="B", **_exhaustive(st))
+    merges = st.compact(fanin=4, tier_factor=4)
+    assert merges >= 1
+    assert st.n_segments < N_SEG                    # count actually reduced
+    assert any(s.id_map is not None for s in st._segments)
+    assert st.n_vectors == N_SEG * SEG_ROWS         # nothing lost
+    post = st.search(q, topk=10, mode="B", **_exhaustive(st))
+    _assert_same(pre, post)                         # ids survive the remap
+    if cold:                                        # consolidated cold tier
+        assert all(s.cold_path is not None for s in st._segments)
+
+
+def test_compact_size_tiered_policy():
+    st, x, q = _build(False)
+    # 8 tier-0 segments, fanin 4 -> two merges -> two tier-1 segments;
+    # tier-1 has only 2 members < fanin, so compaction stops there
+    assert st.compact(fanin=4, tier_factor=4) == 2
+    assert st.n_segments == 2
+    assert sorted(s.n for s in st._segments) == [4 * SEG_ROWS, 4 * SEG_ROWS]
+    assert st.compact(fanin=4, tier_factor=4) == 0  # idempotent
+
+
+def test_compact_is_cow_for_branches():
+    st, x, q = _build(False)
+    man = st.snapshot()
+    child = st.branch()
+    st.compact(fanin=4)
+    # the old manifest and the branch still see (and search) the old segments
+    assert len(man.segments) == N_SEG and child.n_segments == N_SEG
+    res_child = child.search(q, topk=5, mode="B", **_exhaustive(child))
+    res_man = st.search(q, topk=5, mode="B", manifest=man,
+                        **_exhaustive(child))
+    _assert_same(res_child, res_man)
+
+
+def test_compact_reclaims_unreferenced_cold_files():
+    """Superseded cold files are unlinked once no manifest references the
+    old segments; live snapshots keep them alive (CoW)."""
+    import gc
+    import os
+    st, x, q = _build(True)
+    old_paths = [s.cold_path for s in st._segments]
+    man = st.snapshot()                              # pins the old segments
+    st.compact(fanin=4)
+    gc.collect()
+    assert all(os.path.exists(p) for p in old_paths)  # snapshot still live
+    del man
+    st._stack_cache.clear()                           # drop cached refs too
+    gc.collect()
+    assert not any(os.path.exists(p) for p in old_paths)
+    assert all(os.path.exists(s.cold_path) for s in st._segments)
+
+
+def test_looped_path_survives_tiny_segments():
+    """The parity oracle must not crash when a segment's real plane is
+    smaller than cfg's nominal nprobe/pool (seal shrinks n_grains)."""
+    cfg = HNTLConfig(d=D, k=8, s=0, n_grains=4, nprobe=4, pool=512, block=32)
+    st = VectorStore(cfg, seal_threshold=64)
+    x = np.random.default_rng(13).standard_normal((64, D)).astype(np.float32)
+    st.add(x)                                     # one 2-grain segment
+    assert st._segments[0].index.grains.n_grains < cfg.n_grains
+    for fused in (True, False):
+        res = st.search(x[:2], topk=1, mode="B", fused=fused)
+        assert (np.asarray(res.ids)[:, 0] == np.arange(2)).all()
+
+
+def test_looped_empty_store_matches_fused():
+    st = VectorStore(_cfg(), seal_threshold=64)
+    q = np.zeros((2, D), np.float32)
+    for fused in (True, False):
+        res = st.search(q, topk=3, fused=fused)
+        assert (np.asarray(res.ids) == -1).all()
+
+
+def test_compact_mixed_recall_survives():
+    st, x, q = _build(False)
+    kw = _exhaustive(st)
+    pre = st.search(q, topk=5, mode="B", tag_mask=2, ts_range=(1.0, 7.0),
+                    **kw)
+    st.compact(fanin=4)
+    post = st.search(q, topk=5, mode="B", tag_mask=2, ts_range=(1.0, 7.0),
+                     **kw)
+    _assert_same(pre, post)
