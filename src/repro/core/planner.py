@@ -16,9 +16,11 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from . import quantize, routing, scan
-from .types import BIG, HNTLIndex, SearchResult, StackedSegments
+from .types import (BIG, HNTLIndex, SearchResult, ShardedStackedSegments,
+                    StackedSegments)
 
 
 def project_queries(index: HNTLIndex, q: jax.Array, gids: jax.Array):
@@ -153,6 +155,32 @@ def _translate_rows(stacked: StackedSegments, rows: jax.Array,
     return jnp.where(ok, gid, jnp.int32(-1))
 
 
+def _candidate_epilogue(dists, rows, q, raw, *, pool: int, topk: int,
+                        mode: str, translate):
+    """Shared Mode A/B tail of the fused and sharded planes: candidate pool
+    -> (Mode B) exact f32 re-rank -> top-k -> id translation.
+
+    ``translate``: fn(rows, dists) -> ids.  Both planes must keep using this
+    one epilogue — the bit-for-bit parity contract between them depends on
+    the pooling/re-rank arithmetic staying identical.
+    """
+    if mode == "A":
+        neg_d, pos = jax.lax.top_k(-dists, topk)
+        rows_k = jnp.take_along_axis(rows, pos, axis=1)
+        d_k = -neg_d
+    else:
+        neg_d, pos = jax.lax.top_k(-dists, pool)              # [Q, C]
+        cand_rows = jnp.take_along_axis(rows, pos, axis=1)
+        cand_ok = neg_d > -BIG / 2
+        cand = raw[jnp.maximum(cand_rows, 0)]                 # [Q, C, d]
+        exact = jnp.sum((cand - q[:, None, :]) ** 2, axis=-1)
+        exact = jnp.where(cand_ok, exact, BIG)
+        neg_e, pos_e = jax.lax.top_k(-exact, topk)
+        rows_k = jnp.take_along_axis(cand_rows, pos_e, axis=1)
+        d_k = -neg_e
+    return SearchResult(ids=translate(rows_k, d_k), dists=d_k)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("nprobe", "pool", "topk", "mode", "envelope_frac",
@@ -193,25 +221,119 @@ def search_stacked(stacked: StackedSegments, q: jax.Array, *, nprobe: int,
     dists, rows = scan_probed(index, q, gids, envelope_frac, qeff,
                               scan_fn=scan_fn, extra_mask=extra)
 
-    if mode == "A":
-        neg_d, pos = jax.lax.top_k(-dists, topk)
-        rows_k = jnp.take_along_axis(rows, pos, axis=1)
-        d_k = -neg_d
-        ids = _translate_rows(stacked, rows_k, d_k) if translate else rows_k
-        return SearchResult(ids=ids, dists=d_k)
-
     # Mode B: merged candidate pool -> exact f32 re-rank over the fused
     # warm tier (single gather into the concatenated raw array).
-    assert index.raw is not None, \
+    assert mode == "A" or index.raw is not None, \
         "in-jit Mode B needs the fused warm tier; cold stores re-rank on host"
-    neg_d, pos = jax.lax.top_k(-dists, pool)                  # [Q, C]
-    cand_rows = jnp.take_along_axis(rows, pos, axis=1)
-    cand_ok = neg_d > -BIG / 2
-    cand = index.raw[jnp.maximum(cand_rows, 0)]               # [Q, C, d]
-    exact = jnp.sum((cand - q[:, None, :]) ** 2, axis=-1)
-    exact = jnp.where(cand_ok, exact, BIG)
-    neg_e, pos_e = jax.lax.top_k(-exact, topk)
-    rows_e = jnp.take_along_axis(cand_rows, pos_e, axis=1)
-    d_e = -neg_e
-    ids = _translate_rows(stacked, rows_e, d_e) if translate else rows_e
-    return SearchResult(ids=ids, dists=d_e)
+    return _candidate_epilogue(
+        dists, rows, q, index.raw, pool=pool, topk=topk, mode=mode,
+        translate=(lambda r, d: _translate_rows(stacked, r, d)) if translate
+        else (lambda r, d: r))
+
+
+# ---------------------------------------------------------------------------
+# Distributed fused search (grain-sharded across a mesh)
+# ---------------------------------------------------------------------------
+
+
+def _spec_tree(tree, spec):
+    """Pytree of ``spec`` matching ``tree`` (explicit, version-portable
+    alternative to relying on shard_map's prefix-spec matching)."""
+    return jax.tree_util.tree_map(lambda _: spec, tree)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "grain_axis", "batch_axis", "nprobe", "pool",
+                     "topk", "mode", "envelope_frac", "qeff", "scan_fn",
+                     "translate"))
+def search_stacked_sharded(plane: ShardedStackedSegments, q: jax.Array, *,
+                           mesh, grain_axis: str = "model",
+                           batch_axis: Optional[str] = None, nprobe: int,
+                           pool: int, topk: int, mode: str = "B",
+                           envelope_frac: float = 0.25, qeff: int = 8191,
+                           scan_fn=None, translate: bool = True,
+                           tag_mask: Optional[jax.Array] = None,
+                           ts_range: Optional[tuple] = None) -> SearchResult:
+    """Grain-sharded fused search: shard-local route/scan/pool/re-rank plus
+    ONE top-k merge collective.
+
+    The plane's grain panels, routing centroids, permuted raw tier and id
+    table are all split along ``grain_axis`` (see ``store.shard_segments``
+    for the shard-aligned layout).  Each shard independently runs the whole
+    paper pipeline on its grain slice — top-P routing over its local
+    centroids, envelope filter, Block-SoA scan, candidate pool, and (warm
+    Mode B) the exact re-rank against its *own* raw slice — then translates
+    to global ids locally and contributes its top-k to a single
+    ``jax.lax.all_gather`` along ``grain_axis``; a replicated top-k over the
+    gathered [Q, n_shards*k] pool is the entire merge epilogue.
+
+    Knob semantics are per-shard: ``nprobe`` grains are probed and ``pool``
+    candidates pooled (Mode B: re-ranked) on *each* shard, clamped to the
+    local plane, so recall can only improve over the single-device plane
+    with the same knobs, and per-shard scan work shrinks as shards are
+    added.  Each shard contributes min(topk, pool) entries to the merge —
+    ``pool`` caps the per-shard contribution in both modes, which is what
+    lets the cold-tier caller request the full union of per-shard pools
+    (topk = n_shards*pool) without inflating every shard's top-k and the
+    all-gather payload by another factor of n_shards.  With exhaustive
+    knobs the result is bit-for-bit identical to :func:`search_stacked`
+    (the shard-count invariance tests).
+
+    ``batch_axis`` optionally shards queries over a second mesh axis
+    (throughput scaling); results come back sharded the same way.
+    ``translate=False`` returns *permuted global rows* (shard-local row +
+    shard offset) for the host-side cold-tier re-rank.
+    """
+    from ..distributed.sharding import SHARD_MAP_CHECK_KW, shard_map
+
+    n_shards = mesh.shape[grain_axis]
+    g_local = plane.index.grains.n_grains // n_shards
+    cap = plane.index.grains.cap
+    rows_local = plane.gid_of_row.shape[0] // n_shards
+    probe = max(1, min(nprobe, g_local))
+    slots = probe * cap
+    # pool caps the per-shard contribution in BOTH modes (mode B also pools
+    # before its re-rank); k_local is what each shard puts on the wire
+    pool_eff = (min(max(pool, topk), slots) if mode == "B"
+                else max(1, min(pool, slots)))
+    k_local = min(topk, pool_eff)
+    k_final = min(topk, n_shards * k_local)
+    assert mode == "A" or plane.index.raw is not None, \
+        "in-jit Mode B needs the warm tier; cold stores re-rank on host"
+
+    def body(index, gid_local, qv, tm, tr):
+        extra, grain_ok = _mixed_recall_mask(index.grains, tm, tr)
+        gids, _ = routing.route(index.routing, qv, probe,
+                                grain_mask=grain_ok)
+        dists, rows = scan_probed(index, qv, gids, envelope_frac, qeff,
+                                  scan_fn=scan_fn, extra_mask=extra)
+
+        def local_ids(rows_k, d_k):
+            ok = jnp.logical_and(rows_k >= 0, d_k < BIG / 2)
+            if translate:
+                return jnp.where(ok, gid_local[jnp.maximum(rows_k, 0)],
+                                 jnp.int32(-1))
+            # permuted global rows, resolved on the host (cold tier)
+            shard = jax.lax.axis_index(grain_axis)
+            return jnp.where(ok, rows_k + shard * rows_local, -1)
+
+        # shard-local epilogue (Mode B: the permuted raw tier is grain-
+        # aligned, so every candidate this shard scanned lives in its own
+        # raw slice) — shared with the single-device plane for parity
+        local = _candidate_epilogue(dists, rows, qv, index.raw,
+                                    pool=pool_eff, topk=k_local, mode=mode,
+                                    translate=local_ids)
+        # THE merge collective: one all-gather of the per-shard top-k pools
+        g_ids, g_d = jax.lax.all_gather((local.ids, local.dists), grain_axis,
+                                        axis=1, tiled=True)  # [Q, n*k_local]
+        neg_f, pos_f = jax.lax.top_k(-g_d, k_final)
+        return jnp.take_along_axis(g_ids, pos_f, axis=1), -neg_f
+
+    q_spec = P(batch_axis) if batch_axis is not None else P(None)
+    in_specs = (_spec_tree(plane.index, P(grain_axis)), P(grain_axis),
+                q_spec, _spec_tree(tag_mask, P()), _spec_tree(ts_range, P()))
+    fn = shard_map(body, mesh=mesh, in_specs=in_specs,
+                   out_specs=(q_spec, q_spec), **{SHARD_MAP_CHECK_KW: False})
+    ids, d = fn(plane.index, plane.gid_of_row, q, tag_mask, ts_range)
+    return SearchResult(ids=ids, dists=d)

@@ -50,7 +50,7 @@ import numpy as np
 from . import index as index_mod
 from . import planner
 from .types import (BIG, HNTLConfig, HNTLIndex, GrainStore, RoutingPlane,
-                    SearchResult, StackedSegments)
+                    SearchResult, ShardedStackedSegments, StackedSegments)
 
 _BIG = np.float32(BIG)
 
@@ -159,7 +159,8 @@ def _pad_to(a: np.ndarray, shape: tuple, fill) -> np.ndarray:
     return out
 
 
-def stack_segments(segments: Sequence["Segment"]) -> StackedSegments:
+def stack_segments(segments: Sequence["Segment"], *,
+                   device: bool = True) -> StackedSegments:
     """Fuse sealed segments into one :class:`StackedSegments` super-index.
 
     Every segment's GrainStore is padded to the common (G_max, cap_max)
@@ -171,6 +172,10 @@ def stack_segments(segments: Sequence["Segment"]) -> StackedSegments:
 
     Padding grains get sizes=0 / valid=False (never routed, never counted)
     and scale=1 (no divide-by-zero in the envelope filter).
+
+    ``device=False`` keeps every leaf a host numpy array — the sharded
+    re-layout path stacks on the host and places each leaf directly onto
+    its shard, so the full plane never stages through a single device.
     """
     segs = list(segments)
     assert segs, "cannot stack an empty segment list"
@@ -221,9 +226,11 @@ def stack_segments(segments: Sequence["Segment"]) -> StackedSegments:
             acc["sketch_scale"].append(_pad_to(np.asarray(g.sketch_scale),
                                                (gmax,), 1.0))
 
+    put = jnp.asarray if device else (lambda a: a)
+
     def fuse(name):  # [S, G, ...] -> [S*G, ...]
         a = np.stack(acc[name])
-        return jnp.asarray(a.reshape((s_n * gmax,) + a.shape[2:]))
+        return put(a.reshape((s_n * gmax,) + a.shape[2:]))
 
     grains = GrainStore(
         coords=fuse("coords"), res=fuse("res"),
@@ -236,21 +243,101 @@ def stack_segments(segments: Sequence["Segment"]) -> StackedSegments:
     index = HNTLIndex(
         routing=RoutingPlane(centroids=grains.mu, sizes=fuse("sizes")),
         grains=grains,
-        raw=jnp.asarray(np.concatenate(
+        raw=put(np.concatenate(
             [np.asarray(s.index.raw) for s in segs])) if warm else None)
     gid_of_row = np.concatenate(
         [s.global_ids() for s in segs]).astype(np.int32)
     return StackedSegments(
         index=index,
-        gid_of_row=jnp.asarray(gid_of_row),
-        row_offset=jnp.asarray(offsets.astype(np.int32)))
+        gid_of_row=put(gid_of_row),
+        row_offset=put(offsets.astype(np.int32)))
+
+
+def shard_segments(segments: Sequence["Segment"], n_shards: int):
+    """Re-lay-out the stacked super-index for an ``n_shards``-way mesh.
+
+    Builds on :func:`stack_segments`, then makes the layout shard-aligned:
+
+    - the fused grain axis is padded to a multiple of ``n_shards`` with dead
+      grains (sizes=0, valid=False) and split into contiguous chunks, one
+      chunk per shard;
+    - the raw tier is **permuted grain-wise**: shard s's slice holds exactly
+      the member rows of the grains in its chunk (each row belongs to
+      exactly one grain), padded to a common per-shard row count.  Grain
+      ``ids`` are rewritten to rows *local to the owning shard's slice*, so
+      the distributed Mode B re-rank never reads another shard's raw tier;
+    - ``gid_of_row`` is permuted the same way (local translation to global
+      ids before the merge collective).
+
+    Returns ``(plane, perm)``: the :class:`ShardedStackedSegments` pytree
+    (host numpy leaves, ready for `distributed.sharding.shard_search_plane`)
+    and the host-side ``perm [n_shards*rows_per_shard] i64`` table mapping a
+    permuted row back to its original flat row (-1 on padding rows), which
+    the cold-tier path uses to resolve candidates to per-segment memmaps.
+    """
+    assert n_shards >= 1
+    # host-only stacking: leaves stay numpy so the only device transfer is
+    # shard_search_plane placing each shard's slice on its own device
+    stacked = stack_segments(segments, device=False)
+    g = stacked.index.grains
+    sg = g.n_grains
+    g_pad = -(-sg // n_shards) * n_shards - sg
+    g_local = (sg + g_pad) // n_shards
+
+    def padg(a, fill):
+        a = np.asarray(a)
+        if not g_pad:
+            return a
+        return np.concatenate(
+            [a, np.full((g_pad,) + a.shape[1:], fill, a.dtype)])
+
+    ids = padg(g.ids, -1)                       # [Gp, cap] flat raw rows
+    valid = padg(g.valid, False)
+    gids_unperm = np.asarray(stacked.gid_of_row)
+    raw_unperm = (np.asarray(stacked.index.raw)
+                  if stacked.index.raw is not None else None)
+
+    owned = [ids[s * g_local:(s + 1) * g_local][
+        valid[s * g_local:(s + 1) * g_local]].astype(np.int64)
+        for s in range(n_shards)]               # rows per shard, scan order
+    rows_per_shard = max(1, max(len(r) for r in owned))
+    perm = np.full(n_shards * rows_per_shard, -1, np.int64)
+    new_ids = np.full_like(ids, -1)
+    lut = np.full(gids_unperm.shape[0], -1, np.int64)
+    for s, rows in enumerate(owned):
+        perm[s * rows_per_shard:s * rows_per_shard + len(rows)] = rows
+        lut[:] = -1
+        lut[rows] = np.arange(len(rows))
+        ch = ids[s * g_local:(s + 1) * g_local]
+        new_ids[s * g_local:(s + 1) * g_local] = np.where(
+            ch >= 0, lut[np.maximum(ch, 0)], -1).astype(np.int32)
+
+    keep = np.maximum(perm, 0)
+    gid_perm = np.where(perm >= 0, gids_unperm[keep], -1).astype(np.int32)
+    has_sketch = g.sketch is not None
+    grains = GrainStore(
+        coords=padg(g.coords, 0), res=padg(g.res, 0),
+        sketch=padg(g.sketch, 0) if has_sketch else None,
+        ids=new_ids, valid=valid, basis=padg(g.basis, 0.0),
+        mu=padg(g.mu, 0.0), scale=padg(g.scale, 1.0),
+        res_scale=padg(g.res_scale, 1.0),
+        sketch_basis=padg(g.sketch_basis, 0.0) if has_sketch else None,
+        sketch_scale=padg(g.sketch_scale, 1.0) if has_sketch else None,
+        tags=padg(g.tags, 0), ts=padg(g.ts, 0.0))
+    index = HNTLIndex(
+        routing=RoutingPlane(centroids=grains.mu,
+                             sizes=padg(stacked.index.routing.sizes, 0)),
+        grains=grains,
+        raw=raw_unperm[keep] if raw_unperm is not None else None)
+    return ShardedStackedSegments(index=index, gid_of_row=gid_perm), perm
 
 
 class VectorStore:
     """Log-structured vector memory with HNTL-indexed sealed segments."""
 
     def __init__(self, cfg: HNTLConfig, *, seal_threshold: int = 8192,
-                 cold_dir: Optional[str] = None, cold_tier: bool = False):
+                 cold_dir: Optional[str] = None, cold_tier: bool = False,
+                 stack_cache_entries: int = 2):
         self.cfg = cfg
         self.seal_threshold = seal_threshold
         self.cold_tier = cold_tier
@@ -262,8 +349,15 @@ class VectorStore:
         self._next_id = 0
         self._next_seg = 0
         self._cold_tag = uuid.uuid4().hex[:8]   # per-writer cold-file suffix
-        # manifest-keyed LRU of StackedSegments (+ host-side row metadata);
-        # entries keep the segment tuple alive so id()-keys cannot be reused.
+        # Bounded LRU of fused/sharded search planes, keyed by (manifest
+        # segment identity, mesh placement).  Every entry pins a full device
+        # copy of the stacked plane (including the concatenated warm raw
+        # tier), so the cap must stay tiny: the default 2 covers the common
+        # parent+branch / live+snapshot alternation.  Entries keep the
+        # segment tuple alive so id()-keys cannot be reused.
+        if stack_cache_entries < 1:
+            raise ValueError("stack_cache_entries must be >= 1")
+        self.stack_cache_entries = stack_cache_entries
         self._stack_cache: "collections.OrderedDict" = \
             collections.OrderedDict()
 
@@ -417,7 +511,8 @@ class VectorStore:
     def branch(self) -> "VectorStore":
         """Zero-copy fork: new store sharing all sealed segments (CoW)."""
         child = VectorStore(self.cfg, seal_threshold=self.seal_threshold,
-                            cold_dir=self.cold_dir, cold_tier=self.cold_tier)
+                            cold_dir=self.cold_dir, cold_tier=self.cold_tier,
+                            stack_cache_entries=self.stack_cache_entries)
         child._segments = list(self._segments)        # shared immutable refs
         child._mem = list(self._mem)                  # memtable copied (small)
         child._mem_tags = list(self._mem_tags)
@@ -435,31 +530,56 @@ class VectorStore:
         return len(self._segments)
 
     # ------------------------------------------------------------- read path
-    def _stacked_for(self, segments: tuple):
-        """Stacked super-index for a manifest, rebuilt lazily on change."""
-        key = tuple(id(s) for s in segments)
+    def _cache_get(self, key):
         hit = self._stack_cache.get(key)
         if hit is not None:
             self._stack_cache.move_to_end(key)
-            return hit[1], hit[2], hit[3]
+            return hit[1]
+        return None
+
+    def _cache_put(self, key, segments: tuple, value):
+        self._stack_cache[key] = (tuple(segments), value)
+        while len(self._stack_cache) > self.stack_cache_entries:
+            self._stack_cache.popitem(last=False)
+        return value
+
+    def _stacked_for(self, segments: tuple):
+        """Stacked super-index for a manifest, rebuilt lazily on change."""
+        key = tuple(id(s) for s in segments)
+        hit = self._cache_get(key)
+        if hit is not None:
+            return hit
         stacked = stack_segments(segments)
         offsets = np.asarray(stacked.row_offset, np.int64)
         gids = np.asarray(stacked.gid_of_row, np.int64)
-        self._stack_cache[key] = (tuple(segments), stacked, offsets, gids)
-        # each entry pins a full device copy of the fused plane (including
-        # the concatenated warm raw tier), so keep the LRU tiny: 2 covers
-        # the common parent+branch / live+snapshot alternation
-        while len(self._stack_cache) > 2:
-            self._stack_cache.popitem(last=False)
-        return stacked, offsets, gids
+        return self._cache_put(key, segments, (stacked, offsets, gids))
+
+    def _sharded_for(self, segments: tuple, mesh, grain_axis: str):
+        """Mesh-sharded plane for a manifest: grain-aligned re-layout
+        (`shard_segments`) placed shard-wise on the mesh, plus the host-side
+        row metadata the cold path needs.  Cached alongside the fused plane
+        (same LRU, keyed additionally by mesh identity)."""
+        from ..distributed import sharding as shd
+        key = (tuple(id(s) for s in segments), mesh, grain_axis)
+        hit = self._cache_get(key)
+        if hit is not None:
+            return hit
+        plane, perm = shard_segments(segments, mesh.shape[grain_axis])
+        rules = shd.search_plane_rules(mesh, grain_axis=grain_axis)
+        plane = shd.shard_search_plane(plane, rules)
+        offsets = np.zeros(len(segments) + 1, np.int64)
+        np.cumsum([s.n for s in segments], out=offsets[1:])
+        gids = np.concatenate([s.global_ids() for s in segments])
+        return self._cache_put(key, segments, (plane, perm, offsets, gids))
 
     def search(self, q: np.ndarray, *, topk: int = 10, mode: str = "B",
                tag_mask: Optional[int] = None,
                ts_range: Optional[tuple] = None,
                manifest: Optional[Manifest] = None, scan_fn=None,
                nprobe: Optional[int] = None, pool: Optional[int] = None,
-               fused: bool = True, route_mode: str = "global"
-               ) -> SearchResult:
+               fused: bool = True, route_mode: str = "global",
+               mesh=None, grain_axis: str = "model",
+               shard_queries: bool = False) -> SearchResult:
         """Unified mixed-recall search across sealed segments + memtable.
 
         All sealed segments are searched by ONE jitted call on the stacked
@@ -473,21 +593,42 @@ class VectorStore:
           (e.g. exhaustive probing for parity checks).
         route_mode: "global" (top-P over all segments' grains at once) or
           "per_segment" (legacy loop probe set, still one dispatch).
+        mesh: optional jax Mesh — run the *distributed* search plane: grain
+          panels and raw tier sharded along ``grain_axis``, shard-local
+          route/scan/pool/re-rank, one all-gather top-k merge collective
+          (still a single jitted dispatch).  nprobe/pool become per-shard
+          knobs, clamped to each shard's slice of the plane.
+        shard_queries: with a mesh, also shard the query batch over the
+          mesh's data axis (throughput scaling; the axis size must divide
+          the query count, and the axis must exist with size > 1).
         """
         man = manifest or self.snapshot()
         q = np.asarray(q, np.float32)
         if q.ndim == 1:
             q = q[None]
         if not fused:
+            if mesh is not None:
+                raise ValueError("mesh= requires the fused search plane")
             return self._search_looped(q, man, topk=topk, mode=mode,
                                        tag_mask=tag_mask, ts_range=ts_range,
                                        scan_fn=scan_fn)
         all_ids, all_d = [], []
         if man.segments:
-            ids_s, d_s = self._search_segments_fused(
-                q, man.segments, topk=topk, mode=mode, tag_mask=tag_mask,
-                ts_range=ts_range, scan_fn=scan_fn, nprobe=nprobe, pool=pool,
-                route_mode=route_mode)
+            if mesh is not None:
+                if route_mode != "global":
+                    raise ValueError(
+                        "the sharded plane routes per shard; route_mode "
+                        "overrides only apply to the single-device plane")
+                ids_s, d_s = self._search_segments_sharded(
+                    q, man.segments, topk=topk, mode=mode, tag_mask=tag_mask,
+                    ts_range=ts_range, scan_fn=scan_fn, nprobe=nprobe,
+                    pool=pool, mesh=mesh, grain_axis=grain_axis,
+                    shard_queries=shard_queries)
+            else:
+                ids_s, d_s = self._search_segments_fused(
+                    q, man.segments, topk=topk, mode=mode, tag_mask=tag_mask,
+                    ts_range=ts_range, scan_fn=scan_fn, nprobe=nprobe,
+                    pool=pool, route_mode=route_mode)
             all_ids.append(ids_s)
             all_d.append(d_s)
         return self._merge_with_memtable(q, man, all_ids, all_d, topk,
@@ -553,23 +694,103 @@ class VectorStore:
                                          translate=False, **kw)
             rows = np.asarray(res.ids)
             ok = (rows >= 0) & (np.asarray(res.dists) < BIG / 2)
-            rows_c = np.maximum(rows, 0)
-            seg_idx = np.searchsorted(offsets, rows_c, side="right") - 1
-            local = rows_c - offsets[seg_idx]
-            cand = np.zeros(rows.shape + (q.shape[1],), np.float32)
-            for si, seg in enumerate(segments):
-                m = ok & (seg_idx == si)
-                if m.any():
-                    cand[m] = seg.raw_vectors()[local[m]]
-            exact = np.sum((cand - q[:, None, :]) ** 2, axis=-1)
-            exact = np.where(ok, exact, _BIG)
-            order = np.argsort(exact, axis=1)[:, :topk_eff]
-            ids = np.where(ok, gids_host[rows_c], -1)
-            return (np.take_along_axis(ids, order, axis=1),
-                    np.take_along_axis(exact, order, axis=1))
+            return self._cold_rerank(q, segments, offsets, gids_host,
+                                     rows, ok, topk_eff)
 
         res = planner.search_stacked(stacked, qj, pool=pool_eff,
                                      topk=topk_eff, mode=mode, **kw)
+        return (np.asarray(res.ids, np.int64),
+                np.asarray(res.dists, np.float32))
+
+    def _cold_rerank(self, q, segments, offsets, gids_host, rows, ok, topk):
+        """Host-side exact Mode B re-rank of a merged candidate pool from
+        the per-segment cold memmaps.  ``rows`` are original flat rows of
+        the concatenated raw tier (slots with ok=False are ignored)."""
+        rows_c = np.maximum(rows, 0)
+        seg_idx = np.searchsorted(offsets, rows_c, side="right") - 1
+        local = rows_c - offsets[seg_idx]
+        cand = np.zeros(rows.shape + (q.shape[1],), np.float32)
+        for si, seg in enumerate(segments):
+            m = ok & (seg_idx == si)
+            if m.any():
+                cand[m] = seg.raw_vectors()[local[m]]
+        exact = np.sum((cand - q[:, None, :]) ** 2, axis=-1)
+        exact = np.where(ok, exact, _BIG)
+        order = np.argsort(exact, axis=1)[:, :topk]
+        ids = np.where(ok, gids_host[rows_c], -1)
+        return (np.take_along_axis(ids, order, axis=1),
+                np.take_along_axis(exact, order, axis=1))
+
+    def _sharded_statics(self, plane: ShardedStackedSegments, n_shards: int,
+                         topk: int, nprobe: Optional[int],
+                         pool: Optional[int]):
+        """Per-shard jit-static knobs, clamped to the local grain slice."""
+        g_local = plane.index.grains.n_grains // n_shards
+        cap = plane.index.grains.cap
+        probe = max(1, min(nprobe if nprobe is not None else self.cfg.nprobe,
+                           g_local))
+        want_pool = pool if pool is not None else self.cfg.pool
+        pool_eff = min(max(want_pool, topk), probe * cap)
+        return probe, pool_eff
+
+    def _batch_axis(self, mesh, grain_axis: str, shard_queries: bool,
+                    q_n: int) -> Optional[str]:
+        """Pick the query-batch mesh axis, or None to replicate queries.
+        An unsatisfiable explicit request is an error, not a silent
+        replicated fallback."""
+        if not shard_queries:
+            return None
+        other = [a for a in mesh.axis_names if a != grain_axis]
+        if not other or mesh.shape[other[0]] <= 1:
+            raise ValueError(
+                f"shard_queries=True needs a >1-sized mesh axis besides "
+                f"{grain_axis!r}; mesh has {dict(mesh.shape)}")
+        if q_n % mesh.shape[other[0]] != 0:
+            raise ValueError(
+                f"shard_queries=True needs the {other[0]!r} axis size "
+                f"({mesh.shape[other[0]]}) to divide the query count "
+                f"({q_n}); pad the batch to a multiple of the axis")
+        return other[0]
+
+    def _search_segments_sharded(self, q, segments, *, topk, mode, tag_mask,
+                                 ts_range, scan_fn, nprobe, pool, mesh,
+                                 grain_axis, shard_queries):
+        """Distributed fused search: shard-local route/scan/pool/re-rank and
+        one all-gather merge collective.  Returns numpy (global_ids, dists).
+        """
+        plane, perm, offsets, gids_host = self._sharded_for(
+            segments, mesh, grain_axis)
+        n_shards = mesh.shape[grain_axis]
+        probe, pool_eff = self._sharded_statics(plane, n_shards, topk,
+                                                nprobe, pool)
+        qeff = index_mod.int32_safe_qmax(self.cfg.k, self.cfg.coord_bits)
+        tm = jnp.uint32(tag_mask) if tag_mask is not None else None
+        tr = ((jnp.float32(ts_range[0]), jnp.float32(ts_range[1]))
+              if ts_range is not None else None)
+        kw = dict(mesh=mesh, grain_axis=grain_axis,
+                  batch_axis=self._batch_axis(mesh, grain_axis,
+                                              shard_queries, q.shape[0]),
+                  nprobe=probe, envelope_frac=self.cfg.envelope_frac,
+                  qeff=qeff, scan_fn=scan_fn, tag_mask=tm, ts_range=tr)
+        qj = jnp.asarray(q)
+
+        if mode == "B" and plane.index.raw is None:
+            # Cold tier: sharded approximate scan, merged union of the
+            # per-shard pools (topk = n_shards * pool keeps every shard's
+            # pool in the gathered result), host re-rank from the memmaps
+            # after translating permuted rows back to original flat rows.
+            res = planner.search_stacked_sharded(
+                plane, qj, pool=pool_eff, topk=n_shards * pool_eff,
+                mode="A", translate=False, **kw)
+            rows_perm = np.asarray(res.ids)
+            ok = (rows_perm >= 0) & (np.asarray(res.dists) < BIG / 2)
+            rows = np.where(ok, perm[np.maximum(rows_perm, 0)], -1)
+            ok &= rows >= 0
+            return self._cold_rerank(q, segments, offsets, gids_host,
+                                     rows, ok, min(topk, rows.shape[1]))
+
+        res = planner.search_stacked_sharded(plane, qj, pool=pool_eff,
+                                             topk=topk, mode=mode, **kw)
         return (np.asarray(res.ids, np.int64),
                 np.asarray(res.dists, np.float32))
 

@@ -172,6 +172,59 @@ class StackedSegments:
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
+class ShardedStackedSegments:
+    """A stacked super-index re-laid-out for an N-way grain-sharded mesh.
+
+    The fused grain axis is padded to a multiple of the shard count and
+    split into contiguous chunks, one per shard; the raw tier is *permuted*
+    so that every grain's member rows live in its owning shard's row slice.
+    That alignment is what makes the distributed Mode B re-rank shard-local:
+    a shard re-ranks its own candidate pool entirely from its own raw slice,
+    and the only collective in the whole search is ONE all-gather of the
+    per-shard (ids, dists) top-k pools (`planner.search_stacked_sharded`).
+
+    Id plumbing differs from :class:`StackedSegments` in one way: grain
+    ``ids`` hold rows *local to the owning shard's raw slice* (shard s's
+    panels index ``raw[s*rows_per_shard : (s+1)*rows_per_shard]``), and
+    ``gid_of_row`` is likewise laid out per shard, so translation to global
+    ids happens before the merge collective with no cross-shard lookup.
+    The host keeps the permuted-row -> original-flat-row table for the
+    cold-tier (mmap) re-rank path.
+
+    Every array leaf is sharded on dim 0 — grain panels along the padded
+    grain axis, ``raw``/``gid_of_row`` along the permuted row axis — per the
+    logical axes in :data:`SEARCH_PLANE_AXES`.
+    """
+
+    index: HNTLIndex           # [n*G_l] grains, ids = shard-local raw rows
+    gid_of_row: jax.Array      # [n*rows_per_shard] i32 — permuted row -> gid
+                               # (-1 on per-shard padding rows)
+
+    @property
+    def rows_total(self) -> int:
+        return self.gid_of_row.shape[0]
+
+
+# Logical sharding axes of the search-plane pytrees, by field name: dim 0 of
+# every leaf, trailing dims replicated.  "grains" leaves partition along the
+# (padded) fused grain axis, "rows" leaves along the permuted raw-row axis.
+# `distributed.sharding.search_plane_rules` maps these onto a physical mesh
+# axis (the model axis by default).  Queries are not part of the plane:
+# `planner.search_stacked_sharded(batch_axis=...)` optionally shards them
+# over the data axis at dispatch time.
+SEARCH_PLANE_AXES = {
+    # GrainStore / RoutingPlane — one entry per grain
+    "coords": "grains", "res": "grains", "sketch": "grains", "ids": "grains",
+    "valid": "grains", "basis": "grains", "mu": "grains", "scale": "grains",
+    "res_scale": "grains", "sketch_basis": "grains", "sketch_scale": "grains",
+    "tags": "grains", "ts": "grains", "centroids": "grains", "sizes": "grains",
+    # raw tier + id translation — one entry per (permuted) raw row
+    "raw": "rows", "gid_of_row": "rows",
+}
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
 class SearchResult:
     """Top-k result of a (batched) query."""
 

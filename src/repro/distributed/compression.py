@@ -22,12 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-try:                         # jax >= 0.5/0.6: stable API, check_vma kwarg
-    _shard_map = jax.shard_map
-    _SM_CHECK = "check_vma"
-except AttributeError:       # older jax: experimental API, check_rep kwarg
-    from jax.experimental.shard_map import shard_map as _shard_map
-    _SM_CHECK = "check_rep"
+from .sharding import SHARD_MAP_CHECK_KW as _SM_CHECK
+from .sharding import shard_map as _shard_map
 
 
 def _psum_bf16(g, axis):

@@ -31,6 +31,17 @@ from typing import Optional
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+# Single compat point for the explicit-collective API: jax >= 0.5/0.6 exposes
+# a stable jax.shard_map with a `check_vma` kwarg, older releases the
+# experimental one with `check_rep`.  Callers pass the check kwarg as
+# **{SHARD_MAP_CHECK_KW: flag}.
+try:
+    shard_map = jax.shard_map
+    SHARD_MAP_CHECK_KW = "check_vma"
+except AttributeError:
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+    SHARD_MAP_CHECK_KW = "check_rep"
+
 
 @dataclasses.dataclass(frozen=True)
 class ShardingRules:
@@ -104,6 +115,58 @@ def default_rules(mesh: Mesh, *, seq_sharded: bool = False,
         "lora": None,
     }
     return ShardingRules(mesh=mesh, rules=rules)
+
+
+# ---------------------------------------------------------------------------
+# Search-plane rules (the distributed HNTL data plane)
+# ---------------------------------------------------------------------------
+
+
+def search_plane_rules(mesh: Mesh, *,
+                       grain_axis: str = "model") -> ShardingRules:
+    """Logical-axis rules for the grain-sharded search plane.
+
+    The index is partitioned grain-wise: grain panels and routing centroids
+    ("grains") and the permuted raw tier + id table ("rows") split along
+    ``grain_axis`` (model by default — the index plays the role of
+    weights).  Queries are not placed through these rules: they enter as
+    plain arrays and `planner.search_stacked_sharded`'s ``batch_axis``
+    controls their (optional) data-axis sharding.  An absent mesh axis
+    replicates via the usual divisibility/fallback path in
+    :meth:`ShardingRules.spec_for_shape`.
+    """
+    on_mesh = grain_axis in mesh.shape
+    rules = {
+        "grains": (grain_axis,) if on_mesh else None,
+        "rows": (grain_axis,) if on_mesh else None,
+    }
+    return ShardingRules(mesh=mesh, rules=rules)
+
+
+def search_plane_specs(tree, rules: ShardingRules):
+    """PartitionSpec pytree for a search-plane pytree (StackedSegments /
+    ShardedStackedSegments / HNTLIndex), from the per-field logical axes
+    declared in ``core.types.SEARCH_PLANE_AXES`` (dim 0; trailing dims
+    replicated)."""
+    from ..core.types import SEARCH_PLANE_AXES  # deferred: no import cycle
+
+    def leaf_spec(path, leaf):
+        keys = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+        logical = SEARCH_PLANE_AXES.get(keys[-1]) if keys else None
+        axes = (logical,) + (None,) * (leaf.ndim - 1) if leaf.ndim else ()
+        return rules.spec_for_shape(leaf.shape, axes)
+    return jax.tree_util.tree_map_with_path(leaf_spec, tree)
+
+
+def shard_search_plane(tree, rules: ShardingRules):
+    """Place a search-plane pytree on the mesh, each leaf sharded per
+    :func:`search_plane_specs` (host numpy leaves go straight to their
+    shards — no replicated staging copy)."""
+    shardings = jax.tree_util.tree_map(
+        lambda s: NamedSharding(rules.mesh, s),
+        search_plane_specs(tree, rules),
+        is_leaf=lambda x: isinstance(x, P))
+    return jax.device_put(tree, shardings)
 
 
 # ---------------------------------------------------------------------------

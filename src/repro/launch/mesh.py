@@ -21,3 +21,21 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (tests / examples)."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_search_mesh(shards: int, *, batch: int = 1):
+    """(data, model) mesh for the distributed search plane: grain panels
+    shard over the ``model`` axis (``shards``-way), query batches over the
+    ``data`` axis.  On CPU, force host devices before any jax import:
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (see
+    docs/SHARDING.md)."""
+    need = shards * batch
+    have = len(jax.devices())
+    if have < need:
+        raise ValueError(
+            f"search mesh needs {need} devices ({batch} data x {shards} "
+            f"model), found {have}; on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need} before "
+            f"importing jax")
+    return jax.make_mesh((batch, shards), ("data", "model"),
+                         devices=jax.devices()[:need])

@@ -3,6 +3,12 @@
 CPU demo (smoke config):
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --smoke \
       --requests 4 --max-new 16
+
+With a retrieval memory sidecar, optionally sharded across a search mesh
+(on CPU, force host devices *before* jax imports — see docs/SHARDING.md):
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --smoke \
+      --retrieval-docs 4096 --retrieval-shards 8
 """
 from __future__ import annotations
 
@@ -13,8 +19,24 @@ import jax
 import numpy as np
 
 from ..configs import get_config, get_smoke_config
+from ..core import HNTLConfig
+from ..core.store import VectorStore
 from ..models import get_model
 from ..serve.engine import ServeEngine
+from .mesh import make_search_mesh
+
+
+def _build_memory(n_docs: int, shards: int, seed: int):
+    """Demo document memory (random embeddings) + optional search mesh."""
+    rng = np.random.default_rng(seed)
+    d = 64
+    store = VectorStore(HNTLConfig(d=d, k=16, s=0, n_grains=8, nprobe=4,
+                                   pool=16, block=64),
+                        seal_threshold=max(256, n_docs // 8))
+    store.add(rng.standard_normal((n_docs, d)).astype(np.float32))
+    store.seal()
+    mesh = make_search_mesh(shards) if shards > 1 else None
+    return store, mesh, rng.standard_normal((4, d)).astype(np.float32)
 
 
 def main(argv=None):
@@ -28,15 +50,31 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--retrieval-docs", type=int, default=0,
+                    help="attach a demo vector memory with N documents")
+    ap.add_argument("--retrieval-shards", type=int, default=1,
+                    help="grain-shard the memory over an N-way search mesh")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     assert cfg.family != "encdec", "use examples/serve_whisper for enc-dec"
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
+    memory = memory_mesh = demo_q = None
+    if args.retrieval_docs > 0:
+        memory, memory_mesh, demo_q = _build_memory(
+            args.retrieval_docs, args.retrieval_shards, args.seed)
     engine = ServeEngine(model, params, n_slots=args.slots,
                          max_len=args.max_len, temperature=args.temperature,
-                         seed=args.seed)
+                         seed=args.seed, memory=memory,
+                         memory_mesh=memory_mesh)
+    if memory is not None:
+        res = engine.retrieve(demo_q, topk=4, mode="B")
+        plane = ("sharded x%d" % args.retrieval_shards
+                 if memory_mesh is not None else "single-device")
+        print(f"[serve] retrieval sidecar: {memory.n_vectors} docs, "
+              f"{plane} search plane, probe ids[0]="
+              f"{np.asarray(res.ids)[0].tolist()}")
 
     rng = np.random.default_rng(args.seed)
     reqs = [engine.submit(rng.integers(0, cfg.vocab, size=args.prompt_len),

@@ -35,7 +35,7 @@ class Request:
 class ServeEngine:
     def __init__(self, model, params, *, n_slots: int = 4,
                  max_len: int = 512, temperature: float = 0.0, seed: int = 0,
-                 memory: Optional[VectorStore] = None):
+                 memory: Optional[VectorStore] = None, memory_mesh=None):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -43,6 +43,9 @@ class ServeEngine:
         self.max_len = max_len
         self.temperature = temperature
         self.memory = memory        # optional RAG tier (fused stacked search)
+        # optional (data, model) mesh: retrieval runs on the distributed
+        # search plane — grain-sharded index, one all-gather top-k merge
+        self.memory_mesh = memory_mesh
         self.rng = np.random.default_rng(seed)
         self.caches = model.init_cache(n_slots, max_len)
         self.pos = np.zeros(n_slots, np.int64)        # next position per slot
@@ -134,12 +137,15 @@ class ServeEngine:
 
         One jitted stacked-segment search regardless of how many sealed
         segments the memory holds — the serving tier never pays a
-        per-segment dispatch on the request path.
+        per-segment dispatch on the request path.  With ``memory_mesh`` set
+        the search runs grain-sharded across the mesh (shard-local
+        scan/re-rank + one merge collective), still a single dispatch.
         """
         assert self.memory is not None, "engine built without memory="
         q = np.asarray(q_embed, np.float32)
         return self.memory.search(q, topk=topk, mode=mode,
-                                  tag_mask=tag_mask, ts_range=ts_range)
+                                  tag_mask=tag_mask, ts_range=ts_range,
+                                  mesh=self.memory_mesh)
 
 
 def promote_to_retrieval(model, caches, cache_len: int):

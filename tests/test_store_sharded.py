@@ -1,0 +1,295 @@
+"""Distributed search plane: shard-count invariance, shard-aligned layout,
+and the bounded stacked-plane device cache.
+
+Parity strategy mirrors test_store_stacked.py: with exhaustive knobs the
+grain-sharded plane reduces to exact filtered search, so it must agree
+bit-for-bit (ids) with the single-device fused plane for EVERY shard count
+— warm and cold tiers, with and without mixed-recall masks, queries
+replicated or batch-sharded.  Multi-device runs live in a subprocess with 8
+forced host devices (the main test process keeps the default 1-device view,
+per conftest); single-shard parity and the host-side layout invariants run
+in-process.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import HNTLConfig
+from repro.core.store import VectorStore, shard_segments, stack_segments
+from repro.launch.mesh import make_host_mesh
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+D, N_SEG, SEG_ROWS = 32, 8, 256
+
+
+def run_sub(code: str):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    return out.stdout
+
+
+def _cfg():
+    return HNTLConfig(d=D, k=8, s=0, n_grains=4, nprobe=4, pool=SEG_ROWS,
+                      block=32)
+
+
+def _build(cold: bool = False, **kw):
+    rng = np.random.default_rng(7)
+    st = VectorStore(_cfg(), seal_threshold=SEG_ROWS, cold_tier=cold, **kw)
+    x = rng.standard_normal((N_SEG * SEG_ROWS, D)).astype(np.float32)
+    for i in range(N_SEG):
+        st.add(x[i * SEG_ROWS:(i + 1) * SEG_ROWS],
+               tags=[1 << (i % 3)] * SEG_ROWS, ts=[float(i)] * SEG_ROWS)
+    q = (x[:6] + 0.01 * rng.standard_normal((6, D))).astype(np.float32)
+    return st, x, q
+
+
+def _exhaustive(st):
+    return dict(nprobe=sum(s.index.grains.n_grains for s in st._segments),
+                pool=st.n_vectors * 2)
+
+
+# ---------------------------------------------------------------------------
+# Shard-aligned layout (host control-plane, no mesh needed)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_shards", [1, 3, 4])
+def test_shard_segments_layout_invariants(n_shards):
+    """Grain axis padded to the shard count; every vector owned by exactly
+    one shard; panel ids are in-slice local rows; gids cover the store."""
+    st, x, q = _build(False)
+    plane, perm = shard_segments(st._segments, n_shards)
+    g = plane.index.grains
+    assert g.n_grains % n_shards == 0
+    assert plane.gid_of_row.shape[0] % n_shards == 0
+    n_total = st.n_vectors
+    live = perm[perm >= 0]
+    assert len(live) == n_total and len(np.unique(live)) == n_total
+    gids = np.asarray(plane.gid_of_row)
+    assert sorted(gids[gids >= 0].tolist()) == list(range(n_total))
+    # panel ids are local to the owning shard's row slice
+    g_local = g.n_grains // n_shards
+    rows_local = plane.gid_of_row.shape[0] // n_shards
+    ids = np.asarray(g.ids)
+    valid = np.asarray(g.valid)
+    for s in range(n_shards):
+        ch = ids[s * g_local:(s + 1) * g_local]
+        ok = valid[s * g_local:(s + 1) * g_local]
+        assert (ch[ok] >= 0).all() and (ch[ok] < rows_local).all()
+        assert (ch[~ok] == -1).all()
+        # local rows translate back to this shard's slice of the raw tier
+        orig = perm[s * rows_local:(s + 1) * rows_local]
+        np.testing.assert_array_equal(
+            np.asarray(plane.index.raw)[s * rows_local + ch[ok]],
+            x[orig[ch[ok]]])
+    assert int(np.asarray(plane.index.routing.sizes).sum()) == n_total
+
+
+def test_shard_segments_preserves_stacked_totals():
+    st, x, q = _build(False)
+    stacked = stack_segments(st._segments)
+    plane, perm = shard_segments(st._segments, 4)
+    assert plane.index.grains.n_grains >= stacked.index.grains.n_grains
+    assert (np.asarray(plane.index.routing.sizes).sum()
+            == np.asarray(stacked.index.routing.sizes).sum())
+
+
+# ---------------------------------------------------------------------------
+# Single-shard parity (1-device mesh, in-process)
+# ---------------------------------------------------------------------------
+
+
+def _assert_same(res_a, res_b):
+    assert np.array_equal(np.asarray(res_a.ids, np.int64),
+                          np.asarray(res_b.ids, np.int64))
+    np.testing.assert_allclose(np.asarray(res_a.dists),
+                               np.asarray(res_b.dists), rtol=1e-5, atol=1e-5)
+
+
+def test_sharded_single_device_matches_fused():
+    st, x, q = _build(False)
+    kw = _exhaustive(st)
+    mesh = make_host_mesh(1, 1)
+    for filt in ({}, dict(tag_mask=2), dict(tag_mask=1,
+                                            ts_range=(3.0, 7.0))):
+        fused = st.search(q, topk=10, mode="B", **filt, **kw)
+        sharded = st.search(q, topk=10, mode="B", mesh=mesh, **filt, **kw)
+        _assert_same(fused, sharded)
+
+
+def test_sharded_rejects_looped_and_per_segment():
+    st, x, q = _build(False)
+    mesh = make_host_mesh(1, 1)
+    with pytest.raises(ValueError):
+        st.search(q, mesh=mesh, fused=False)
+    with pytest.raises(ValueError):
+        st.search(q, mesh=mesh, route_mode="per_segment")
+
+
+# ---------------------------------------------------------------------------
+# Shard-count invariance (forced 8-device subprocess)
+# ---------------------------------------------------------------------------
+
+
+def test_shard_count_invariance_exhaustive():
+    """Sharded search over 1/2/4/8 forced host devices agrees bit-for-bit
+    with the single-device fused plane under exhaustive knobs — warm + cold,
+    masked + unmasked, plus batch-sharded queries and Mode A dists."""
+    run_sub("""
+        import numpy as np
+        from repro.core import HNTLConfig
+        from repro.core.store import VectorStore
+        from repro.launch.mesh import make_host_mesh
+
+        D, N_SEG, SEG = %d, %d, %d
+        def build(cold):
+            rng = np.random.default_rng(7)
+            st = VectorStore(HNTLConfig(d=D, k=8, s=0, n_grains=4, nprobe=4,
+                                        pool=SEG, block=32),
+                             seal_threshold=SEG, cold_tier=cold)
+            x = rng.standard_normal((N_SEG * SEG, D)).astype(np.float32)
+            for i in range(N_SEG):
+                st.add(x[i*SEG:(i+1)*SEG], tags=[1 << (i %% 3)]*SEG,
+                       ts=[float(i)]*SEG)
+            assert st.n_segments == N_SEG and not st._mem
+            q = (x[:6] + 0.01*rng.standard_normal((6, D))).astype(np.float32)
+            return st, q
+
+        for cold in (False, True):
+            st, q = build(cold)
+            ex = dict(nprobe=sum(s.index.grains.n_grains
+                                 for s in st._segments),
+                      pool=st.n_vectors * 2)
+            for filt in ({}, dict(tag_mask=2, ts_range=(1.0, 7.0))):
+                base = st.search(q, topk=10, mode="B", **filt, **ex)
+                bi = np.asarray(base.ids)
+                bd = np.asarray(base.dists)
+                for n in (1, 2, 4, 8):
+                    mesh = make_host_mesh(1, n)
+                    res = st.search(q, topk=10, mode="B", mesh=mesh,
+                                    **filt, **ex)
+                    assert np.array_equal(np.asarray(res.ids), bi), \\
+                        (cold, filt, n)
+                    np.testing.assert_allclose(np.asarray(res.dists), bd,
+                                               rtol=1e-5, atol=1e-5)
+            # queries batch-sharded over the data axis of a (2, 4) mesh
+            base = st.search(q, topk=10, mode="B", **ex)
+            res = st.search(q, topk=10, mode="B", mesh=make_host_mesh(2, 4),
+                            shard_queries=True, **ex)
+            assert np.array_equal(np.asarray(res.ids),
+                                  np.asarray(base.ids)), ("batch", cold)
+            # Mode A approximate dists are shard-count invariant too
+            ba = st.search(q, topk=10, mode="A", **ex)
+            ra = st.search(q, topk=10, mode="A", mesh=make_host_mesh(1, 4),
+                           **ex)
+            np.testing.assert_allclose(np.asarray(ba.dists),
+                                       np.asarray(ra.dists),
+                                       rtol=1e-5, atol=1e-5)
+            print('ok', 'cold' if cold else 'warm')
+        print('sharded parity ok')
+    """ % (D, N_SEG, SEG_ROWS))
+
+
+def test_sharded_memtable_and_default_knobs():
+    """The memtable tail merges into sharded results, and default
+    (non-exhaustive, per-shard) knobs still find exact duplicates."""
+    run_sub("""
+        import numpy as np
+        from repro.core import HNTLConfig
+        from repro.core.store import VectorStore
+        from repro.data import synthetic as syn
+        from repro.launch.mesh import make_host_mesh
+
+        cfg = HNTLConfig(d=32, k=8, s=0, n_grains=8, nprobe=8, pool=64,
+                         block=32)
+        st = VectorStore(cfg, seal_threshold=512)
+        x = syn.clustered(4096, 32, n_clusters=16, seed=3)
+        for lo in range(0, 4096, 512):
+            st.add(x[lo:lo + 512])
+        tail = np.full((3, 32), 7.5, np.float32) \\
+            + 0.1 * np.arange(3)[:, None].astype(np.float32)
+        tail_ids = st.add(tail)                    # memtable, unsealed
+        mesh = make_host_mesh(1, 8)
+        res = st.search(tail[:1], topk=2, mode="B", mesh=mesh)
+        assert int(np.asarray(res.ids)[0, 0]) == int(tail_ids[0]), \\
+            np.asarray(res.ids)
+        res2 = st.search(x[:16], topk=1, mode="B", mesh=mesh)
+        assert (np.asarray(res2.ids)[:, 0] == np.arange(16)).all()
+        print('memtable + default knobs ok')
+    """)
+
+
+# ---------------------------------------------------------------------------
+# Bounded stacked-plane device cache (LRU)
+# ---------------------------------------------------------------------------
+
+
+def _counting_stack(monkeypatch):
+    from repro.core import store as store_mod
+    calls = []
+    real = store_mod.stack_segments
+
+    def counting(segments, **kw):
+        calls.append(len(tuple(segments)))
+        return real(segments, **kw)
+
+    monkeypatch.setattr(store_mod, "stack_segments", counting)
+    return calls
+
+
+def test_stack_cache_evicts_lru(monkeypatch):
+    """More live manifests than cache entries -> the LRU plane is dropped
+    and rebuilt on next use; the cache never exceeds its bound."""
+    calls = _counting_stack(monkeypatch)
+    st, x, q = _build(False)          # default: 2 entries
+    mans = []
+    for i in range(3):                # three distinct manifests
+        st.add(np.full((SEG_ROWS, D), float(i), np.float32))
+        mans.append(st.snapshot())
+    for man in mans:
+        st.search(q[:1], topk=1, mode="B", manifest=man)
+    assert len(calls) == 3 and len(st._stack_cache) == 2
+    st.search(q[:1], topk=1, mode="B", manifest=mans[2])   # hit, no rebuild
+    assert len(calls) == 3
+    st.search(q[:1], topk=1, mode="B", manifest=mans[0])   # evicted -> rebuild
+    assert len(calls) == 4
+    assert len(st._stack_cache) == 2
+
+
+def test_stack_cache_capacity_configurable(monkeypatch):
+    calls = _counting_stack(monkeypatch)
+    st, x, q = _build(False, stack_cache_entries=1)
+    man1 = st.snapshot()
+    st.add(np.zeros((SEG_ROWS, D), np.float32))
+    man2 = st.snapshot()
+    for man in (man1, man2, man1):    # ping-pong around a 1-entry cache
+        st.search(q[:1], topk=1, mode="B", manifest=man)
+        assert len(st._stack_cache) == 1
+    assert len(calls) == 3
+    with pytest.raises(ValueError):
+        VectorStore(_cfg(), stack_cache_entries=0)
+
+
+def test_sharded_plane_cached_per_mesh(monkeypatch):
+    """Fused and sharded planes of the same manifest are separate cache
+    entries; repeated sharded searches reuse the placed copy."""
+    calls = _counting_stack(monkeypatch)
+    st, x, q = _build(False, stack_cache_entries=4)
+    mesh = make_host_mesh(1, 1)
+    kw = _exhaustive(st)
+    st.search(q[:1], topk=1, mode="B", **kw)
+    st.search(q[:1], topk=1, mode="B", mesh=mesh, **kw)
+    st.search(q[:1], topk=1, mode="B", mesh=mesh, **kw)
+    # one stack for the fused plane + one underneath shard_segments
+    assert len(calls) == 2
+    assert len(st._stack_cache) == 2
