@@ -17,6 +17,8 @@ BENCHES = [
     ("memory_footprint", "Paper 3.2: 66 B/vec vs HNSW graph bytes"),
     ("sift_scale", "Paper 4: SIFT-like scale recall/QPS/DRAM"),
     ("segment_scale", "LSM store: fused stacked search vs per-segment loop"),
+    ("churn", "Mutation plane: QPS/recall under delete+upsert churn, "
+              "compaction reclaim"),
     ("shard_scale", "Distributed plane: QPS + per-shard scan work vs shards"),
     ("hntl_kv_decode", "HNTL-KV retrieval decode vs exact attention"),
 ]

@@ -63,13 +63,13 @@ def _child(quick: bool):
     rows = []
     for shards in (1, 2, 4, 8):
         mesh = make_host_mesh(1, shards) if shards > 1 else None
-        plane, _, _, _ = (st._sharded_for(tuple(st._segments), mesh, "model")
-                          if mesh is not None else (None,) * 4)
         if mesh is not None:
+            plane = st._sharded_for(tuple(st._segments), mesh,
+                                    "model")["plane"]
             g_local = plane.index.grains.n_grains // shards
             cap = plane.index.grains.cap
         else:
-            stacked, _, _ = st._stacked_for(tuple(st._segments))
+            stacked = st._stacked_for(tuple(st._segments))["plane"]
             g_local = stacked.index.grains.n_grains
             cap = stacked.index.grains.cap
         probe = min(nprobe, g_local)

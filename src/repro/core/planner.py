@@ -128,16 +128,22 @@ def search(index: HNTLIndex, q: jax.Array, *, nprobe: int, pool: int,
 # ---------------------------------------------------------------------------
 
 
-def _mixed_recall_mask(grains, tag_mask, ts_range):
-    """In-jit [G, cap] predicate + [G] routing pushdown from tag/ts filters.
+def _mixed_recall_mask(grains, tag_mask, ts_range, live=None):
+    """In-jit [G, cap] predicate + [G] routing pushdown from tag/ts filters
+    and the mutation-epoch liveness bitmap.
 
     Returns (extra_mask | None, grain_ok | None).  grain_ok excludes grains
     with *zero* matching records from routing, so top-P probes are never
-    spent on segments the filter rules out wholesale.
+    spent on segments the filter rules out wholesale (or on fully-dead
+    grains).  ``live`` is the per-slot tombstone/TTL mask pushed in from the
+    store — it rides the same in-situ predicate path as tag/ts, so deletes
+    are visible inside the one-dispatch scan without re-stacking.
     """
-    if tag_mask is None and ts_range is None:
+    if tag_mask is None and ts_range is None and live is None:
         return None, None
     keep = grains.valid
+    if live is not None:
+        keep = jnp.logical_and(keep, live)
     if tag_mask is not None and grains.tags is not None:
         keep = jnp.logical_and(
             keep, (grains.tags & tag_mask.astype(jnp.uint32)) != 0)
@@ -206,9 +212,12 @@ def search_stacked(stacked: StackedSegments, q: jax.Array, *, nprobe: int,
       sets translate=False and resolves rows -> (segment, local) on the host.
     tag_mask / ts_range: *traced* mixed-recall predicates evaluated in-situ
       (and pushed down into routing), so filtered search is still one call.
+    ``stacked.live`` (tombstone/upsert/TTL liveness) joins the same in-situ
+    predicate, so mutated stores stay a single dispatch too.
     """
     index = stacked.index
-    extra, grain_ok = _mixed_recall_mask(index.grains, tag_mask, ts_range)
+    extra, grain_ok = _mixed_recall_mask(index.grains, tag_mask, ts_range,
+                                         live=stacked.live)
     if route_mode == "per_segment":
         # no filter pushdown here: the legacy loop routes unmasked and only
         # filters in-scan, and this mode's contract is loop-identical probes
@@ -284,6 +293,10 @@ def search_stacked_sharded(plane: ShardedStackedSegments, q: jax.Array, *,
     (throughput scaling); results come back sharded the same way.
     ``translate=False`` returns *permuted global rows* (shard-local row +
     shard offset) for the host-side cold-tier re-rank.
+    ``plane.live`` (the mutation-epoch tombstone/TTL bitmap, chunked along
+    the grain axis like every panel) is applied in-situ inside each shard's
+    scan, so a shard's Mode B re-rank can never resurrect a dead row of its
+    own raw slice.
     """
     from ..distributed.sharding import SHARD_MAP_CHECK_KW, shard_map
 
@@ -302,8 +315,8 @@ def search_stacked_sharded(plane: ShardedStackedSegments, q: jax.Array, *,
     assert mode == "A" or plane.index.raw is not None, \
         "in-jit Mode B needs the warm tier; cold stores re-rank on host"
 
-    def body(index, gid_local, qv, tm, tr):
-        extra, grain_ok = _mixed_recall_mask(index.grains, tm, tr)
+    def body(index, gid_local, live, qv, tm, tr):
+        extra, grain_ok = _mixed_recall_mask(index.grains, tm, tr, live=live)
         gids, _ = routing.route(index.routing, qv, probe,
                                 grain_mask=grain_ok)
         dists, rows = scan_probed(index, qv, gids, envelope_frac, qeff,
@@ -332,8 +345,10 @@ def search_stacked_sharded(plane: ShardedStackedSegments, q: jax.Array, *,
 
     q_spec = P(batch_axis) if batch_axis is not None else P(None)
     in_specs = (_spec_tree(plane.index, P(grain_axis)), P(grain_axis),
-                q_spec, _spec_tree(tag_mask, P()), _spec_tree(ts_range, P()))
+                _spec_tree(plane.live, P(grain_axis)), q_spec,
+                _spec_tree(tag_mask, P()), _spec_tree(ts_range, P()))
     fn = shard_map(body, mesh=mesh, in_specs=in_specs,
                    out_specs=(q_spec, q_spec), **{SHARD_MAP_CHECK_KW: False})
-    ids, d = fn(plane.index, plane.gid_of_row, q, tag_mask, ts_range)
+    ids, d = fn(plane.index, plane.gid_of_row, plane.live, q, tag_mask,
+                ts_range)
     return SearchResult(ids=ids, dists=d)

@@ -21,10 +21,14 @@ def fit_scale(z: jax.Array, mask: jax.Array, qmax: int = INT16_MAX,
               quantile: float = 0.9995, mult: float = 1.25) -> jax.Array:
     """Per-grain coordinate scale Delta from a high quantile of |z|.
 
-    z: [cap, k]; mask: [cap].  Padded rows excluded by pushing them to 0.
+    z: [cap, k]; mask: [cap].  The quantile runs over *valid* slots only
+    (masked rows are NaN-excluded): zero-filling padded rows would drag the
+    quantile of a sparsely filled grain toward 0 and clip every real
+    coordinate to qmax.
     """
-    mag = jnp.abs(z) * mask[:, None].astype(z.dtype)
-    q = jnp.quantile(mag.reshape(-1), quantile)
+    mag = jnp.where(mask[:, None], jnp.abs(z), jnp.nan)
+    q = jnp.nanquantile(mag.reshape(-1), quantile)
+    q = jnp.where(jnp.isfinite(q), q, 0.0)        # all-padding grain
     return jnp.maximum(q * mult, 1e-12) / qmax
 
 

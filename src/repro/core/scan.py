@@ -17,8 +17,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-NEG_BIG = 3.0e38   # plain float: a module-level jnp constant would become a
-# tracer if this module is first imported inside an active trace
+from .types import BIG
+
+# The ONE invalid-slot sentinel lives in types.BIG (planner masks compare
+# dists < BIG / 2); kept under the historical local name for the kernels
+# that mirror this oracle.
+NEG_BIG = BIG
 
 
 def block_dist_int(zq: jax.Array, coords: jax.Array) -> jax.Array:

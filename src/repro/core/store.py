@@ -26,6 +26,18 @@ claims graph indexes cannot offer cheaply:
   timestamp; predicates are evaluated *in-situ* inside the sequential scan
   (extra_mask) and pushed down into routing (grains with zero matching
   records are never probed), not as a post-filter.
+- **mutation lifecycle**: ``delete(ids)`` tombstones records, ``upsert``
+  writes a new version that shadows every older one, and records can carry
+  a TTL.  None of these touch a sealed segment: liveness is a host-side
+  (gid, seq) table per manifest, materialised per mutation epoch as a
+  [G, cap] bitmap that rides the same in-situ predicate path as tag/ts
+  through BOTH the fused and the grain-sharded plane — a delete is visible
+  in the very next one-dispatch search without re-stacking anything.
+  ``compact()`` is where tombstones are physically reclaimed: dead and
+  expired rows are dropped from the merged segment, shrinking the stacked
+  plane.  Mutations are manifest-scoped like everything else: snapshots
+  keep returning deleted rows' last captured state, and a branch's deletes
+  never leak into its parent (each fork copies the liveness table).
 - **tiered cold storage**: sealed segments optionally spill raw vectors to a
   numpy memmap file (the paper's SSD/mmap tier); Mode B re-rank reads the
   merged candidate pool from it.
@@ -40,6 +52,7 @@ import contextlib
 import dataclasses
 import os
 import tempfile
+import time
 import uuid
 import weakref
 from typing import Optional, Sequence
@@ -74,6 +87,9 @@ class Segment:
     cold_path: Optional[str] = None  # memmap file with raw vectors
     d: int = 0
     id_map: Optional[np.ndarray] = None  # [n] i64 — local row -> global id
+    seq: Optional[np.ndarray] = None     # [n] i64 — per-row insert sequence
+    expire: Optional[np.ndarray] = None  # [n] f64 — absolute TTL deadline
+                                         # (None = no TTLs in this segment)
 
     def raw_vectors(self) -> np.ndarray:
         if self.index.raw is not None:
@@ -86,6 +102,13 @@ class Segment:
         if self.id_map is not None:
             return self.id_map
         return np.arange(self.id_base, self.id_base + self.n, dtype=np.int64)
+
+    def global_seqs(self) -> np.ndarray:
+        """Insert sequence of every local row.  For segments sealed before
+        any upsert, gid == seq (both assigned monotonically by add)."""
+        if self.seq is not None:
+            return self.seq
+        return self.global_ids()
 
     def map_local(self, local_ids: np.ndarray) -> np.ndarray:
         """Translate local candidate ids to global ids (-1 stays -1)."""
@@ -138,6 +161,12 @@ class Manifest:
     The memtable rows are captured by reference (tuple of the row arrays),
     not by watermark alone: a later ``seal()`` clears the store's live
     memtable, and a snapshot must keep returning exactly what it saw.
+
+    Mutation state is captured the same way: ``mut_gid``/``mut_seq`` are the
+    (sorted) liveness overrides at snapshot time — gid g's live version is
+    mut_seq[i] where mut_gid[i] == g (−1 = deleted), any gid absent from the
+    table is live at its only version.  Later deletes/upserts in the store
+    bump its epoch and never alter a captured manifest.
     """
 
     segments: tuple                  # tuple[Segment, ...]
@@ -146,6 +175,40 @@ class Manifest:
     mem_tags: tuple = ()             # tuple[int]
     mem_ts: tuple = ()               # tuple[float]
     mem_base: int = 0                # global id of the first captured row
+    mem_ids: tuple = ()              # tuple[int] — gid of each captured row
+    mem_seq: tuple = ()              # tuple[int] — insert seq of each row
+    mem_expire: tuple = ()           # tuple[float] — TTL deadline (inf=none)
+    mut_gid: Optional[np.ndarray] = None  # [M] i64 sorted mutated gids
+    mut_seq: Optional[np.ndarray] = None  # [M] i64 live seq (-1 = deleted)
+    writer: str = ""                 # identity of the capturing store
+    epoch: int = 0                   # mutation epoch at capture time
+
+
+def _live_rows(mut_gid: Optional[np.ndarray], mut_seq: Optional[np.ndarray],
+               gids: np.ndarray, seqs: np.ndarray) -> Optional[np.ndarray]:
+    """Tombstone/shadow verdict for physical rows.  None = all live.
+
+    A row (gid g, seq s) is dead iff g appears in the mutation table with a
+    live seq != s — i.e. it was deleted (live seq -1) or shadowed by a
+    later upsert of the same gid (LSM newest-version-wins).
+    """
+    if mut_gid is None or len(mut_gid) == 0 or len(gids) == 0:
+        return None
+    pos = np.minimum(np.searchsorted(mut_gid, gids), len(mut_gid) - 1)
+    dead = (mut_gid[pos] == gids) & (mut_seq[pos] != seqs)
+    if not dead.any():
+        return None
+    return ~dead
+
+
+def _concat_expiry(segments: Sequence["Segment"]) -> Optional[np.ndarray]:
+    """Per-row TTL deadlines across segments, or None when no segment
+    carries any (the common no-TTL case costs nothing per search)."""
+    if all(s.expire is None for s in segments):
+        return None
+    return np.concatenate(
+        [s.expire if s.expire is not None else np.full(s.n, np.inf)
+         for s in segments])
 
 
 # ---------------------------------------------------------------------------
@@ -337,7 +400,7 @@ class VectorStore:
 
     def __init__(self, cfg: HNTLConfig, *, seal_threshold: int = 8192,
                  cold_dir: Optional[str] = None, cold_tier: bool = False,
-                 stack_cache_entries: int = 2):
+                 stack_cache_entries: int = 2, clock=time.time):
         self.cfg = cfg
         self.seal_threshold = seal_threshold
         self.cold_tier = cold_tier
@@ -346,8 +409,20 @@ class VectorStore:
         self._mem: list[np.ndarray] = []
         self._mem_tags: list[int] = []
         self._mem_ts: list[float] = []
+        self._mem_ids: list[int] = []           # gid per memtable row
+        self._mem_seq: list[int] = []           # insert seq per memtable row
+        self._mem_expire: list[float] = []      # TTL deadline (inf = none)
         self._next_id = 0
+        self._next_seq = 0
         self._next_seg = 0
+        self._clock = clock                     # injectable for TTL tests
+        # Mutation control plane: gid -> live insert seq (-1 = deleted).
+        # Gids absent from the table are live at their only version.  The
+        # epoch counts mutations; cached per-plane liveness bitmaps key on
+        # (writer, epoch) so a delete invalidates them without re-stacking.
+        self._live_seq: dict = {}
+        self._epoch = 0
+        self._mut_cache = (-1, None, None)      # (epoch, mut_gid, mut_seq)
         self._cold_tag = uuid.uuid4().hex[:8]   # per-writer cold-file suffix
         # Bounded LRU of fused/sharded search planes, keyed by (manifest
         # segment identity, mesh placement).  Every entry pins a full device
@@ -362,18 +437,89 @@ class VectorStore:
             collections.OrderedDict()
 
     # ------------------------------------------------------------- write path
+    def _expiry_of(self, ttl, n: int) -> list:
+        """Absolute TTL deadlines for n new rows (inf = never expires)."""
+        if ttl is None:
+            return [np.inf] * n
+        now = self._clock()
+        ttls = np.broadcast_to(np.asarray(ttl, np.float64), (n,))
+        return [now + float(t) for t in ttls]
+
+    def _append_rows(self, vecs, ids, tags, ts, ttl) -> None:
+        n = vecs.shape[0]
+        self._mem.extend(list(vecs))
+        self._mem_tags.extend(list(tags) if tags is not None else [0] * n)
+        self._mem_ts.extend(list(ts) if ts is not None else [0.0] * n)
+        self._mem_ids.extend(int(i) for i in ids)
+        self._mem_seq.extend(range(self._next_seq, self._next_seq + n))
+        self._next_seq += n
+        self._mem_expire.extend(self._expiry_of(ttl, n))
+        if len(self._mem) >= self.seal_threshold:
+            self.seal()
+
     def add(self, vecs: np.ndarray, tags: Optional[Sequence[int]] = None,
-            ts: Optional[Sequence[float]] = None) -> np.ndarray:
-        """Append vectors; returns assigned global ids."""
+            ts: Optional[Sequence[float]] = None,
+            ttl=None) -> np.ndarray:
+        """Append vectors; returns assigned global ids.
+
+        ttl: optional per-record (scalar or [n]) time-to-live in seconds;
+        an expired record vanishes from every search without any rewrite
+        and is physically reclaimed at the next compact().
+        """
         vecs = np.asarray(vecs, np.float32)
         n = vecs.shape[0]
         ids = np.arange(self._next_id, self._next_id + n, dtype=np.int64)
         self._next_id += n
-        self._mem.extend(list(vecs))
-        self._mem_tags.extend(list(tags) if tags is not None else [0] * n)
-        self._mem_ts.extend(list(ts) if ts is not None else [0.0] * n)
-        if len(self._mem) >= self.seal_threshold:
-            self.seal()
+        self._append_rows(vecs, ids, tags, ts, ttl)
+        return ids
+
+    # ---------------------------------------------------------- mutation path
+    def delete(self, ids) -> int:
+        """Tombstone records by global id (GDPR-style removal, eviction).
+
+        Purely a control-plane write: no segment is touched, no plane is
+        re-stacked — the next search of ANY plane (fused or sharded, warm or
+        cold, Mode A or B) masks the rows in-scan via the liveness bitmap.
+        Physical reclamation happens at compact().  Returns the number of
+        ids newly tombstoned (already-dead ids are idempotent no-ops, and
+        gids outside the assigned id space are ignored — a stale tombstone
+        there would kill the future insert that gets that gid).
+        """
+        ids = np.atleast_1d(np.asarray(ids, np.int64))
+        newly = 0
+        for g in ids.tolist():
+            if not 0 <= g < self._next_id:
+                continue
+            if self._live_seq.get(g) != -1:
+                newly += 1
+            self._live_seq[g] = -1
+        if newly:
+            self._epoch += 1
+        return newly
+
+    def upsert(self, ids, vecs: np.ndarray,
+               tags: Optional[Sequence[int]] = None,
+               ts: Optional[Sequence[float]] = None,
+               ttl=None) -> np.ndarray:
+        """Overwrite records in place of their global ids (doc re-embedding).
+
+        LSM semantics: the new version is appended to the memtable under the
+        SAME gid with a fresh insert seq, and the liveness table makes every
+        older physical row of that gid dead — sealed segments are never
+        rewritten, searches see exactly one live version, and compact()
+        eventually drops the shadowed rows.  Ids never seen before behave
+        like plain inserts (upsert-as-insert).
+        """
+        ids = np.atleast_1d(np.asarray(ids, np.int64))
+        vecs = np.asarray(vecs, np.float32)
+        assert ids.shape[0] == vecs.shape[0], (ids.shape, vecs.shape)
+        assert (ids >= 0).all(), "upsert needs non-negative gids"
+        new_seq = np.arange(self._next_seq, self._next_seq + len(ids))
+        for g, s in zip(ids.tolist(), new_seq.tolist()):
+            self._live_seq[g] = s
+        self._next_id = max(self._next_id, int(ids.max()) + 1)
+        self._epoch += 1
+        self._append_rows(vecs, ids, tags, ts, ttl)
         return ids
 
     def _grain_count(self, n: int) -> int:
@@ -402,26 +548,37 @@ class VectorStore:
         x = np.stack(self._mem)
         tags = np.asarray(self._mem_tags, np.uint32)
         ts = np.asarray(self._mem_ts, np.float32)
+        gids = np.asarray(self._mem_ids, np.int64)
+        seqs = np.asarray(self._mem_seq, np.int64)
+        expire = np.asarray(self._mem_expire, np.float64)
         n = x.shape[0]
         cfg = dataclasses.replace(self.cfg, n_grains=self._grain_count(n))
         idx, _ = index_mod.build(x, cfg, tags=tags, ts=ts,
                                  keep_raw=not self.cold_tier)
         cold_path = (self._write_cold(x, self._next_seg)
                      if self.cold_tier else None)
-        # ids were assigned sequentially; the memtable holds the last n of them
+        # pure-add memtables hold a contiguous gid run (affine id_base + r);
+        # upserts interleave re-used gids, which need the id_map indirection
+        contiguous = bool(
+            np.array_equal(gids, np.arange(gids[0], gids[0] + n)))
         seg = Segment(
-            seg_id=self._next_seg, index=idx, n=n, id_base=self._next_id - n,
-            tags=tags, ts=ts, cold_path=cold_path, d=x.shape[1])
+            seg_id=self._next_seg, index=idx, n=n,
+            id_base=int(gids[0]) if contiguous else 0,
+            tags=tags, ts=ts, cold_path=cold_path, d=x.shape[1],
+            id_map=None if contiguous else gids,
+            seq=seqs,
+            expire=expire if np.isfinite(expire).any() else None)
         if cold_path is not None:
             _reclaim_cold_on_gc(seg, cold_path)
         self._segments.append(seg)
         self._next_seg += 1
         self._mem, self._mem_tags, self._mem_ts = [], [], []
+        self._mem_ids, self._mem_seq, self._mem_expire = [], [], []
         return seg
 
     # ------------------------------------------------------------ compaction
     def compact(self, *, fanin: int = 4, tier_factor: int = 4,
-                max_rounds: int = 16) -> int:
+                max_rounds: int = 16, now: Optional[float] = None) -> int:
         """Size-tiered LSM compaction of sealed segments.
 
         Segments are bucketed into size tiers (tier t holds segments of
@@ -432,10 +589,18 @@ class VectorStore:
         ``id_map`` and the cold tier consolidated into a single memmap.
         Rounds repeat until no tier is full (a merge can cascade upward).
 
+        This is also where mutations are physically reclaimed: tombstoned
+        rows, upsert-shadowed versions and rows whose TTL passed (as of
+        ``now``, default the store clock) are DROPPED from the merged
+        segment, so the stacked plane and the cold tier actually shrink.
+        Tombstones whose gid no longer exists anywhere in this store are
+        purged from the liveness table afterwards.
+
         Keeps the segment count O(fanin * log_tier_factor(N)) so the stacked
         search plane stays small and its padding waste bounded.  Compaction
         is copy-on-write like every other manifest op: older snapshots and
-        branches keep referencing the pre-merge segments.
+        branches keep referencing the pre-merge segments (and their own
+        captured liveness tables).
 
         Returns the number of merges performed.
         """
@@ -443,11 +608,14 @@ class VectorStore:
             raise ValueError(f"fanin must be >= 2, got {fanin}")
         if tier_factor < 2:
             raise ValueError(f"tier_factor must be >= 2, got {tier_factor}")
+        now = self._clock() if now is None else now
         merges = 0
         for _ in range(max_rounds):
-            if not self._compact_once(fanin, tier_factor):
+            if not self._compact_once(fanin, tier_factor, now):
                 break
             merges += 1
+        if merges:
+            self._purge_tombstones()
         return merges
 
     def _tier_of(self, n: int, tier_factor: int) -> int:
@@ -457,7 +625,7 @@ class VectorStore:
             t += 1
         return t
 
-    def _compact_once(self, fanin: int, tier_factor: int) -> bool:
+    def _compact_once(self, fanin: int, tier_factor: int, now: float) -> bool:
         tiers: dict[int, list[Segment]] = collections.defaultdict(list)
         for seg in self._segments:
             tiers[self._tier_of(seg.n, tier_factor)].append(seg)
@@ -465,27 +633,59 @@ class VectorStore:
             if len(tiers[t]) < fanin:
                 continue
             group = sorted(tiers[t], key=lambda s: s.seg_id)[:fanin]
-            merged = self._merge_segments(group)
+            merged = self._merge_segments(group, now)
             gone = {id(s) for s in group}
             pos = min(i for i, s in enumerate(self._segments)
                       if id(s) in gone)
             kept = [s for s in self._segments if id(s) not in gone]
-            kept.insert(pos, merged)
+            if merged is not None:             # every row was dead/expired
+                kept.insert(pos, merged)
             self._segments = kept
             return True
         return False
 
-    def _merge_segments(self, group: Sequence[Segment]) -> Segment:
-        """Rebuild ``group`` as one segment with remapped global ids."""
+    def _mut_arrays(self):
+        """The liveness table as sorted (gid, seq) arrays, cached per epoch
+        (the vectorised form every per-row liveness check runs on)."""
+        if self._mut_cache[0] != self._epoch:
+            if self._live_seq:
+                mg = np.fromiter(self._live_seq.keys(), np.int64,
+                                 len(self._live_seq))
+                ms = np.fromiter(self._live_seq.values(), np.int64,
+                                 len(self._live_seq))
+                order = np.argsort(mg)
+                self._mut_cache = (self._epoch, mg[order], ms[order])
+            else:
+                self._mut_cache = (self._epoch, None, None)
+        return self._mut_cache[1], self._mut_cache[2]
+
+    def _merge_segments(self, group: Sequence[Segment],
+                        now: float) -> Optional[Segment]:
+        """Rebuild ``group`` as one segment with remapped global ids,
+        dropping tombstoned / shadowed / TTL-expired rows (reclamation).
+        Returns None when nothing in the group survives."""
         x = np.concatenate([np.asarray(s.raw_vectors(), np.float32)
                             for s in group])
         gids = np.concatenate([s.global_ids() for s in group])
+        seqs = np.concatenate([s.global_seqs() for s in group])
+        expire = _concat_expiry(group)
         tags = np.concatenate(
             [s.tags if s.tags is not None else np.zeros(s.n, np.uint32)
              for s in group])
         ts = np.concatenate(
             [s.ts if s.ts is not None else np.zeros(s.n, np.float32)
              for s in group])
+        mg, ms = self._mut_arrays()
+        keep = _live_rows(mg, ms, gids, seqs)
+        keep = np.ones(len(gids), bool) if keep is None else keep.copy()
+        if expire is not None:
+            keep &= expire > now
+        if not keep.all():
+            x, gids, seqs, tags, ts = (a[keep] for a in
+                                       (x, gids, seqs, tags, ts))
+            expire = expire[keep] if expire is not None else None
+        if x.shape[0] == 0:
+            return None
         n, d = x.shape
         cfg = dataclasses.replace(self.cfg, n_grains=self._grain_count(n))
         idx, _ = index_mod.build(x, cfg, tags=tags, ts=ts,
@@ -494,36 +694,93 @@ class VectorStore:
                      if self.cold_tier else None)
         seg = Segment(seg_id=self._next_seg, index=idx, n=n, id_base=0,
                       tags=tags, ts=ts, cold_path=cold_path, d=d,
-                      id_map=gids.astype(np.int64))
+                      id_map=gids.astype(np.int64), seq=seqs,
+                      expire=expire if expire is not None
+                      and np.isfinite(expire).any() else None)
         if cold_path is not None:
             _reclaim_cold_on_gc(seg, cold_path)
         self._next_seg += 1
         return seg
 
+    def _purge_tombstones(self) -> None:
+        """Drop liveness entries whose gid no longer exists anywhere in THIS
+        store (compaction reclaimed every physical row).  Snapshots and
+        branches are unaffected — they captured their own tables."""
+        if not self._live_seq:
+            return
+        present = [s.global_ids() for s in self._segments]
+        present.append(np.asarray(self._mem_ids, np.int64))
+        alive = np.unique(np.concatenate(present)) if present else \
+            np.empty(0, np.int64)
+        mg = np.fromiter(self._live_seq.keys(), np.int64,
+                         len(self._live_seq))
+        gone = mg[~np.isin(mg, alive)]
+        if len(gone):
+            for g in gone.tolist():
+                del self._live_seq[g]
+            self._epoch += 1
+
     # ---------------------------------------------------------- control plane
     def snapshot(self) -> Manifest:
+        mg, ms = self._mut_arrays()
         return Manifest(segments=tuple(self._segments),
                         mem_n=len(self._mem), mem=tuple(self._mem),
                         mem_tags=tuple(self._mem_tags),
                         mem_ts=tuple(self._mem_ts),
-                        mem_base=self._next_id - len(self._mem))
+                        mem_base=self._next_id - len(self._mem),
+                        mem_ids=tuple(self._mem_ids),
+                        mem_seq=tuple(self._mem_seq),
+                        mem_expire=tuple(self._mem_expire),
+                        mut_gid=mg, mut_seq=ms,
+                        writer=self._cold_tag, epoch=self._epoch)
 
     def branch(self) -> "VectorStore":
-        """Zero-copy fork: new store sharing all sealed segments (CoW)."""
+        """Zero-copy fork: new store sharing all sealed segments (CoW).
+
+        The liveness table is *copied*: the child starts from the parent's
+        mutation state, but neither side's later deletes/upserts leak into
+        the other (each writer owns its own (writer, epoch) lineage)."""
         child = VectorStore(self.cfg, seal_threshold=self.seal_threshold,
                             cold_dir=self.cold_dir, cold_tier=self.cold_tier,
-                            stack_cache_entries=self.stack_cache_entries)
+                            stack_cache_entries=self.stack_cache_entries,
+                            clock=self._clock)
         child._segments = list(self._segments)        # shared immutable refs
         child._mem = list(self._mem)                  # memtable copied (small)
         child._mem_tags = list(self._mem_tags)
         child._mem_ts = list(self._mem_ts)
+        child._mem_ids = list(self._mem_ids)
+        child._mem_seq = list(self._mem_seq)
+        child._mem_expire = list(self._mem_expire)
         child._next_id = self._next_id
+        child._next_seq = self._next_seq
         child._next_seg = self._next_seg
+        child._live_seq = dict(self._live_seq)        # isolated mutations
+        child._epoch = self._epoch
         return child
 
     @property
     def n_vectors(self) -> int:
+        """Physical rows (live + tombstoned-but-unreclaimed)."""
         return sum(s.n for s in self._segments) + len(self._mem)
+
+    def n_live(self, now: Optional[float] = None) -> int:
+        """Records a search can return: physical rows minus tombstoned,
+        upsert-shadowed and TTL-expired ones."""
+        now = self._clock() if now is None else now
+        mg, ms = self._mut_arrays()
+        total = 0
+        for gids, seqs, expire in [
+                (s.global_ids(), s.global_seqs(), s.expire)
+                for s in self._segments] + [
+                (np.asarray(self._mem_ids, np.int64),
+                 np.asarray(self._mem_seq, np.int64),
+                 np.asarray(self._mem_expire, np.float64))]:
+            keep = _live_rows(mg, ms, gids, seqs)
+            keep = np.ones(len(gids), bool) if keep is None else keep.copy()
+            if expire is not None and len(gids):
+                keep &= np.asarray(expire) > now
+            total += int(keep.sum())
+        return total
 
     @property
     def n_segments(self) -> int:
@@ -543,34 +800,116 @@ class VectorStore:
             self._stack_cache.popitem(last=False)
         return value
 
-    def _stacked_for(self, segments: tuple):
-        """Stacked super-index for a manifest, rebuilt lazily on change."""
+    def _stacked_for(self, segments: tuple) -> dict:
+        """Stacked super-index for a manifest, rebuilt lazily on change.
+
+        The cached entry also carries the host-side row metadata (flat-row
+        gid/seq/TTL tables + a host copy of the grain id panels) that the
+        per-epoch liveness bitmap is computed from — mutations never trigger
+        a re-stack, they only swap the plane's ``live`` leaf."""
         key = tuple(id(s) for s in segments)
         hit = self._cache_get(key)
         if hit is not None:
             return hit
         stacked = stack_segments(segments)
-        offsets = np.asarray(stacked.row_offset, np.int64)
         gids = np.asarray(stacked.gid_of_row, np.int64)
-        return self._cache_put(key, segments, (stacked, offsets, gids))
+        entry = {
+            "plane": stacked,
+            "offsets": np.asarray(stacked.row_offset, np.int64),
+            "gids": gids,
+            "ids_host": np.asarray(stacked.index.grains.ids),
+            "row_gid": gids,
+            "row_seq": np.concatenate(
+                [s.global_seqs() for s in segments]),
+            "row_exp": _concat_expiry(segments),
+            "row_base": None,          # fused ids ARE global flat rows
+            "rules": None,             # single-device: plain device put
+            "live": (None, None),      # (epoch key, plane-with-live)
+        }
+        return self._cache_put(key, segments, entry)
 
-    def _sharded_for(self, segments: tuple, mesh, grain_axis: str):
+    def _sharded_for(self, segments: tuple, mesh, grain_axis: str) -> dict:
         """Mesh-sharded plane for a manifest: grain-aligned re-layout
         (`shard_segments`) placed shard-wise on the mesh, plus the host-side
-        row metadata the cold path needs.  Cached alongside the fused plane
-        (same LRU, keyed additionally by mesh identity)."""
+        row metadata the cold path and the liveness bitmap need.  Cached
+        alongside the fused plane (same LRU, keyed additionally by mesh
+        identity).  Row metadata is PERMUTED like the raw tier, so the
+        liveness bitmap lands shard-aligned and Mode B re-rank stays
+        shard-local under mutation."""
         from ..distributed import sharding as shd
         key = (tuple(id(s) for s in segments), mesh, grain_axis)
         hit = self._cache_get(key)
         if hit is not None:
             return hit
-        plane, perm = shard_segments(segments, mesh.shape[grain_axis])
+        n_shards = mesh.shape[grain_axis]
+        plane, perm = shard_segments(segments, n_shards)
+        ids_host = np.asarray(plane.index.grains.ids)
         rules = shd.search_plane_rules(mesh, grain_axis=grain_axis)
         plane = shd.shard_search_plane(plane, rules)
         offsets = np.zeros(len(segments) + 1, np.int64)
         np.cumsum([s.n for s in segments], out=offsets[1:])
         gids = np.concatenate([s.global_ids() for s in segments])
-        return self._cache_put(key, segments, (plane, perm, offsets, gids))
+        seqs = np.concatenate([s.global_seqs() for s in segments])
+        exp = _concat_expiry(segments)
+        keep = np.maximum(perm, 0)
+        g_total = ids_host.shape[0]
+        rows_local = len(perm) // n_shards
+        entry = {
+            "plane": plane,
+            "perm": perm,
+            "offsets": offsets,
+            "gids": gids,
+            "ids_host": ids_host,
+            "row_gid": np.where(perm >= 0, gids[keep], -1),
+            "row_seq": np.where(perm >= 0, seqs[keep], -1),
+            "row_exp": (np.where(perm >= 0, exp[keep], np.inf)
+                        if exp is not None else None),
+            # shard-local panel ids -> permuted global rows: + shard offset
+            "row_base": (np.arange(g_total) // (g_total // n_shards)
+                         * rows_local),
+            "rules": rules,
+            "live": (None, None),
+        }
+        return self._cache_put(key, segments, entry)
+
+    def _live_plane(self, entry: dict, man: Manifest, now: float):
+        """The entry's plane with the manifest-epoch liveness leaf attached.
+
+        Computed host-side from the cached row tables ((gid, seq) vs the
+        manifest's mutation table, TTL deadlines vs ``now``), gathered into
+        a [G, cap] bitmap through the grain id panels, and swapped in with
+        ``dataclasses.replace`` — the plane itself is untouched (NO
+        re-stack).  Cached per (writer, epoch): repeat searches at the same
+        epoch reuse the placed bitmap; any delete/upsert bumps the epoch and
+        invalidates exactly this leaf.  TTL planes add ``now`` to the key
+        (a moving clock recomputes; the no-TTL common case never does)."""
+        has_ttl = entry["row_exp"] is not None
+        key = (man.writer, man.epoch, now if has_ttl else None)
+        ck, cached = entry["live"]
+        if ck == key:
+            return cached
+        live_row = _live_rows(man.mut_gid, man.mut_seq,
+                              entry["row_gid"], entry["row_seq"])
+        if has_ttl:
+            alive_t = entry["row_exp"] > now
+            if not alive_t.all():
+                live_row = alive_t if live_row is None \
+                    else live_row & alive_t
+        plane = entry["plane"]
+        if live_row is not None:
+            ids = entry["ids_host"]
+            rows = ids.astype(np.int64)
+            if entry["row_base"] is not None:
+                rows = rows + entry["row_base"][:, None]
+            bitmap = (ids >= 0) & live_row[np.maximum(rows, 0)]
+            if entry["rules"] is not None:
+                from ..distributed import sharding as shd
+                leaf = shd.shard_plane_field(bitmap, entry["rules"], "live")
+            else:
+                leaf = jnp.asarray(bitmap)
+            plane = dataclasses.replace(plane, live=leaf)
+        entry["live"] = (key, plane)
+        return plane
 
     def search(self, q: np.ndarray, *, topk: int = 10, mode: str = "B",
                tag_mask: Optional[int] = None,
@@ -579,7 +918,8 @@ class VectorStore:
                nprobe: Optional[int] = None, pool: Optional[int] = None,
                fused: bool = True, route_mode: str = "global",
                mesh=None, grain_axis: str = "model",
-               shard_queries: bool = False) -> SearchResult:
+               shard_queries: bool = False,
+               now: Optional[float] = None) -> SearchResult:
         """Unified mixed-recall search across sealed segments + memtable.
 
         All sealed segments are searched by ONE jitted call on the stacked
@@ -601,8 +941,11 @@ class VectorStore:
         shard_queries: with a mesh, also shard the query batch over the
           mesh's data axis (throughput scaling; the axis size must divide
           the query count, and the axis must exist with size > 1).
+        now: TTL clock override (default: the store clock).  Records whose
+          TTL deadline passed are masked exactly like tombstones.
         """
         man = manifest or self.snapshot()
+        now = self._clock() if now is None else now
         q = np.asarray(q, np.float32)
         if q.ndim == 1:
             q = q[None]
@@ -611,7 +954,7 @@ class VectorStore:
                 raise ValueError("mesh= requires the fused search plane")
             return self._search_looped(q, man, topk=topk, mode=mode,
                                        tag_mask=tag_mask, ts_range=ts_range,
-                                       scan_fn=scan_fn)
+                                       scan_fn=scan_fn, now=now)
         all_ids, all_d = [], []
         if man.segments:
             if mesh is not None:
@@ -620,26 +963,26 @@ class VectorStore:
                         "the sharded plane routes per shard; route_mode "
                         "overrides only apply to the single-device plane")
                 ids_s, d_s = self._search_segments_sharded(
-                    q, man.segments, topk=topk, mode=mode, tag_mask=tag_mask,
+                    q, man, topk=topk, mode=mode, tag_mask=tag_mask,
                     ts_range=ts_range, scan_fn=scan_fn, nprobe=nprobe,
                     pool=pool, mesh=mesh, grain_axis=grain_axis,
-                    shard_queries=shard_queries)
+                    shard_queries=shard_queries, now=now)
             else:
                 ids_s, d_s = self._search_segments_fused(
-                    q, man.segments, topk=topk, mode=mode, tag_mask=tag_mask,
+                    q, man, topk=topk, mode=mode, tag_mask=tag_mask,
                     ts_range=ts_range, scan_fn=scan_fn, nprobe=nprobe,
-                    pool=pool, route_mode=route_mode)
+                    pool=pool, route_mode=route_mode, now=now)
             all_ids.append(ids_s)
             all_d.append(d_s)
         return self._merge_with_memtable(q, man, all_ids, all_d, topk,
-                                         tag_mask, ts_range)
+                                         tag_mask, ts_range, now)
 
     def _merge_with_memtable(self, q, man: Manifest, all_ids, all_d, topk,
-                             tag_mask, ts_range) -> SearchResult:
+                             tag_mask, ts_range, now) -> SearchResult:
         """Shared result tail of the fused and looped paths: append the
         memtable pool, handle the empty store, finalize to [Q, topk]."""
         mem_ids, mem_d = self._search_memtable(q, man, topk, tag_mask,
-                                               ts_range)
+                                               ts_range, now)
         if mem_ids is not None:
             all_ids.append(mem_ids)
             all_d.append(mem_d)
@@ -669,11 +1012,15 @@ class VectorStore:
         pool_eff = min(max(want_pool, topk), n_slots)
         return probe, pool_eff, min(topk, pool_eff), (s_n, gmax)
 
-    def _search_segments_fused(self, q, segments, *, topk, mode, tag_mask,
-                               ts_range, scan_fn, nprobe, pool, route_mode):
+    def _search_segments_fused(self, q, man, *, topk, mode, tag_mask,
+                               ts_range, scan_fn, nprobe, pool, route_mode,
+                               now):
         """One jitted search over the stacked plane.  Returns numpy
         (global_ids [Q, k], dists [Q, k])."""
-        stacked, offsets, gids_host = self._stacked_for(segments)
+        segments = man.segments
+        entry = self._stacked_for(segments)
+        stacked = self._live_plane(entry, man, now)
+        offsets, gids_host = entry["offsets"], entry["gids"]
         probe, pool_eff, topk_eff, seg_shape = self._fused_statics(
             segments, stacked, topk, nprobe, pool, route_mode)
         qeff = index_mod.int32_safe_qmax(self.cfg.k, self.cfg.coord_bits)
@@ -752,14 +1099,17 @@ class VectorStore:
                 f"({q_n}); pad the batch to a multiple of the axis")
         return other[0]
 
-    def _search_segments_sharded(self, q, segments, *, topk, mode, tag_mask,
+    def _search_segments_sharded(self, q, man, *, topk, mode, tag_mask,
                                  ts_range, scan_fn, nprobe, pool, mesh,
-                                 grain_axis, shard_queries):
+                                 grain_axis, shard_queries, now):
         """Distributed fused search: shard-local route/scan/pool/re-rank and
         one all-gather merge collective.  Returns numpy (global_ids, dists).
         """
-        plane, perm, offsets, gids_host = self._sharded_for(
-            segments, mesh, grain_axis)
+        segments = man.segments
+        entry = self._sharded_for(segments, mesh, grain_axis)
+        plane = self._live_plane(entry, man, now)
+        perm, offsets, gids_host = (entry["perm"], entry["offsets"],
+                                    entry["gids"])
         n_shards = mesh.shape[grain_axis]
         probe, pool_eff = self._sharded_statics(plane, n_shards, topk,
                                                 nprobe, pool)
@@ -794,34 +1144,63 @@ class VectorStore:
         return (np.asarray(res.ids, np.int64),
                 np.asarray(res.dists, np.float32))
 
-    def _search_memtable(self, q, man: Manifest, topk, tag_mask, ts_range):
+    def _search_memtable(self, q, man: Manifest, topk, tag_mask, ts_range,
+                         now):
         """Hot tail: exact scan (the paper's unsealed memtable semantics).
 
         Reads the manifest's *captured* rows, never the live memtable — a
         seal() after snapshot() must not change what the snapshot returns.
+        Liveness (tombstones / upsert shadowing / TTL) is applied with the
+        manifest's captured mutation table, like every sealed plane.
         """
         if man.mem_n <= 0:
             return None, None
         mem = np.stack(man.mem[:man.mem_n])
         keep = np.ones(man.mem_n, bool)
+        if man.mem_ids:
+            gids = np.asarray(man.mem_ids[:man.mem_n], np.int64)
+        else:                      # legacy manifest: contiguous gid run
+            gids = man.mem_base + np.arange(man.mem_n, dtype=np.int64)
+        seqs = (np.asarray(man.mem_seq[:man.mem_n], np.int64)
+                if man.mem_seq else gids)
+        lv = _live_rows(man.mut_gid, man.mut_seq, gids, seqs)
+        if lv is not None:
+            keep &= lv
+        if man.mem_expire:
+            keep &= np.asarray(man.mem_expire[:man.mem_n],
+                               np.float64) > now
         if tag_mask is not None:
             keep &= (np.asarray(man.mem_tags[:man.mem_n], np.uint32)
                      & np.uint32(tag_mask)) != 0
         if ts_range is not None:
             tsv = np.asarray(man.mem_ts[:man.mem_n], np.float32)
             keep &= (tsv >= ts_range[0]) & (tsv < ts_range[1])
-        base = man.mem_base
         # mask *before* top-k so filtered-out rows cannot shadow valid ones
         d_all = np.sum((mem[None, :, :] - q[:, None, :]) ** 2, axis=-1)
         d_all = np.where(keep[None, :], d_all, _BIG)
         kk = min(topk, man.mem_n)
         order = np.argsort(d_all, axis=1)[:, :kk]
-        return (order.astype(np.int64) + base,
+        return (gids[order],
                 np.take_along_axis(d_all, order, axis=1))
 
     # --------------------------------------------------- legacy looped path
+    def _seg_live_mask(self, man: Manifest, seg: Segment,
+                       now) -> Optional[np.ndarray]:
+        """[G, cap] liveness bitmap of ONE segment's grain panels (the
+        looped oracle's per-segment equivalent of the stacked live leaf)."""
+        lv = _live_rows(man.mut_gid, man.mut_seq,
+                        seg.global_ids(), seg.global_seqs())
+        if seg.expire is not None:
+            alive_t = seg.expire > now
+            if not alive_t.all():
+                lv = alive_t if lv is None else lv & alive_t
+        if lv is None:
+            return None
+        ids = np.asarray(seg.index.grains.ids)      # local rows, -1 padding
+        return (ids >= 0) & lv[np.maximum(ids, 0)]
+
     def _search_looped(self, q, man: Manifest, *, topk, mode, tag_mask,
-                       ts_range, scan_fn) -> SearchResult:
+                       ts_range, scan_fn, now) -> SearchResult:
         """Per-segment Python-loop search (pre-fusion data plane).
 
         Kept as the parity oracle for `search` and the baseline for
@@ -832,8 +1211,11 @@ class VectorStore:
         for seg in man.segments:
             extra = None
             g = seg.index.grains
-            if tag_mask is not None or ts_range is not None:
-                keep = jnp.ones(g.ids.shape, bool)
+            live = self._seg_live_mask(man, seg, now)
+            if tag_mask is not None or ts_range is not None \
+                    or live is not None:
+                keep = jnp.ones(g.ids.shape, bool) if live is None \
+                    else jnp.asarray(live)
                 if tag_mask is not None and g.tags is not None:
                     keep &= (g.tags & jnp.uint32(tag_mask)) != 0
                 if ts_range is not None and g.ts is not None:
@@ -864,4 +1246,4 @@ class VectorStore:
             all_ids.append(seg.map_local(ids))
             all_d.append(d)
         return self._merge_with_memtable(q, man, all_ids, all_d, topk,
-                                         tag_mask, ts_range)
+                                         tag_mask, ts_range, now)

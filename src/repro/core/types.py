@@ -164,6 +164,12 @@ class StackedSegments:
     index: HNTLIndex           # fused view: [S*G_max] grains, ids = flat rows
     gid_of_row: jax.Array      # [N_total] i32 — flat raw row -> global id
     row_offset: jax.Array      # [S+1] i32 — raw-row range of each segment
+    # Mutation-epoch liveness: [S*G_max, cap] bool, True = slot's record is
+    # the live version (not tombstoned, not shadowed by an upsert, not
+    # TTL-expired).  None = everything live (no mutations).  Computed on the
+    # host per (manifest, epoch) and attached by `dataclasses.replace` —
+    # deletes/upserts never re-stack the plane, they only swap this leaf.
+    live: Optional[jax.Array] = None
 
     @property
     def n_segments(self) -> int:
@@ -199,6 +205,11 @@ class ShardedStackedSegments:
     index: HNTLIndex           # [n*G_l] grains, ids = shard-local raw rows
     gid_of_row: jax.Array      # [n*rows_per_shard] i32 — permuted row -> gid
                                # (-1 on per-shard padding rows)
+    # Shard-aligned liveness: [n*G_l, cap] bool, chunked along the padded
+    # grain axis exactly like the panels (sharded per SEARCH_PLANE_AXES), so
+    # the shard-local scan AND Mode B re-rank see tombstones without any
+    # cross-shard traffic.  None = everything live.
+    live: Optional[jax.Array] = None
 
     @property
     def rows_total(self) -> int:
@@ -218,6 +229,8 @@ SEARCH_PLANE_AXES = {
     "valid": "grains", "basis": "grains", "mu": "grains", "scale": "grains",
     "res_scale": "grains", "sketch_basis": "grains", "sketch_scale": "grains",
     "tags": "grains", "ts": "grains", "centroids": "grains", "sizes": "grains",
+    # mutation-epoch liveness mask — one entry per (grain, slot)
+    "live": "grains",
     # raw tier + id translation — one entry per (permuted) raw row
     "raw": "rows", "gid_of_row": "rows",
 }

@@ -169,6 +169,20 @@ def shard_search_plane(tree, rules: ShardingRules):
     return jax.device_put(tree, shardings)
 
 
+def shard_plane_field(arr, rules: ShardingRules, field: str):
+    """Place ONE search-plane leaf on the mesh per its declared logical axis.
+
+    The mutation path uses this to swap the per-epoch ``live`` bitmap into
+    an already-placed plane (`dataclasses.replace`) without re-staging any
+    other leaf: a delete/upsert moves G*cap bools, not the index.
+    """
+    from ..core.types import SEARCH_PLANE_AXES  # deferred: no import cycle
+    logical = SEARCH_PLANE_AXES.get(field)
+    axes = (logical,) + (None,) * (arr.ndim - 1) if arr.ndim else ()
+    spec = rules.spec_for_shape(arr.shape, axes)
+    return jax.device_put(arr, NamedSharding(rules.mesh, spec))
+
+
 # ---------------------------------------------------------------------------
 # Active-rules context (keeps model code mesh-agnostic)
 # ---------------------------------------------------------------------------

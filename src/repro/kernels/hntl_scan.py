@@ -26,7 +26,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-NEG_BIG = 3.0e38  # python float: Pallas kernels may not capture traced constants
+# Python-float copy of core.types.BIG (Pallas kernels may not capture traced
+# constants, and this package stays importable without core).  Must stay
+# equal to types.BIG — asserted in tests/test_kernels.py.
+NEG_BIG = 3.0e38
 
 BLK_Q = 128   # query-tile rows   (MXU dimension)
 BLK_C = 128   # cap-tile columns  (lane dimension)

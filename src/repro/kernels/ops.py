@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from . import ref
 from .hntl_scan import hntl_scan, hntl_scan_single
 
+# Python-float copy of core.types.BIG (kept local so the kernels package
+# stays importable without core).  Asserted equal in tests/test_kernels.py.
 NEG_BIG = 3.0e38
 
 

@@ -4,8 +4,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-NEG_BIG = 3.0e38   # plain float: a module-level jnp constant would become a
-# tracer if this module is first imported inside an active trace
+# Python-float copy of core.types.BIG (plain float: a module-level jnp
+# constant would become a tracer if this module is first imported inside an
+# active trace).  Must stay equal to types.BIG — asserted in tests.
+NEG_BIG = 3.0e38
 
 
 def hntl_scan_ref(zq, rq, coords, res, valid, scale, res_scale):

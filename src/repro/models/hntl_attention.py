@@ -32,11 +32,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.index import int32_safe_qmax
+from ..core.types import BIG
 from ..kernels import ops
 from .common import softcap
 
 NEG_INF = -1.0e30
-BIG = 3.0e38
 
 
 @jax.tree_util.register_dataclass

@@ -54,11 +54,15 @@ class ServeEngine:
         self._decode = jax.jit(model.decode_step)
         self._token_buf = np.zeros(n_slots, np.int32)
         self.steps = 0
+        self._next_rid = 0          # monotonic: the queue drains as slots
+        # refill, so len(queue) would re-issue rids across submit waves
 
     # ------------------------------------------------------------- intake
     def submit(self, prompt, max_new: int = 32) -> Request:
-        req = Request(rid=len(self.queue), prompt=np.asarray(prompt, np.int32),
+        req = Request(rid=self._next_rid,
+                      prompt=np.asarray(prompt, np.int32),
                       max_new=max_new, out=[])
+        self._next_rid += 1
         self.queue.append(req)
         return req
 
@@ -146,6 +150,29 @@ class ServeEngine:
         return self.memory.search(q, topk=topk, mode=mode,
                                   tag_mask=tag_mask, ts_range=ts_range,
                                   mesh=self.memory_mesh)
+
+    def remember(self, vecs, *, tags=None, ts=None, ttl=None) -> np.ndarray:
+        """Write docs/session state into the vector memory; ``ttl`` (seconds)
+        makes the entries self-expiring session memory.  Returns gids."""
+        assert self.memory is not None, "engine built without memory="
+        return self.memory.add(np.asarray(vecs, np.float32), tags=tags,
+                               ts=ts, ttl=ttl)
+
+    def evict(self, ids) -> int:
+        """Memory eviction (session teardown, GDPR removal, stale docs):
+        tombstone entries by gid.  The next retrieve() — fused or sharded —
+        masks them in-scan; no plane is rebuilt on the request path.
+        Returns the number of entries newly evicted."""
+        assert self.memory is not None, "engine built without memory="
+        return self.memory.delete(ids)
+
+    def refresh(self, ids, vecs, *, tags=None, ts=None,
+                ttl=None) -> np.ndarray:
+        """Re-embed docs in place (upsert): same gids, new vectors; older
+        versions are shadowed immediately and reclaimed at compaction."""
+        assert self.memory is not None, "engine built without memory="
+        return self.memory.upsert(ids, np.asarray(vecs, np.float32),
+                                  tags=tags, ts=ts, ttl=ttl)
 
 
 def promote_to_retrieval(model, caches, cache_len: int):

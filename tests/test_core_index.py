@@ -76,3 +76,29 @@ def test_search_respects_extra_mask(aniso_index):
     res = search(idx, q, cfg, topk=5, mode="B",
                  extra_mask=jnp.asarray(em))
     assert not np.isin(np.arange(4), np.asarray(res.ids)).any()
+
+
+def test_fit_scale_ignores_padded_slots():
+    """A sparsely filled grain (big cap, few live rows) must fit its
+    quantization scale over the LIVE rows only: with zero-filled padding in
+    the quantile, a 10/1024 fill pushed Delta toward 0 and every real
+    coordinate clipped to qmax (garbage distances)."""
+    from repro.core import quantize
+    from repro.core.index import int32_safe_qmax
+    rng = np.random.default_rng(3)
+    cap, k, live = 1024, 8, 10
+    z = np.zeros((cap, k), np.float32)
+    z[:live] = rng.standard_normal((live, k)).astype(np.float32) * 5.0
+    mask = np.zeros(cap, bool)
+    mask[:live] = True
+    qmax = int32_safe_qmax(k)
+    scale = quantize.fit_scale(jnp.asarray(z), jnp.asarray(mask), qmax=qmax)
+    zq = quantize.quantize_coords(jnp.asarray(z[:live]), scale, qmax=qmax)
+    # no live coordinate saturates, and the roundtrip is tight
+    assert int((np.abs(np.asarray(zq)) >= qmax).sum()) == 0
+    deq = np.asarray(quantize.dequantize_coords(zq, scale))
+    assert np.abs(deq - z[:live]).max() <= float(scale) * 0.5 + 1e-5
+    # an all-padding grain still yields a safe positive scale
+    s_empty = quantize.fit_scale(jnp.asarray(z), jnp.zeros(cap, bool),
+                                 qmax=qmax)
+    assert float(s_empty) > 0.0 and np.isfinite(float(s_empty))

@@ -10,6 +10,7 @@ import pytest
 pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+import mutation_property                                   # noqa: E402
 from repro.core import layout, quantize                    # noqa: E402
 from repro.core.index import int32_safe_qmax               # noqa: E402
 
@@ -54,6 +55,19 @@ def test_pack_grains_is_bijective(data):
     coords = set(zip(assign2.tolist(), slot.tolist()))
     assert len(coords) == n                       # no slot collisions
     assert (slot < cap).all()
+
+
+@settings(deadline=None, max_examples=6)
+@given(ops=st.lists(st.sampled_from(mutation_property.OPS),
+                    min_size=3, max_size=8),
+       seed=st.integers(0, 2 ** 20), cold=st.booleans())
+def test_mutation_interleaving_matches_bruteforce(ops, seed, cold):
+    """After ANY interleaving of add/seal/delete/upsert/compact, fused
+    search (warm and cold tier, with and without tag/ts filters) returns
+    exactly the brute-force L2 top-k over the surviving live set.  The
+    forced-4-device sharded twin of this property runs in
+    test_store_sharded.py (subprocess, same shared oracle)."""
+    mutation_property.mutation_interleaving_check(ops, seed, cold)
 
 
 @settings(deadline=None, max_examples=20)

@@ -117,3 +117,20 @@ def test_invalid_slots_get_big(rng):
     out = hntl_scan(a["zq"], a["rq"], a["coords"], a["res"], a["valid"],
                     a["scale"], a["res_scale"], interpret=True)
     assert (np.asarray(out) > 1e37).all()
+
+
+def test_invalid_slot_sentinel_is_single_sourced():
+    """The 3.0e38 sentinel is hoisted to core.types.BIG; the kernels keep
+    python-float copies (Pallas cannot capture traced constants) which must
+    never drift — planner/store masks compare dists < BIG / 2 against what
+    the kernels wrote."""
+    from repro.core import scan as core_scan
+    from repro.core.types import BIG
+    from repro.kernels import hntl_scan as kscan
+    from repro.kernels import ref as kref
+    from repro.models import hntl_attention as kv
+    assert core_scan.NEG_BIG == BIG
+    assert kscan.NEG_BIG == BIG
+    assert kref.NEG_BIG == BIG
+    assert ops.NEG_BIG == BIG
+    assert kv.BIG == BIG

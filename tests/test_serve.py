@@ -77,6 +77,24 @@ def test_engine_batched_slots(served):
     assert all(r.done and len(r.out) == 4 for r in reqs)
 
 
+def test_rids_unique_across_submit_waves(served):
+    """rid must be monotonic, not len(queue): the queue drains as slots
+    refill, so a second submit wave used to re-issue already-active rids."""
+    cfg, model, params = served
+    rng = np.random.default_rng(2)
+    engine = ServeEngine(model, params, n_slots=2, max_len=64)
+    reqs = [engine.submit(rng.integers(0, cfg.vocab, size=4), max_new=2)
+            for _ in range(3)]
+    engine.step()                                  # drains queue into slots
+    reqs += [engine.submit(rng.integers(0, cfg.vocab, size=4), max_new=2)
+             for _ in range(3)]                    # second wave
+    rids = [r.rid for r in reqs]
+    assert len(set(rids)) == len(rids), rids
+    assert rids == sorted(rids)
+    engine.run_to_completion()
+    assert all(r.done for r in reqs)
+
+
 def test_promote_to_retrieval(served):
     cfg, model, params = served
     cfg2 = dataclasses.replace(cfg, kv_pool=32, kv_nprobe=2)

@@ -1,0 +1,378 @@
+"""Mutation data plane: tombstone deletes, upserts, TTL expiry, and
+compaction-time reclamation.
+
+Contract under test (the acceptance bar of the mutation lifecycle):
+
+- a deleted / shadowed / expired id NEVER appears in any plane's results —
+  fused and sharded, warm and cold, Mode A and Mode B — *without*
+  re-stacking the plane (only the liveness leaf is swapped);
+- a tombstoned search is still ONE jitted dispatch (no per-segment loop
+  sneaks back in);
+- compact() physically reclaims dead rows (fewer physical rows, smaller
+  stacked plane) while search results stay identical;
+- mutations are manifest-scoped: snapshots keep their captured view and a
+  branch's deletes never leak into the parent (or vice versa).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import HNTLConfig
+from repro.core import planner
+from repro.core import store as store_mod
+from repro.core.store import VectorStore
+from repro.core.types import tree_bytes
+
+D, N_SEG, SEG_ROWS = 32, 4, 256
+T0 = 1000.0                       # fake store clock for deterministic TTLs
+
+
+def _cfg():
+    return HNTLConfig(d=D, k=8, s=0, n_grains=4, nprobe=4, pool=SEG_ROWS,
+                      block=32)
+
+
+def _build(cold: bool = False):
+    rng = np.random.default_rng(11)
+    st = VectorStore(_cfg(), seal_threshold=SEG_ROWS, cold_tier=cold,
+                     clock=lambda: T0)
+    x = rng.standard_normal((N_SEG * SEG_ROWS, D)).astype(np.float32)
+    for i in range(N_SEG):
+        st.add(x[i * SEG_ROWS:(i + 1) * SEG_ROWS],
+               tags=[1 << (i % 3)] * SEG_ROWS, ts=[float(i)] * SEG_ROWS)
+    assert st.n_segments == N_SEG and not st._mem
+    q = (x[:6] + 0.01 * rng.standard_normal((6, D))).astype(np.float32)
+    return st, x, q
+
+
+def _exhaustive(st):
+    return dict(nprobe=sum(s.index.grains.n_grains for s in st._segments),
+                pool=st.n_vectors * 2)
+
+
+def _assert_same(res_a, res_b):
+    assert np.array_equal(np.asarray(res_a.ids, np.int64),
+                          np.asarray(res_b.ids, np.int64))
+    np.testing.assert_allclose(np.asarray(res_a.dists),
+                               np.asarray(res_b.dists), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Deletes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cold", [False, True])
+@pytest.mark.parametrize("mode", ["A", "B"])
+def test_deleted_ids_never_returned(cold, mode):
+    st, x, q = _build(cold)
+    dead = np.arange(0, 3 * SEG_ROWS, 2)         # half of three segments
+    assert st.delete(dead) == len(dead)
+    res = st.search(q, topk=20, mode=mode, **_exhaustive(st))
+    ids = np.asarray(res.ids)
+    assert not np.isin(ids, dead).any()
+    assert (ids[:, 0] >= 0).all()                # live rows still found
+
+
+def test_delete_is_visible_without_restack(monkeypatch):
+    """delete() must not rebuild the stacked plane NOR add dispatches:
+    the first search stacks once, a post-delete search reuses that plane
+    (liveness leaf swap only) and still issues exactly ONE jitted call."""
+    st, x, q = _build(False)
+    stack_calls, search_calls = [], []
+    real_stack = store_mod.stack_segments
+    real_search = planner.search_stacked
+    monkeypatch.setattr(store_mod, "stack_segments",
+                        lambda *a, **k: (stack_calls.append(1),
+                                         real_stack(*a, **k))[1])
+    monkeypatch.setattr(planner, "search_stacked",
+                        lambda *a, **k: (search_calls.append(1),
+                                         real_search(*a, **k))[1])
+    st.search(q, topk=5, mode="B")
+    assert len(stack_calls) == 1
+    st.delete([0, 1, 2])
+    search_calls.clear()
+    res = st.search(q, topk=5, mode="B")
+    assert len(stack_calls) == 1                  # NO re-stack on mutation
+    assert len(search_calls) == 1                 # still ONE dispatch
+    assert not np.isin(np.asarray(res.ids), [0, 1, 2]).any()
+
+
+def test_delete_epoch_cache_reused_and_invalidated():
+    """Same-epoch searches reuse the cached liveness leaf; every further
+    delete bumps the epoch and swaps it."""
+    st, x, q = _build(False)
+    st.delete([0])
+    st.search(q, topk=5, mode="B")
+    entry = st._stacked_for(tuple(st._segments))
+    key0, plane0 = entry["live"]
+    st.search(q, topk=5, mode="B")
+    assert entry["live"][0] == key0               # cache hit at same epoch
+    assert entry["live"][1] is plane0
+    st.delete([1])
+    st.search(q, topk=5, mode="B")
+    assert entry["live"][0] != key0               # epoch bump -> new leaf
+
+
+def test_delete_memtable_rows():
+    st = VectorStore(_cfg(), seal_threshold=1024, clock=lambda: T0)
+    vecs = np.eye(5, D, dtype=np.float32)
+    ids = st.add(vecs)                            # memtable only, unsealed
+    st.delete(ids[:2])
+    res = st.search(vecs, topk=1, mode="B")
+    got = np.asarray(res.ids)[:, 0]
+    assert not np.isin(got, ids[:2]).any()
+    assert (got[2:] == ids[2:]).all()
+
+
+def test_delete_idempotent_and_counts():
+    st, x, q = _build(False)
+    assert st.delete([5, 6]) == 2
+    assert st.delete([5, 6]) == 0                 # already dead: no-op
+    assert st.n_live() == st.n_vectors - 2
+
+
+def test_delete_of_unassigned_gid_cannot_poison_future_insert():
+    """Tombstoning a gid that was never assigned must be ignored: add()
+    hands out gids densely, so a stale entry would make the future record
+    that receives that gid dead from birth."""
+    st = VectorStore(_cfg(), seal_threshold=1024, clock=lambda: T0)
+    assert st.delete([5]) == 0                    # nothing to tombstone
+    assert not st._live_seq
+    ids = st.add(np.eye(8, D, dtype=np.float32))  # gid 5 is assigned now
+    res = st.search(np.eye(8, D, dtype=np.float32), topk=1, mode="B")
+    assert (np.asarray(res.ids)[:, 0] == ids).all()
+    assert st.n_live() == 8
+
+
+# ---------------------------------------------------------------------------
+# Upserts
+# ---------------------------------------------------------------------------
+
+
+def test_upsert_shadows_old_version():
+    st, x, q = _build(False)
+    target = x[100] * 0 + 7.5                     # far from everything
+    st.upsert([3], target[None])
+    ex = _exhaustive(st)
+    # the new version is found under the SAME gid...
+    res = st.search(target[None], topk=1, mode="B", **ex)
+    assert int(np.asarray(res.ids)[0, 0]) == 3
+    assert float(np.asarray(res.dists)[0, 0]) == 0.0
+    # ...and the old row no longer answers for gid 3
+    res_old = st.search(x[3][None], topk=1, mode="B", **ex)
+    d_old = float(np.asarray(res_old.dists)[0, 0])
+    assert int(np.asarray(res_old.ids)[0, 0]) != 3 and d_old > 0.0
+
+
+def test_upsert_survives_seal_and_search_has_one_live_version():
+    st, x, q = _build(False)
+    st.upsert([7], np.full((1, D), 3.25, np.float32))
+    st.add(np.zeros((SEG_ROWS - 1, D), np.float32))     # forces a seal
+    assert not st._mem
+    res = st.search(np.full((1, D), 3.25, np.float32), topk=3, mode="B",
+                    **_exhaustive(st))
+    ids = np.asarray(res.ids)[0]
+    assert ids[0] == 7 and (ids != 7).sum() == len(ids) - 1
+    # exactly one physical row of gid 7 is live
+    assert st.n_live() == st.n_vectors - 1        # old version shadowed
+
+
+def test_upsert_as_insert_extends_id_space():
+    st = VectorStore(_cfg(), seal_threshold=64, clock=lambda: T0)
+    st.upsert([41], np.full((1, D), 1.5, np.float32))
+    ids = st.add(np.zeros((2, D), np.float32))
+    assert ids.min() > 41                          # no gid collision
+    res = st.search(np.full((1, D), 1.5, np.float32), topk=1, mode="B")
+    assert int(np.asarray(res.ids)[0, 0]) == 41
+
+
+def test_upsert_then_delete_wins():
+    st, x, q = _build(False)
+    st.upsert([9], np.full((1, D), 4.5, np.float32))
+    st.delete([9])
+    res = st.search(np.full((1, D), 4.5, np.float32), topk=2, mode="B",
+                    **_exhaustive(st))
+    assert not np.isin(np.asarray(res.ids), [9]).any()
+
+
+# ---------------------------------------------------------------------------
+# TTL expiry
+# ---------------------------------------------------------------------------
+
+
+def test_ttl_expiry_sealed_and_memtable():
+    st, x, q = _build(False)
+    sealed_ttl = st.add(np.full((SEG_ROWS, D), 5.5, np.float32),
+                        ttl=60.0)                  # seals a 5th segment
+    assert not st._mem
+    mem_ttl = st.add(np.full((2, D), 6.5, np.float32), ttl=30.0)
+    probe_sealed = np.full((1, D), 5.5, np.float32)
+    probe_mem = np.full((1, D), 6.5, np.float32)
+    ex = _exhaustive(st)
+    # before the deadline both are hits
+    r1 = st.search(probe_sealed, topk=1, mode="B", now=T0 + 10, **ex)
+    r2 = st.search(probe_mem, topk=1, mode="B", now=T0 + 10, **ex)
+    assert int(np.asarray(r1.ids)[0, 0]) == int(sealed_ttl[0])
+    assert int(np.asarray(r2.ids)[0, 0]) == int(mem_ttl[0])
+    # memtable TTL passes first, sealed TTL later — no rewrite anywhere
+    r3 = st.search(probe_mem, topk=1, mode="B", now=T0 + 45, **ex)
+    assert not np.isin(np.asarray(r3.ids), mem_ttl).any()
+    r4 = st.search(probe_sealed, topk=1, mode="B", now=T0 + 45, **ex)
+    assert int(np.asarray(r4.ids)[0, 0]) in set(sealed_ttl.tolist())
+    r5 = st.search(probe_sealed, topk=1, mode="B", now=T0 + 100, **ex)
+    assert not np.isin(np.asarray(r5.ids), sealed_ttl).any()
+
+
+def test_ttl_uses_store_clock_by_default():
+    t = [T0]
+    st = VectorStore(_cfg(), seal_threshold=1024, clock=lambda: t[0])
+    ids = st.add(np.full((1, D), 2.5, np.float32), ttl=50.0)
+    q = np.full((1, D), 2.5, np.float32)
+    assert int(np.asarray(st.search(q, topk=1).ids)[0, 0]) == int(ids[0])
+    t[0] = T0 + 51.0                               # clock advances -> gone
+    assert int(np.asarray(st.search(q, topk=1).ids)[0, 0]) != int(ids[0])
+
+
+# ---------------------------------------------------------------------------
+# Parity: fused vs looped oracle under mutation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cold", [False, True])
+def test_fused_matches_looped_under_mutation(cold):
+    st, x, q = _build(cold)
+    st.delete(np.arange(0, SEG_ROWS, 3))
+    st.upsert([SEG_ROWS + 1, SEG_ROWS + 2], x[:2] + 0.5)
+    kw = _exhaustive(st)
+    for filt in ({}, dict(tag_mask=2), dict(ts_range=(1.0, 3.0))):
+        fused = st.search(q, topk=10, mode="B", **filt, **kw)
+        looped = st.search(q, topk=10, mode="B", fused=False, **filt)
+        _assert_same(fused, looped)
+
+
+# ---------------------------------------------------------------------------
+# Snapshot / branch isolation
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_keeps_deleted_rows():
+    """A snapshot taken before the delete still returns the row — the
+    tombstone lives in the store's liveness table, not in the segment."""
+    st, x, q = _build(False)
+    man = st.snapshot()
+    ex = _exhaustive(st)
+    before = st.search(x[:2], topk=1, mode="B", manifest=man, **ex)
+    assert (np.asarray(before.ids)[:, 0] == [0, 1]).all()
+    st.delete([0, 1])
+    via_man = st.search(x[:2], topk=1, mode="B", manifest=man, **ex)
+    _assert_same(before, via_man)                 # snapshot unaffected
+    live = st.search(x[:2], topk=1, mode="B", **ex)
+    assert not np.isin(np.asarray(live.ids), [0, 1]).any()
+
+
+def test_branch_mutations_are_isolated_both_ways():
+    st, x, q = _build(False)
+    child = st.branch()
+    child.delete([0])
+    st.delete([1])
+    ex = _exhaustive(st)
+    p = np.asarray(st.search(x[:2], topk=1, mode="B", **ex).ids)[:, 0]
+    c = np.asarray(child.search(x[:2], topk=1, mode="B", **ex).ids)[:, 0]
+    assert p[0] == 0 and p[1] != 1                # parent: only its delete
+    assert c[0] != 0 and c[1] == 1                # child: only its delete
+    # upserts are isolated too
+    child.upsert([5], np.full((1, D), 8.5, np.float32))
+    probe = np.full((1, D), 8.5, np.float32)
+    assert int(np.asarray(child.search(probe, topk=1, mode="B").ids)[0, 0]) \
+        == 5
+    assert int(np.asarray(st.search(probe, topk=1, mode="B").ids)[0, 0]) != 5
+
+
+# ---------------------------------------------------------------------------
+# Compaction-time reclamation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cold", [False, True])
+def test_compact_reclaims_dead_rows(cold):
+    st, x, q = _build(cold)
+    dead = np.arange(0, 2 * SEG_ROWS, 2)
+    st.delete(dead)
+    st.upsert([2 * SEG_ROWS + 1], x[:1] + 9.0)
+    pre = st.search(q, topk=10, mode="B", **_exhaustive(st))
+    pre_rows = st.n_vectors
+    pre_bytes = tree_bytes(st._stacked_for(tuple(st._segments))["plane"])
+    merges = st.compact(fanin=4)
+    assert merges >= 1
+    assert st.n_vectors < pre_rows                # rows physically dropped
+    post_bytes = tree_bytes(st._stacked_for(tuple(st._segments))["plane"])
+    assert post_bytes < pre_bytes                 # stacked plane shrank
+    post = st.search(q, topk=10, mode="B", **_exhaustive(st))
+    _assert_same(pre, post)                       # results identical
+    assert not np.isin(np.asarray(post.ids), dead).any()
+
+
+def test_compact_reclaims_expired_rows():
+    st, x, q = _build(False)
+    st.add(np.full((SEG_ROWS, D), 5.5, np.float32), ttl=60.0)
+    assert st.n_segments == N_SEG + 1
+    pre_rows = st.n_vectors
+    st.compact(fanin=5, now=T0 + 100)             # TTL passed -> reclaim
+    assert st.n_vectors == pre_rows - SEG_ROWS
+    res = st.search(np.full((1, D), 5.5, np.float32), topk=1, mode="B",
+                    now=T0 + 100, **_exhaustive(st))
+    d = float(np.asarray(res.dists)[0, 0])
+    assert d > 0.0                                # the TTL'd rows are gone
+
+
+def test_compact_purges_fully_reclaimed_tombstones():
+    st, x, q = _build(False)
+    st.delete(np.arange(SEG_ROWS))                # kill segment 0 entirely
+    assert len(st._live_seq) == SEG_ROWS
+    assert st.compact(fanin=4) >= 1
+    assert len(st._live_seq) == 0                 # nothing left to mask
+    assert st.n_vectors == (N_SEG - 1) * SEG_ROWS
+
+
+def test_compact_all_dead_group_vanishes():
+    st, x, q = _build(False)
+    st.delete(np.arange(N_SEG * SEG_ROWS))        # everything
+    assert st.compact(fanin=4) >= 1
+    assert st.n_vectors == 0 and st.n_segments == 0
+    res = st.search(q, topk=3, mode="B")
+    assert (np.asarray(res.ids) == -1).all()
+
+
+def test_compact_cow_keeps_branch_view_of_dead_rows():
+    """Compaction reclaims rows for the compacting store only: a branch
+    that never deleted them still searches the pre-merge segments."""
+    st, x, q = _build(False)
+    child = st.branch()
+    st.delete(np.arange(0, SEG_ROWS))
+    st.compact(fanin=4)
+    res = child.search(x[:2], topk=1, mode="B", **_exhaustive(child))
+    assert (np.asarray(res.ids)[:, 0] == [0, 1]).all()
+
+
+# ---------------------------------------------------------------------------
+# Serving-tier memory eviction API
+# ---------------------------------------------------------------------------
+
+
+def test_engine_memory_eviction_api():
+    from repro.serve.engine import ServeEngine
+    eng = ServeEngine.__new__(ServeEngine)        # memory API needs no model
+    eng.memory = VectorStore(_cfg(), seal_threshold=64, clock=lambda: T0)
+    eng.memory_mesh = None
+    docs = np.eye(4, D, dtype=np.float32)
+    ids = eng.remember(docs, ttl=120.0)
+    hit = eng.retrieve(docs[:1], topk=1)
+    assert int(np.asarray(hit.ids)[0, 0]) == int(ids[0])
+    assert eng.evict(ids[:1]) == 1
+    miss = eng.retrieve(docs[:1], topk=1)
+    assert int(np.asarray(miss.ids)[0, 0]) != int(ids[0])
+    eng.refresh(ids[1:2], np.full((1, D), 2.5, np.float32))
+    ref = eng.retrieve(np.full((1, D), 2.5, np.float32), topk=1)
+    assert int(np.asarray(ref.ids)[0, 0]) == int(ids[1])

@@ -29,7 +29,9 @@ D, N_SEG, SEG_ROWS = 32, 8, 256
 def run_sub(code: str):
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = SRC
+    # tests dir too: the mutation property subprocess imports its shared
+    # oracle (mutation_property.py) from here
+    env["PYTHONPATH"] = SRC + os.pathsep + os.path.dirname(__file__)
     out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                          capture_output=True, text=True, env=env,
                          timeout=600)
@@ -227,6 +229,95 @@ def test_sharded_memtable_and_default_knobs():
         assert (np.asarray(res2.ids)[:, 0] == np.arange(16)).all()
         print('memtable + default knobs ok')
     """)
+
+
+def test_shard_count_invariance_under_mutation():
+    """Delete-invariance across the mesh: after deletes + upserts the
+    sharded plane (1/2/4/8 forced host devices) stays bit-for-bit identical
+    to the single-device fused plane, and a dead id never appears on ANY
+    shard count — warm and cold tiers.  (This is the forced-8-device CI
+    job's mutation case.)"""
+    run_sub("""
+        import numpy as np
+        from repro.core import HNTLConfig
+        from repro.core.store import VectorStore
+        from repro.launch.mesh import make_host_mesh
+
+        D, N_SEG, SEG = %d, %d, %d
+        for cold in (False, True):
+            rng = np.random.default_rng(7)
+            st = VectorStore(HNTLConfig(d=D, k=8, s=0, n_grains=4, nprobe=4,
+                                        pool=SEG, block=32),
+                             seal_threshold=SEG, cold_tier=cold,
+                             clock=lambda: 0.0)
+            x = rng.standard_normal((N_SEG * SEG, D)).astype(np.float32)
+            for i in range(N_SEG):
+                st.add(x[i*SEG:(i+1)*SEG], tags=[1 << (i %% 3)]*SEG,
+                       ts=[float(i)]*SEG)
+            q = (x[:6] + 0.01*rng.standard_normal((6, D))).astype(np.float32)
+            dead = np.arange(0, 2 * SEG, 2)
+            st.delete(dead)
+            st.upsert([3 * SEG + 1, 3 * SEG + 2], x[:2] + 0.25)
+            ttl_ids = st.add(np.full((4, D), 9.5, np.float32), ttl=10.0)
+            ex = dict(nprobe=sum(s.index.grains.n_grains
+                                 for s in st._segments),
+                      pool=st.n_vectors * 2)
+            for filt in ({}, dict(tag_mask=2, ts_range=(0.0, 3.0))):
+                for mode in ("A", "B"):
+                    base = st.search(q, topk=10, mode=mode, now=20.0,
+                                     **filt, **ex)
+                    bi = np.asarray(base.ids)
+                    assert not np.isin(bi, dead).any(), (cold, filt, mode)
+                    assert not np.isin(bi, ttl_ids).any()   # TTL passed
+                    for n in (1, 2, 4, 8):
+                        res = st.search(q, topk=10, mode=mode, now=20.0,
+                                        mesh=make_host_mesh(1, n),
+                                        **filt, **ex)
+                        ri = np.asarray(res.ids)
+                        assert np.array_equal(ri, bi), (cold, filt, mode, n)
+                        assert not np.isin(ri, dead).any()
+                        np.testing.assert_allclose(
+                            np.asarray(res.dists), np.asarray(base.dists),
+                            rtol=1e-5, atol=1e-5)
+            print('ok', 'cold' if cold else 'warm')
+        print('mutation shard invariance ok')
+    """ % (D, N_SEG, SEG_ROWS))
+
+
+def test_sharded_mutation_interleaving_matches_bruteforce():
+    """The mutation-interleaving property on a forced-host 4-device mesh:
+    random add/seal/delete/upsert/compact sequences, then grain-sharded
+    search must equal brute-force L2 over the live set (the sharded twin of
+    test_core_properties.test_mutation_interleaving_matches_bruteforce,
+    same shared oracle)."""
+    run_sub("""
+        import numpy as np
+        from mutation_property import mutation_interleaving_check, OPS
+        from repro.launch.mesh import make_host_mesh
+
+        mesh = make_host_mesh(1, 4)
+        rng = np.random.default_rng(0)
+        for trial in range(4):
+            ops = [str(o) for o in rng.choice(OPS, size=6)]
+            mutation_interleaving_check(ops, seed=trial,
+                                        cold=bool(trial % 2), mesh=mesh)
+            print('ok', trial, ops)
+        print('sharded mutation property ok')
+    """)
+
+
+def test_sharded_delete_without_replacing_plane(monkeypatch):
+    """A delete between two sharded searches must NOT re-shard or re-stack
+    the plane — only the liveness leaf is re-placed."""
+    calls = _counting_stack(monkeypatch)
+    st, x, q = _build(False)
+    mesh = make_host_mesh(1, 1)
+    st.search(q[:1], topk=3, mode="B", mesh=mesh)
+    assert len(calls) == 1
+    st.delete([0])
+    res = st.search(q[:1], topk=3, mode="B", mesh=mesh)
+    assert len(calls) == 1                     # same plane, new live leaf
+    assert not np.isin(np.asarray(res.ids), [0]).any()
 
 
 # ---------------------------------------------------------------------------
