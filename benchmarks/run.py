@@ -14,6 +14,8 @@ import traceback
 BENCHES = [
     ("table1_recall", "Paper Table 1: recall iso/aniso, Mode A/B, HNSW"),
     ("table2_scan", "Paper Table 2: Block-SoA vs AoS vs pointer-chase"),
+    ("scan_select", "Fused scan→select: O(Q·pool) candidate state vs "
+                    "full materialize, gather-free fused path"),
     ("memory_footprint", "Paper 3.2: 66 B/vec vs HNSW graph bytes"),
     ("sift_scale", "Paper 4: SIFT-like scale recall/QPS/DRAM"),
     ("segment_scale", "LSM store: fused stacked search vs per-segment loop"),

@@ -2,7 +2,10 @@
 from .types import (HNTLConfig, HNTLIndex, GrainStore, RoutingPlane,
                     SearchResult, StackedSegments, tree_bytes)
 from .index import build, search, BuildInfo, int32_safe_qmax
+from .scanplane import (ScanPlane, get_scan_plane, register_scan_plane,
+                        scan_plane_names)
 
 __all__ = ["HNTLConfig", "HNTLIndex", "GrainStore", "RoutingPlane",
            "SearchResult", "StackedSegments", "tree_bytes", "build",
-           "search", "BuildInfo", "int32_safe_qmax"]
+           "search", "BuildInfo", "int32_safe_qmax", "ScanPlane",
+           "get_scan_plane", "register_scan_plane", "scan_plane_names"]

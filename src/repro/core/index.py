@@ -140,12 +140,13 @@ def build(x, cfg: HNTLConfig, *, tags: Optional[np.ndarray] = None,
 
 
 def search(index: HNTLIndex, q, cfg: HNTLConfig, *, topk: int = 10,
-           mode: str = "B", scan_fn=None, extra_mask=None) -> SearchResult:
+           mode: str = "B", scan_impl=None, extra_mask=None) -> SearchResult:
     """Convenience wrapper binding cfg -> planner.search statics.
 
     Statics are clamped to the *index's* actual plane, not cfg's nominal
     one: builders shrink n_grains for small corpora (store segments), and
     top_k would crash on nprobe/pool/topk wider than what exists.
+    scan_impl: ScanPlane backend name (core.scanplane); None = "auto".
     """
     qeff = int32_safe_qmax(cfg.k, cfg.coord_bits)
     nprobe = min(cfg.nprobe, index.grains.n_grains)
@@ -154,4 +155,4 @@ def search(index: HNTLIndex, q, cfg: HNTLConfig, *, topk: int = 10,
         index, jnp.asarray(q, jnp.float32), nprobe=nprobe,
         pool=min(max(cfg.pool, topk), n_slots), topk=min(topk, n_slots),
         mode=mode, envelope_frac=cfg.envelope_frac, qeff=qeff,
-        scan_fn=scan_fn, extra_mask=extra_mask)
+        scan_impl=scan_impl, extra_mask=extra_mask)

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from . import quantize, routing, scan
+from . import quantize, routing, scan, scanplane
 from .types import (BIG, HNTLIndex, SearchResult, ShardedStackedSegments,
                     StackedSegments)
 
@@ -46,81 +46,154 @@ def project_queries(index: HNTLIndex, q: jax.Array, gids: jax.Array):
     return out
 
 
+def _gather_probed_panels(g, gids: jax.Array) -> dict:
+    """THE per-query panel materialization the select planes eliminate:
+    every probed grain's full panel is copied into a [Q, P, ...]-leading
+    gather (``coords`` alone is [Q, P, k, cap]).  Kept as a named seam so
+    benchmarks/tests can assert the fused path never reaches it."""
+    return dict(coords=g.coords[gids], res=g.res[gids], valid=g.valid[gids],
+                ids=g.ids[gids],
+                sketch=g.sketch[gids] if g.sketch is not None else None)
+
+
+def _project_quantized(index: HNTLIndex, q: jax.Array, gids: jax.Array,
+                       envelope_frac: float, qeff: int):
+    """Shared per-(query, probed grain) prep of both plane kinds: tangent
+    projection, envelope verdict, and query-side quantization.
+
+    Returns (zq [Q, P, k] i32, rq [Q, P] f32, keep [Q, P] bool,
+             sq [Q, P, s] i32 | None).
+    """
+    g = index.grains
+    proj = project_queries(index, q, gids)
+    scale = g.scale[gids]                                 # [Q, P]
+    # Envelope filter: prune structurally-incompatible grains (paper §2.3).
+    keep = quantize.envelope_keep(proj["zq"], scale[..., None], envelope_frac,
+                                  qmax=qeff)              # [Q, P]
+    zq_q = quantize.quantize_coords(proj["zq"], scale[..., None],
+                                    qmax=qeff).astype(jnp.int32)
+    sq = None
+    if g.sketch_basis is not None:
+        sk_scale = g.sketch_scale[gids]
+        sq = quantize.quantize_coords(proj["sq"], sk_scale[..., None],
+                                      qmax=127).astype(jnp.int32)
+    return zq_q, proj["rq"], keep, sq
+
+
 def scan_probed(index: HNTLIndex, q: jax.Array, gids: jax.Array,
                 envelope_frac: float, qeff: int,
                 scan_fn=None,
                 extra_mask: Optional[jax.Array] = None):
-    """Stages (2)+(3): project, envelope-filter, Block-SoA scan.
+    """Gather-plane stages (2)+(3): project, envelope-filter, Block-SoA scan
+    over per-query *copies* of the probed panels.
 
     Returns (dists [Q, P*cap] f32, ids [Q, P*cap] i32).
     scan_fn: callable with `scan.blocksoa_scan`'s signature (Pallas or ref).
     extra_mask: [G, cap] bool mixed-recall predicate evaluated in-situ.
     """
     g = index.grains
-    proj = project_queries(index, q, gids)
+    zq_q, rq, keep, sq = _project_quantized(index, q, gids, envelope_frac,
+                                            qeff)
     scale = g.scale[gids]                                 # [Q, P]
     res_scale = g.res_scale[gids]
-
-    # Envelope filter: prune structurally-incompatible grains (paper §2.3).
-    keep = quantize.envelope_keep(proj["zq"], scale[..., None] , envelope_frac,
-                                  qmax=qeff)              # [Q, P]
-
-    zq_q = quantize.quantize_coords(proj["zq"], scale[..., None], qmax=qeff)
-    coords = g.coords[gids]                               # [Q, P, k, cap]
-    res = g.res[gids]                                     # [Q, P, cap]
-    valid = g.valid[gids]                                 # [Q, P, cap]
-    ids = g.ids[gids]                                     # [Q, P, cap]
+    panels = _gather_probed_panels(g, gids)
 
     kw = {}
     if g.sketch_basis is not None:
-        sk_scale = g.sketch_scale[gids]
-        kw = dict(
-            sq=quantize.quantize_coords(proj["sq"], sk_scale[..., None],
-                                        qmax=127).astype(jnp.int32),
-            sketch=g.sketch[gids],
-            sketch_scale=sk_scale,
-        )
+        kw = dict(sq=sq, sketch=panels["sketch"],
+                  sketch_scale=g.sketch_scale[gids])
     if extra_mask is not None:
         kw["extra_mask"] = extra_mask[gids]
 
     fn = scan_fn if scan_fn is not None else scan.blocksoa_scan
-    dists = jax.vmap(fn)(zq_q.astype(jnp.int32), proj["rq"], coords, res,
-                         valid, scale, res_scale, **kw)   # [Q, P, cap]
+    dists = jax.vmap(fn)(zq_q, rq, panels["coords"], panels["res"],
+                         panels["valid"], scale, res_scale, **kw)
     # kill pruned grains wholesale
-    dists = jnp.where(keep[..., None], dists, BIG)
+    dists = jnp.where(keep[..., None], dists, BIG)        # [Q, P, cap]
     qn = q.shape[0]
-    return dists.reshape(qn, -1), ids.reshape(qn, -1)
+    return dists.reshape(qn, -1), panels["ids"].reshape(qn, -1)
+
+
+def select_probed(index: HNTLIndex, q: jax.Array, gids: jax.Array,
+                  envelope_frac: float, qeff: int, *, width: int, runner,
+                  extra_mask: Optional[jax.Array] = None):
+    """Select-plane stages (2)+(3)+(first-stage top-k): project, then hand
+    the STACKED panel tier (no per-query gather) to a streaming scan→select
+    runner that emits only the running top-``width`` pool.
+
+    Returns (dists [Q, width] f32 ascending, rows [Q, width] i32).
+    """
+    g = index.grains
+    zq_q, rq, keep, sq = _project_quantized(index, q, gids, envelope_frac,
+                                            qeff)
+    mask = g.valid if extra_mask is None \
+        else jnp.logical_and(g.valid, extra_mask)         # [G, cap]
+    kw = {}
+    if g.sketch_basis is not None:
+        kw = dict(sq=sq, sketch=g.sketch, sketch_scale=g.sketch_scale)
+    width = min(width, gids.shape[1] * g.cap)
+    return runner(gids, zq_q, rq, keep, g.coords, g.res, mask, g.ids,
+                  g.scale, g.res_scale, width=width, **kw)
+
+
+def candidate_stage(index: HNTLIndex, q: jax.Array, gids: jax.Array, *,
+                    envelope_frac: float, qeff: int, width: int,
+                    scan_impl: Optional[str] = None,
+                    extra_mask: Optional[jax.Array] = None):
+    """Dispatch the candidate-generation stage to a ScanPlane backend.
+
+    Gather backends return the full [Q, P*cap] slot matrix; select backends
+    return the two-stage-selected [Q, min(width, P*cap)] pool.  Either shape
+    feeds :func:`_candidate_epilogue` unchanged (it tops-k whatever it
+    gets), so the epilogue arithmetic — and with it the fused/sharded parity
+    contract — is backend-independent.
+    """
+    plane = scanplane.get_scan_plane(scan_impl)
+    if plane.kind == scanplane.SELECT:
+        return select_probed(index, q, gids, envelope_frac, qeff,
+                             width=width, runner=plane.runner,
+                             extra_mask=extra_mask)
+    return scan_probed(index, q, gids, envelope_frac, qeff,
+                       scan_fn=plane.runner, extra_mask=extra_mask)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("nprobe", "pool", "topk", "mode", "envelope_frac",
-                     "qeff", "scan_fn"))
+                     "qeff", "scan_impl"))
 def search(index: HNTLIndex, q: jax.Array, *, nprobe: int, pool: int,
            topk: int, mode: str = "B", envelope_frac: float = 0.25,
-           qeff: int = 8191, scan_fn=None,
+           qeff: int = 8191, scan_impl: Optional[str] = None,
            extra_mask: Optional[jax.Array] = None) -> SearchResult:
-    """Full HNTL search.  mode='A' self-contained, mode='B' tiered re-rank."""
+    """Full HNTL search.  mode='A' self-contained, mode='B' tiered re-rank.
+
+    scan_impl: ScanPlane backend name (see ``core.scanplane``); None=auto.
+    Pruned result slots (filtered, padding, pool exhausted) return id -1 —
+    the same ``dist >= BIG / 2`` convention as the stacked planes.
+    """
     gids, _ = routing.route(index.routing, q, nprobe)
-    dists, ids = scan_probed(index, q, gids, envelope_frac, qeff,
-                             scan_fn=scan_fn, extra_mask=extra_mask)
+    dists, ids = candidate_stage(
+        index, q, gids, envelope_frac=envelope_frac, qeff=qeff,
+        width=min(max(pool, topk), nprobe * index.grains.cap),
+        scan_impl=scan_impl, extra_mask=extra_mask)
 
     if mode == "A":
         neg_d, pos = jax.lax.top_k(-dists, topk)
-        return SearchResult(ids=jnp.take_along_axis(ids, pos, axis=1),
-                            dists=-neg_d)
-
-    # Mode B: candidate pool C -> exact float32 L2 re-rank from the cold tier.
-    assert index.raw is not None, "Mode B needs the raw (cold) tier"
-    neg_d, pos = jax.lax.top_k(-dists, pool)              # [Q, C]
-    cand_ids = jnp.take_along_axis(ids, pos, axis=1)      # [Q, C]
-    cand_ok = neg_d > -BIG
-    cand = index.raw[jnp.maximum(cand_ids, 0)]            # [Q, C, d]
-    exact = jnp.sum((cand - q[:, None, :]) ** 2, axis=-1)
-    exact = jnp.where(cand_ok, exact, BIG)
-    neg_e, pos_e = jax.lax.top_k(-exact, topk)
-    return SearchResult(ids=jnp.take_along_axis(cand_ids, pos_e, axis=1),
-                        dists=-neg_e)
+        ids_k = jnp.take_along_axis(ids, pos, axis=1)
+        d_k = -neg_d
+    else:
+        # Mode B: candidate pool C -> exact f32 L2 re-rank (cold tier).
+        assert index.raw is not None, "Mode B needs the raw (cold) tier"
+        neg_d, pos = jax.lax.top_k(-dists, pool)          # [Q, C]
+        cand_ids = jnp.take_along_axis(ids, pos, axis=1)  # [Q, C]
+        cand_ok = neg_d > -BIG / 2
+        cand = index.raw[jnp.maximum(cand_ids, 0)]        # [Q, C, d]
+        exact = jnp.sum((cand - q[:, None, :]) ** 2, axis=-1)
+        exact = jnp.where(cand_ok, exact, BIG)
+        neg_e, pos_e = jax.lax.top_k(-exact, topk)
+        ids_k = jnp.take_along_axis(cand_ids, pos_e, axis=1)
+        d_k = -neg_e
+    return SearchResult(ids=jnp.where(d_k < BIG / 2, ids_k, -1), dists=d_k)
 
 
 # ---------------------------------------------------------------------------
@@ -190,12 +263,13 @@ def _candidate_epilogue(dists, rows, q, raw, *, pool: int, topk: int,
 @functools.partial(
     jax.jit,
     static_argnames=("nprobe", "pool", "topk", "mode", "envelope_frac",
-                     "qeff", "scan_fn", "route_mode", "seg_shape",
+                     "qeff", "scan_impl", "route_mode", "seg_shape",
                      "translate"))
 def search_stacked(stacked: StackedSegments, q: jax.Array, *, nprobe: int,
                    pool: int, topk: int, mode: str = "B",
                    envelope_frac: float = 0.25, qeff: int = 8191,
-                   scan_fn=None, route_mode: str = "global",
+                   scan_impl: Optional[str] = None,
+                   route_mode: str = "global",
                    seg_shape: Optional[tuple] = None, translate: bool = True,
                    tag_mask: Optional[jax.Array] = None,
                    ts_range: Optional[tuple] = None) -> SearchResult:
@@ -205,6 +279,10 @@ def search_stacked(stacked: StackedSegments, q: jax.Array, *, nprobe: int,
     concatenated [S*G] routing plane, one vmapped Block-SoA scan over the
     surviving grains, one merged candidate pool, one Mode-B exact re-rank.
 
+    scan_impl: ScanPlane backend for the candidate stage (see
+      ``core.scanplane``) — gather backends materialize [Q, P*cap] slot
+      state, select backends ("fused"/"fused_ref") stream panels and emit
+      only [Q, pool].  None = "auto".
     route_mode: "global" — top-P over every segment's grains at once (work
       independent of segment count, the production path); "per_segment" —
       top-P within each segment (legacy loop semantics; needs seg_shape).
@@ -227,8 +305,9 @@ def search_stacked(stacked: StackedSegments, q: jax.Array, *, nprobe: int,
     else:
         gids, _ = routing.route(index.routing, q, nprobe,
                                 grain_mask=grain_ok)
-    dists, rows = scan_probed(index, q, gids, envelope_frac, qeff,
-                              scan_fn=scan_fn, extra_mask=extra)
+    dists, rows = candidate_stage(
+        index, q, gids, envelope_frac=envelope_frac, qeff=qeff,
+        width=max(pool, topk), scan_impl=scan_impl, extra_mask=extra)
 
     # Mode B: merged candidate pool -> exact f32 re-rank over the fused
     # warm tier (single gather into the concatenated raw array).
@@ -254,14 +333,15 @@ def _spec_tree(tree, spec):
 @functools.partial(
     jax.jit,
     static_argnames=("mesh", "grain_axis", "batch_axis", "nprobe", "pool",
-                     "topk", "mode", "envelope_frac", "qeff", "scan_fn",
+                     "topk", "mode", "envelope_frac", "qeff", "scan_impl",
                      "translate"))
 def search_stacked_sharded(plane: ShardedStackedSegments, q: jax.Array, *,
                            mesh, grain_axis: str = "model",
                            batch_axis: Optional[str] = None, nprobe: int,
                            pool: int, topk: int, mode: str = "B",
                            envelope_frac: float = 0.25, qeff: int = 8191,
-                           scan_fn=None, translate: bool = True,
+                           scan_impl: Optional[str] = None,
+                           translate: bool = True,
                            tag_mask: Optional[jax.Array] = None,
                            ts_range: Optional[tuple] = None) -> SearchResult:
     """Grain-sharded fused search: shard-local route/scan/pool/re-rank plus
@@ -289,6 +369,9 @@ def search_stacked_sharded(plane: ShardedStackedSegments, q: jax.Array, *,
     knobs the result is bit-for-bit identical to :func:`search_stacked`
     (the shard-count invariance tests).
 
+    ``scan_impl`` picks the ScanPlane backend for every shard's candidate
+    stage (the fused select kernel then runs per shard on its local panel
+    slice, emitting only that shard's [Q, pool] candidate pool).
     ``batch_axis`` optionally shards queries over a second mesh axis
     (throughput scaling); results come back sharded the same way.
     ``translate=False`` returns *permuted global rows* (shard-local row +
@@ -319,8 +402,12 @@ def search_stacked_sharded(plane: ShardedStackedSegments, q: jax.Array, *,
         extra, grain_ok = _mixed_recall_mask(index.grains, tm, tr, live=live)
         gids, _ = routing.route(index.routing, qv, probe,
                                 grain_mask=grain_ok)
-        dists, rows = scan_probed(index, qv, gids, envelope_frac, qeff,
-                                  scan_fn=scan_fn, extra_mask=extra)
+        # same ScanPlane backend per shard: the fused select kernel streams
+        # this shard's probed panels and emits its [Q, pool_eff] pool only
+        dists, rows = candidate_stage(
+            index, qv, gids, envelope_frac=envelope_frac, qeff=qeff,
+            width=max(pool_eff, k_local), scan_impl=scan_impl,
+            extra_mask=extra)
 
         def local_ids(rows_k, d_k):
             ok = jnp.logical_and(rows_k >= 0, d_k < BIG / 2)

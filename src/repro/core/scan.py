@@ -67,6 +67,64 @@ def blocksoa_scan(zq: jax.Array, rq: jax.Array, coords: jax.Array,
     return jnp.where(keep, d, NEG_BIG)
 
 
+def blocksoa_select_ref(gids: jax.Array, zq: jax.Array, rq: jax.Array,
+                        keep: jax.Array, coords: jax.Array, res: jax.Array,
+                        mask: jax.Array, rows: jax.Array, scale: jax.Array,
+                        res_scale: jax.Array,
+                        sq: jax.Array | None = None,
+                        sketch: jax.Array | None = None,
+                        sketch_scale: jax.Array | None = None, *,
+                        width: int):
+    """Pure-jnp oracle for the fused scan→select kernel
+    (`repro.kernels.fused_select.fused_scan_select`) — the CPU reference of
+    the "fused" ScanPlane backend.
+
+    Same signature and contract: probed-panel scan + TWO-STAGE select
+    (per-grain top-w then merged top-``width``), returning
+    (dists [Q, width] f32 ascending, rows [Q, width] i32) with pruned slots
+    = (BIG, -1).  Being jnp, it still *gathers* the probed panels — it is
+    the semantic oracle, not the memory-engineering artifact.
+
+    Shapes: gids [Q, P] i32, zq [Q, P, k] i32, rq/keep [Q, P],
+    coords [G, k, cap] i16, res/mask/rows [G, cap], scale/res_scale [G];
+    optional sq [Q, P, s] i32, sketch [G, s, cap] i8, sketch_scale [G].
+    """
+    q_n, p_n, _ = zq.shape
+    cap = coords.shape[2]
+    c = coords[gids].astype(jnp.int32)                   # [Q, P, k, cap]
+    d_int = jax.vmap(jax.vmap(block_dist_int))(zq, c)    # [Q, P, cap] i32
+    sc = scale[gids]
+    d = d_int.astype(jnp.float32) * (sc * sc)[..., None]
+    d = d + res[gids].astype(jnp.float32) * res_scale[gids][..., None] \
+        + rq[..., None]
+    if sketch is not None:
+        s_int = jax.vmap(jax.vmap(block_dist_int))(
+            sq, sketch[gids].astype(jnp.int32))
+        ss = sketch_scale[gids]
+        d = d + s_int.astype(jnp.float32) * (ss * ss)[..., None]
+    d = jnp.where(jnp.logical_and(mask[gids], keep[..., None]), d, NEG_BIG)
+    rows_g = rows[gids]                                  # [Q, P, cap]
+
+    # stage 1: per-grain top-w (the kernel's per-tile select)
+    w1 = min(width, cap)
+    neg1, pos1 = jax.lax.top_k(-d, w1)                   # [Q, P, w1]
+    r1 = jnp.take_along_axis(rows_g, pos1, axis=2)
+    # stage 2: merged top-width over the per-grain survivors (the carry)
+    d2 = (-neg1).reshape(q_n, p_n * w1)
+    r2 = r1.reshape(q_n, p_n * w1)
+    w2 = min(width, d2.shape[1])
+    neg2, pos2 = jax.lax.top_k(-d2, w2)
+    out_d = -neg2
+    out_r = jnp.take_along_axis(r2, pos2, axis=1)
+    if w2 < width:                                       # pad to the contract
+        out_d = jnp.pad(out_d, ((0, 0), (0, width - w2)),
+                        constant_values=NEG_BIG)
+        out_r = jnp.pad(out_r, ((0, 0), (0, width - w2)),
+                        constant_values=-1)
+    out_r = jnp.where(out_d < NEG_BIG / 2, out_r, -1)
+    return out_d, out_r
+
+
 def aos_scan(zq: jax.Array, rq: jax.Array, coords_aos: jax.Array,
              res: jax.Array, valid: jax.Array, scale: jax.Array,
              res_scale: jax.Array) -> jax.Array:

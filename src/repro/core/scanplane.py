@@ -1,0 +1,113 @@
+"""ScanPlane backend registry: pluggable candidate-generation engines.
+
+The candidate stage of every search plane (legacy single-index, fused
+stacked, grain-sharded) is one of two shapes:
+
+- **gather** planes materialize a per-query copy of every probed panel
+  (``coords[gids]``), scan it with a ``blocksoa_scan``-signature function,
+  and hand the FULL [Q, nprobe*cap] distance matrix to the pooling stage.
+- **select** planes stream probed panels straight from the stacked index
+  and emit only the running top-``width`` pool — [Q, width] — so candidate
+  HBM state is O(Q·pool) instead of O(Q·nprobe·cap).
+
+Registered backends:
+
+  name          kind     engine
+  ------------  -------  --------------------------------------------------
+  "ref"         gather   pure-jnp Block-SoA oracle (XLA-fused; CPU default)
+  "pallas"      gather   Pallas scan kernels, compiled (TPU)
+  "interpret"   gather   same kernels, interpreter mode (CPU validation)
+  "fused"       select   scalar-prefetch fused scan→select Pallas kernel
+                         (compiled on TPU, interpret elsewhere)
+  "fused_ref"   select   jnp two-stage-select oracle of the fused kernel
+  "auto"        —        "fused" on TPU, "ref" elsewhere
+
+Every planner entry point and ``VectorStore.search`` accept the backend by
+name (``scan_impl=...``); the name is a jit static, and the store keys its
+plane cache on the *resolved* name, so aliases ("auto"/None vs what they
+resolve to) share one cached device plane while each distinct backend gets
+its own LRU slot.  ``register_scan_plane`` extends the table (e.g. an
+external accelerator engine).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+
+from . import scan
+from ..kernels import ops as kernel_ops
+from ..kernels.fused_select import fused_scan_select
+
+GATHER = "gather"
+SELECT = "select"
+
+
+@dataclasses.dataclass(frozen=True)
+class ScanPlane:
+    """One candidate-generation backend.
+
+    ``runner`` signatures by kind:
+      gather: ``blocksoa_scan``-compatible (vmapped by the planner over the
+        gathered [Q, P, ...] panels) -> dists [P, cap].
+      select: ``fused_scan_select``-compatible (gids, zq, rq, keep, coords,
+        res, mask, rows, scale, res_scale, [sq, sketch, sketch_scale], *,
+        width) -> (dists [Q, width], rows [Q, width]).
+    """
+
+    name: str
+    kind: str
+    runner: Callable
+    doc: str = ""
+
+
+_REGISTRY: dict = {}
+
+
+def register_scan_plane(name: str, kind: str, runner: Callable,
+                        doc: str = "") -> ScanPlane:
+    assert kind in (GATHER, SELECT), kind
+    plane = ScanPlane(name=name, kind=kind, runner=runner, doc=doc)
+    _REGISTRY[name] = plane
+    return plane
+
+
+def scan_plane_names() -> tuple:
+    """Registered backend names (+ "auto"), for CLI choices and docs."""
+    return tuple(_REGISTRY) + ("auto",)
+
+
+def get_scan_plane(name: Optional[str]) -> ScanPlane:
+    """Resolve a backend name (None == "auto") to its ScanPlane."""
+    if name is None or name == "auto":
+        name = "fused" if jax.default_backend() == "tpu" else "ref"
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scan plane {name!r}; registered: "
+            f"{sorted(scan_plane_names())}") from None
+
+
+register_scan_plane(
+    "ref", GATHER, scan.blocksoa_scan,
+    "pure-jnp Block-SoA oracle (XLA-fused; the CPU default and the "
+    "semantics reference every other backend is tested against)")
+register_scan_plane(
+    "pallas", GATHER, kernel_ops.make_planner_scan_fn("pallas"),
+    "Pallas Block-SoA scan kernels compiled for TPU (gathered panels, "
+    "full distance matrix)")
+register_scan_plane(
+    "interpret", GATHER, kernel_ops.make_planner_scan_fn("interpret"),
+    "the Pallas scan kernels in interpreter mode — validates the exact "
+    "TPU kernel body on CPU")
+register_scan_plane(
+    "fused", SELECT, fused_scan_select,
+    "scalar-prefetch fused scan→select kernel: gather-free panel "
+    "streaming + in-VMEM running top-k (compiled on TPU, interpret "
+    "elsewhere)")
+register_scan_plane(
+    "fused_ref", SELECT, scan.blocksoa_select_ref,
+    "jnp two-stage-select oracle of the fused kernel (CPU oracle for the "
+    "select contract)")

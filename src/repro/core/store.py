@@ -136,6 +136,14 @@ def _reclaim_cold_on_gc(seg: "Segment", path: str) -> None:
     weakref.finalize(seg, _unlink_quiet, path)
 
 
+def _plane_key(scan_impl: Optional[str]) -> str:
+    """Canonical ScanPlane name for plane-cache keys: aliases of the same
+    backend (None, "auto", and whatever they resolve to) share ONE cached
+    device plane instead of duplicating the stack per spelling."""
+    from . import scanplane
+    return scanplane.get_scan_plane(scan_impl).name
+
+
 def _finalize(ids: np.ndarray, d: np.ndarray, topk: int) -> SearchResult:
     """Merge candidate pools into a fixed [Q, topk] result.
 
@@ -800,14 +808,19 @@ class VectorStore:
             self._stack_cache.popitem(last=False)
         return value
 
-    def _stacked_for(self, segments: tuple) -> dict:
+    def _stacked_for(self, segments: tuple,
+                     scan_impl: Optional[str] = None) -> dict:
         """Stacked super-index for a manifest, rebuilt lazily on change.
 
         The cached entry also carries the host-side row metadata (flat-row
         gid/seq/TTL tables + a host copy of the grain id panels) that the
         per-epoch liveness bitmap is computed from — mutations never trigger
-        a re-stack, they only swap the plane's ``live`` leaf."""
-        key = tuple(id(s) for s in segments)
+        a re-stack, they only swap the plane's ``live`` leaf.  The key
+        includes the *resolved* ScanPlane backend (None/"auto"/"ref" on CPU
+        are one key), so each distinct backend's plane (and its per-epoch
+        live leaf) occupies its own LRU slot — switching backends never
+        hands one a leaf placed for another."""
+        key = (tuple(id(s) for s in segments), _plane_key(scan_impl))
         hit = self._cache_get(key)
         if hit is not None:
             return hit
@@ -828,7 +841,8 @@ class VectorStore:
         }
         return self._cache_put(key, segments, entry)
 
-    def _sharded_for(self, segments: tuple, mesh, grain_axis: str) -> dict:
+    def _sharded_for(self, segments: tuple, mesh, grain_axis: str,
+                     scan_impl: Optional[str] = None) -> dict:
         """Mesh-sharded plane for a manifest: grain-aligned re-layout
         (`shard_segments`) placed shard-wise on the mesh, plus the host-side
         row metadata the cold path and the liveness bitmap need.  Cached
@@ -837,7 +851,8 @@ class VectorStore:
         liveness bitmap lands shard-aligned and Mode B re-rank stays
         shard-local under mutation."""
         from ..distributed import sharding as shd
-        key = (tuple(id(s) for s in segments), mesh, grain_axis)
+        key = (tuple(id(s) for s in segments), mesh, grain_axis,
+               _plane_key(scan_impl))
         hit = self._cache_get(key)
         if hit is not None:
             return hit
@@ -914,7 +929,8 @@ class VectorStore:
     def search(self, q: np.ndarray, *, topk: int = 10, mode: str = "B",
                tag_mask: Optional[int] = None,
                ts_range: Optional[tuple] = None,
-               manifest: Optional[Manifest] = None, scan_fn=None,
+               manifest: Optional[Manifest] = None,
+               scan_impl: Optional[str] = None,
                nprobe: Optional[int] = None, pool: Optional[int] = None,
                fused: bool = True, route_mode: str = "global",
                mesh=None, grain_axis: str = "model",
@@ -929,6 +945,11 @@ class VectorStore:
         tag_mask: keep records with (tag & tag_mask) != 0 (in-situ predicate,
           pushed down into routing).
         ts_range: (lo, hi) keep lo <= ts < hi.
+        scan_impl: ScanPlane backend for the candidate stage (see
+          ``core.scanplane``): "ref" | "pallas" | "interpret" | "fused" |
+          "fused_ref" | "auto" (None = auto).  "fused"/"fused_ref" run the
+          streaming scan→select pipeline — candidate state O(Q·pool), no
+          probed-panel gather — on every plane (fused, sharded, looped).
         nprobe / pool: override cfg.nprobe / cfg.pool for the fused plane
           (e.g. exhaustive probing for parity checks).
         route_mode: "global" (top-P over all segments' grains at once) or
@@ -954,7 +975,7 @@ class VectorStore:
                 raise ValueError("mesh= requires the fused search plane")
             return self._search_looped(q, man, topk=topk, mode=mode,
                                        tag_mask=tag_mask, ts_range=ts_range,
-                                       scan_fn=scan_fn, now=now)
+                                       scan_impl=scan_impl, now=now)
         all_ids, all_d = [], []
         if man.segments:
             if mesh is not None:
@@ -964,14 +985,16 @@ class VectorStore:
                         "overrides only apply to the single-device plane")
                 ids_s, d_s = self._search_segments_sharded(
                     q, man, topk=topk, mode=mode, tag_mask=tag_mask,
-                    ts_range=ts_range, scan_fn=scan_fn, nprobe=nprobe,
-                    pool=pool, mesh=mesh, grain_axis=grain_axis,
+                    ts_range=ts_range, scan_impl=scan_impl,
+                    nprobe=nprobe, pool=pool, mesh=mesh,
+                    grain_axis=grain_axis,
                     shard_queries=shard_queries, now=now)
             else:
                 ids_s, d_s = self._search_segments_fused(
                     q, man, topk=topk, mode=mode, tag_mask=tag_mask,
-                    ts_range=ts_range, scan_fn=scan_fn, nprobe=nprobe,
-                    pool=pool, route_mode=route_mode, now=now)
+                    ts_range=ts_range, scan_impl=scan_impl,
+                    nprobe=nprobe, pool=pool, route_mode=route_mode,
+                    now=now)
             all_ids.append(ids_s)
             all_d.append(d_s)
         return self._merge_with_memtable(q, man, all_ids, all_d, topk,
@@ -1013,12 +1036,12 @@ class VectorStore:
         return probe, pool_eff, min(topk, pool_eff), (s_n, gmax)
 
     def _search_segments_fused(self, q, man, *, topk, mode, tag_mask,
-                               ts_range, scan_fn, nprobe, pool, route_mode,
-                               now):
+                               ts_range, scan_impl, nprobe, pool,
+                               route_mode, now):
         """One jitted search over the stacked plane.  Returns numpy
         (global_ids [Q, k], dists [Q, k])."""
         segments = man.segments
-        entry = self._stacked_for(segments)
+        entry = self._stacked_for(segments, scan_impl)
         stacked = self._live_plane(entry, man, now)
         offsets, gids_host = entry["offsets"], entry["gids"]
         probe, pool_eff, topk_eff, seg_shape = self._fused_statics(
@@ -1028,7 +1051,7 @@ class VectorStore:
         tr = ((jnp.float32(ts_range[0]), jnp.float32(ts_range[1]))
               if ts_range is not None else None)
         kw = dict(nprobe=probe, envelope_frac=self.cfg.envelope_frac,
-                  qeff=qeff, scan_fn=scan_fn, route_mode=route_mode,
+                  qeff=qeff, scan_impl=scan_impl, route_mode=route_mode,
                   seg_shape=seg_shape, tag_mask=tm, ts_range=tr)
         qj = jnp.asarray(q)
 
@@ -1100,13 +1123,13 @@ class VectorStore:
         return other[0]
 
     def _search_segments_sharded(self, q, man, *, topk, mode, tag_mask,
-                                 ts_range, scan_fn, nprobe, pool, mesh,
+                                 ts_range, scan_impl, nprobe, pool, mesh,
                                  grain_axis, shard_queries, now):
         """Distributed fused search: shard-local route/scan/pool/re-rank and
         one all-gather merge collective.  Returns numpy (global_ids, dists).
         """
         segments = man.segments
-        entry = self._sharded_for(segments, mesh, grain_axis)
+        entry = self._sharded_for(segments, mesh, grain_axis, scan_impl)
         plane = self._live_plane(entry, man, now)
         perm, offsets, gids_host = (entry["perm"], entry["offsets"],
                                     entry["gids"])
@@ -1121,7 +1144,8 @@ class VectorStore:
                   batch_axis=self._batch_axis(mesh, grain_axis,
                                               shard_queries, q.shape[0]),
                   nprobe=probe, envelope_frac=self.cfg.envelope_frac,
-                  qeff=qeff, scan_fn=scan_fn, tag_mask=tm, ts_range=tr)
+                  qeff=qeff, scan_impl=scan_impl, tag_mask=tm,
+                  ts_range=tr)
         qj = jnp.asarray(q)
 
         if mode == "B" and plane.index.raw is None:
@@ -1200,7 +1224,7 @@ class VectorStore:
         return (ids >= 0) & lv[np.maximum(ids, 0)]
 
     def _search_looped(self, q, man: Manifest, *, topk, mode, tag_mask,
-                       ts_range, scan_fn, now) -> SearchResult:
+                       ts_range, scan_impl, now) -> SearchResult:
         """Per-segment Python-loop search (pre-fusion data plane).
 
         Kept as the parity oracle for `search` and the baseline for
@@ -1225,7 +1249,7 @@ class VectorStore:
             if mode == "B" and seg.index.raw is None:
                 # cold tier: approximate scan in-core, exact re-rank via mmap
                 res = index_mod.search(seg.index, q, self.cfg, topk=max(
-                    topk, self.cfg.pool), mode="A", scan_fn=scan_fn,
+                    topk, self.cfg.pool), mode="A", scan_impl=scan_impl,
                     extra_mask=extra)
                 raw = seg.raw_vectors()
                 cand = np.asarray(res.ids)
@@ -1240,7 +1264,7 @@ class VectorStore:
                 d = np.take_along_axis(exact, order, axis=1)
             else:
                 res = index_mod.search(seg.index, q, self.cfg, topk=topk,
-                                       mode=mode, scan_fn=scan_fn,
+                                       mode=mode, scan_impl=scan_impl,
                                        extra_mask=extra)
                 ids, d = np.asarray(res.ids), np.asarray(res.dists)
             all_ids.append(seg.map_local(ids))

@@ -1,0 +1,240 @@
+"""Fused scan→select Pallas kernel: gather-free candidate generation.
+
+The production planes used to (1) gather a per-query copy of every probed
+panel (``coords[gids]`` — a [Q, P, k, cap] materialization), (2) write the
+full [Q, P*cap] distance matrix to HBM, and (3) run one monolithic top-k.
+This kernel is the paper's streaming engine instead (§3.3 applied to the
+scan/select boundary):
+
+- the probed grain ids arrive as a **scalar-prefetch** argument, so every
+  block ``index_map`` computes its HBM offset from ``gids[q, p]`` and the
+  pipeline streams only the probed ``[k, BLK_C]`` panels straight out of the
+  stacked index — the [Q, P, k, cap] gather copy never exists;
+- a per-query running candidate buffer (dists + rows) lives in VMEM scratch
+  and is carried across the sequential (probe, cap-tile) grid axes: each
+  tile's distances are top-k'd against the carry (two-stage select), and
+  only the final [Q, width] pool is ever written to HBM — candidate state is
+  O(Q·width) instead of O(Q·nprobe·cap);
+- the epilogue folds everything the scan semantics need *in situ*: per-grain
+  scales, the residual term, the §2.2 sketch term (previously a second full
+  kernel pass in ``ops.scan_batched``), the envelope kill, and the combined
+  validity/liveness/tag/ts mask.
+
+Grid: (Q, P, cap-tiles); the leading query axis is embarrassingly parallel
+(each query owns its scratch carry — a megacore split on q is safe), the
+trailing two axes are sequential reductions into the carry.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Python-float copy of core.types.BIG (Pallas kernels may not capture traced
+# constants, and this package stays importable without core).  Must stay
+# equal to types.BIG — asserted in tests/test_kernels.py.
+NEG_BIG = 3.0e38
+
+BLK_C = 128   # cap-tile columns (lane dimension)
+
+
+def _merge_tile(best_d, best_r, d, rows):
+    """Two-stage select, stage 2: fold one tile's [1, BLK_C] distances into
+    the running [1, W] top-W carry (smallest-W of carry ∪ tile)."""
+    cat_d = jnp.concatenate([best_d[...], d], axis=1)
+    cat_r = jnp.concatenate([best_r[...], rows], axis=1)
+    neg, pos = jax.lax.top_k(-cat_d, best_d.shape[1])
+    best_d[...] = -neg
+    best_r[...] = jnp.take_along_axis(cat_r, pos, axis=1)
+
+
+def _tile_dist(zq_ref, rq_ref, coords_ref, res_ref, scale_ref,
+               res_scale_ref):
+    """Eq. 6 for one (query, grain, cap-tile) cell, exact int32 inner part.
+
+    zq_ref [1, k] i32, coords_ref [k, BLK_C] i16 (dim-major Block-SoA),
+    res_ref [1, BLK_C] i32, scale/res_scale [1, 1] f32.  -> [1, BLK_C] f32.
+    Float op order matches ``core.scan.blocksoa_scan`` exactly (bit-for-bit
+    parity with the gathered reference plane).
+    """
+    zq = zq_ref[...]                                     # [1, k] i32
+    panel = coords_ref[...].astype(jnp.int32)            # [k, BLK_C]
+    cross = jax.lax.dot_general(
+        zq, panel, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)                # [1, BLK_C]
+    zq2 = jnp.sum(zq * zq, axis=1, keepdims=True)        # [1, 1]
+    zi2 = jnp.sum(panel * panel, axis=0, keepdims=True)  # [1, BLK_C]
+    d_int = zq2 + zi2 - 2 * cross                        # exact int32
+    scale = scale_ref[0, 0]
+    d = d_int.astype(jnp.float32) * (scale * scale)
+    return d + res_ref[...].astype(jnp.float32) * res_scale_ref[0, 0] \
+        + rq_ref[0, 0]
+
+
+def _make_select_kernel(has_sketch: bool):
+    """Kernel body for one (query q, probe p, cap tile j) cell.  The §2.2
+    residual-sketch term, when present, is folded into the SAME pass (the
+    gathered plane pays a second full kernel launch for it) — everything
+    else (carry lifecycle, in-situ predicate, emit) is single-sourced here.
+    """
+
+    def kernel(gids_ref, zq_ref, rq_ref, keep_ref, *rest):
+        if has_sketch:
+            (sq_ref, coords_ref, res_ref, mask_ref, rows_ref, scale_ref,
+             res_scale_ref, sketch_ref, sk_scale_ref,
+             out_d_ref, out_r_ref, best_d, best_r) = rest
+        else:
+            (coords_ref, res_ref, mask_ref, rows_ref, scale_ref,
+             res_scale_ref, out_d_ref, out_r_ref, best_d, best_r) = rest
+        p_i, j = pl.program_id(1), pl.program_id(2)
+
+        @pl.when(jnp.logical_and(p_i == 0, j == 0))
+        def _init():                                     # fresh query: reset
+            best_d[...] = jnp.full(best_d.shape, NEG_BIG, best_d.dtype)
+            best_r[...] = jnp.full(best_r.shape, -1, best_r.dtype)
+
+        d = _tile_dist(zq_ref, rq_ref, coords_ref, res_ref, scale_ref,
+                       res_scale_ref)
+        if has_sketch:
+            sq = sq_ref[...]                             # [1, s] i32
+            sk = sketch_ref[...].astype(jnp.int32)       # [s, BLK_C]
+            s_cross = jax.lax.dot_general(
+                sq, sk, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+            s_int = jnp.sum(sq * sq, axis=1, keepdims=True) \
+                + jnp.sum(sk * sk, axis=0, keepdims=True) - 2 * s_cross
+            sk_scale = sk_scale_ref[0, 0]
+            d = d + s_int.astype(jnp.float32) * (sk_scale * sk_scale)
+        # in-situ predicate: validity ∧ liveness/tag/ts ∧ envelope verdict
+        keep = jnp.logical_and(mask_ref[...] != 0, keep_ref[0, 0] != 0)
+        d = jnp.where(keep, d, jnp.float32(NEG_BIG))
+        _merge_tile(best_d, best_r, d, rows_ref[...])
+
+        last = jnp.logical_and(p_i == pl.num_programs(1) - 1,
+                               j == pl.num_programs(2) - 1)
+
+        @pl.when(last)
+        def _emit():                                     # the ONLY HBM write
+            out_d_ref[...] = best_d[...]
+            out_r_ref[...] = jnp.where(best_d[...] < NEG_BIG / 2,
+                                       best_r[...], -1)
+
+    return kernel
+
+
+_select_kernel = _make_select_kernel(has_sketch=False)
+_select_kernel_sketch = _make_select_kernel(has_sketch=True)
+
+
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("width", "interpret"))
+def fused_scan_select(gids, zq, rq, keep, coords, res, mask, rows, scale,
+                      res_scale, sq=None, sketch=None, sketch_scale=None, *,
+                      width: int, interpret=None):
+    """Streaming scan→select over the probed grains of a stacked index.
+
+    Args (Q queries, P probed grains/query, G total grains, cap slots/grain):
+      gids   [Q, P] i32   — probed grain ids (scalar-prefetch: drives DMA)
+      zq     [Q, P, k] i32 — query coords quantized per probed grain's frame
+      rq     [Q, P] f32    — dequantized query residual energies
+      keep   [Q, P] bool   — envelope-filter verdict (False kills the grain)
+      coords [G, k, cap] i16 — the FULL stacked Block-SoA panel tier (only
+                               probed [k, BLK_C] tiles are ever streamed)
+      res    [G, cap] i32, mask [G, cap] bool (validity ∧ extra predicates),
+      rows   [G, cap] i32 (payload row ids), scale/res_scale [G] f32.
+      Optional sketch: sq [Q, P, s] i32, sketch [G, s, cap] i8,
+      sketch_scale [G] f32 — folded into the same pass.
+
+    Returns (dists [Q, width] f32 ascending, rows [Q, width] i32); slots
+    beyond the live candidates carry (BIG, -1).  ``interpret=None`` resolves
+    to compiled on TPU, interpret elsewhere.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    q_n, p_n, k = zq.shape
+    g_n, _, cap = coords.shape
+    c_pad = -cap % BLK_C
+    if c_pad:
+        coords = jnp.pad(coords, ((0, 0), (0, 0), (0, c_pad)))
+        res = jnp.pad(res, ((0, 0), (0, c_pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, c_pad)))
+        rows = jnp.pad(rows, ((0, 0), (0, c_pad)), constant_values=-1)
+        if sketch is not None:
+            sketch = jnp.pad(sketch, ((0, 0), (0, 0), (0, c_pad)))
+    capp = cap + c_pad
+    w_pad = _round_up(max(width, 1), 128)      # lane-aligned carry width
+
+    grid = (q_n, p_n, capp // BLK_C)
+    # Block index maps: scalar-prefetched gids turn (q, p) into the probed
+    # grain's HBM offset — affine streaming, no gather anywhere.
+    in_specs = [
+        pl.BlockSpec((None, None, 1, k), lambda q, p, j, g: (q, p, 0, 0)),
+        pl.BlockSpec((None, None, 1, 1), lambda q, p, j, g: (q, p, 0, 0)),
+        pl.BlockSpec((None, None, 1, 1), lambda q, p, j, g: (q, p, 0, 0)),
+    ]
+    args = [
+        zq[:, :, None, :],
+        rq[:, :, None, None],
+        keep[:, :, None, None].astype(jnp.int32),
+    ]
+    if sketch is not None:
+        s_dim = sq.shape[2]
+        in_specs.append(
+            pl.BlockSpec((None, None, 1, s_dim),
+                         lambda q, p, j, g: (q, p, 0, 0)))
+        args.append(sq[:, :, None, :])
+    in_specs += [
+        pl.BlockSpec((None, k, BLK_C), lambda q, p, j, g: (g[q, p], 0, j)),
+        pl.BlockSpec((None, 1, BLK_C), lambda q, p, j, g: (g[q, p], 0, j)),
+        pl.BlockSpec((None, 1, BLK_C), lambda q, p, j, g: (g[q, p], 0, j)),
+        pl.BlockSpec((None, 1, BLK_C), lambda q, p, j, g: (g[q, p], 0, j)),
+        pl.BlockSpec((None, 1, 1), lambda q, p, j, g: (g[q, p], 0, 0)),
+        pl.BlockSpec((None, 1, 1), lambda q, p, j, g: (g[q, p], 0, 0)),
+    ]
+    args += [
+        coords,
+        res[:, None, :],
+        mask[:, None, :].astype(jnp.int32),
+        rows[:, None, :],
+        scale[:, None, None],
+        res_scale[:, None, None],
+    ]
+    if sketch is not None:
+        s_dim = sq.shape[2]
+        in_specs += [
+            pl.BlockSpec((None, s_dim, BLK_C),
+                         lambda q, p, j, g: (g[q, p], 0, j)),
+            pl.BlockSpec((None, 1, 1), lambda q, p, j, g: (g[q, p], 0, 0)),
+        ]
+        args += [sketch, sketch_scale[:, None, None]]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((None, 1, w_pad), lambda q, p, j, g: (q, 0, 0)),
+            pl.BlockSpec((None, 1, w_pad), lambda q, p, j, g: (q, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, w_pad), jnp.float32),   # running top-W dists
+            pltpu.VMEM((1, w_pad), jnp.int32),     # running top-W rows
+        ],
+    )
+    kernel = _select_kernel if sketch is None else _select_kernel_sketch
+    out_d, out_r = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((q_n, 1, w_pad), jnp.float32),
+            jax.ShapeDtypeStruct((q_n, 1, w_pad), jnp.int32),
+        ],
+        interpret=interpret,
+    )(gids.astype(jnp.int32), *args)
+    return out_d[:, 0, :width], out_r[:, 0, :width]

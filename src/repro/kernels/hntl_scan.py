@@ -31,8 +31,15 @@ from jax.experimental import pallas as pl
 # equal to types.BIG — asserted in tests/test_kernels.py.
 NEG_BIG = 3.0e38
 
-BLK_Q = 128   # query-tile rows   (MXU dimension)
-BLK_C = 128   # cap-tile columns  (lane dimension)
+BLK_Q = 128   # max query-tile rows (MXU dimension)
+BLK_C = 128   # cap-tile columns    (lane dimension)
+
+
+def _query_block(q: int) -> int:
+    """Adaptive query-tile height: the next multiple of 8 (f32 sublane
+    quantum) >= q, capped at BLK_Q.  The serving path's Q=1 then runs an
+    8-row tile instead of burning a full 128-row MXU tile on padding."""
+    return min(BLK_Q, -(-q // 8) * 8)
 
 
 def _scan_kernel(zq_ref, rq_ref, coords_ref, res_ref, valid_ref,
@@ -87,7 +94,8 @@ def hntl_scan(zq, rq, coords, res, valid, scale, res_scale, *,
     """
     p, q, k = zq.shape
     cap = coords.shape[2]
-    q_pad = -q % BLK_Q
+    blk_q = _query_block(q)
+    q_pad = -q % blk_q
     c_pad = -cap % BLK_C
     if q_pad:
         zq = jnp.pad(zq, ((0, 0), (0, q_pad), (0, 0)))
@@ -98,13 +106,13 @@ def hntl_scan(zq, rq, coords, res, valid, scale, res_scale, *,
         valid = jnp.pad(valid, ((0, 0), (0, 0), (0, c_pad)))
     qp, capp = q + q_pad, cap + c_pad
 
-    grid = (p, qp // BLK_Q, capp // BLK_C)  # affine — no pointers anywhere
+    grid = (p, qp // blk_q, capp // BLK_C)  # affine — no pointers anywhere
     out = pl.pallas_call(
         _scan_kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((None, BLK_Q, k), lambda g, i, j: (g, i, 0)),
-            pl.BlockSpec((None, BLK_Q, 1), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((None, blk_q, k), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((None, blk_q, 1), lambda g, i, j: (g, i, 0)),
             pl.BlockSpec((None, k, BLK_C), lambda g, i, j: (g, 0, j)),
             pl.BlockSpec((None, 1, BLK_C), lambda g, i, j: (g, 0, j)),
             pl.BlockSpec((None, 1, BLK_C), lambda g, i, j: (g, 0, j)),
@@ -112,7 +120,7 @@ def hntl_scan(zq, rq, coords, res, valid, scale, res_scale, *,
             pl.BlockSpec((None, 1, 1), lambda g, i, j: (g, 0, 0)),
         ],
         out_specs=pl.BlockSpec(
-            (None, BLK_Q, BLK_C), lambda g, i, j: (g, i, j)),
+            (None, blk_q, BLK_C), lambda g, i, j: (g, i, j)),
         out_shape=jax.ShapeDtypeStruct((p, qp, capp), jnp.float32),
         interpret=interpret,
     )(

@@ -59,15 +59,20 @@ def scan_batched(zq, rq, coords, res, valid, scale, res_scale,
         d = hntl_scan(zq, rq, coords, res, keep, scale, res_scale,
                       interpret=interp)
     if sketch is not None:
+        # The sketch pass computes ONLY ||s_q - s_i||^2 * sketch_scale^2:
+        # residual inputs are identically zero, and the residual scale is a
+        # self-describing neutral 1 — not some unrelated live scale riding
+        # along (it multiplies zeros either way, but the call should say so).
         zero_r = jnp.zeros(res.shape, res.dtype)
         zero_rq = jnp.zeros(rq.shape, rq.dtype)
+        unit_rs = jnp.ones_like(sketch_scale)
         allv = jnp.ones(valid.shape, bool)
         if kind == "ref":
             ds = ref.hntl_scan_ref(sq, zero_rq, sketch, zero_r, allv,
-                                   sketch_scale, res_scale)
+                                   sketch_scale, unit_rs)
         else:
             ds = hntl_scan(sq, zero_rq, sketch, zero_r, allv,
-                           sketch_scale, res_scale, interpret=interp)
+                           sketch_scale, unit_rs, interpret=interp)
         d = jnp.where(d < NEG_BIG / 2, d + ds, d)
     return d
 
@@ -89,15 +94,18 @@ def scan_single(zq, rq, coords, res, valid, scale, res_scale,
         d = hntl_scan_single(zq, rq, coords, res, keep, scale, res_scale,
                              interpret=interp)
     if sketch is not None:
+        # sketch-only pass: zero residuals + neutral unit residual scale
+        # (see scan_batched — the arg describes itself, nothing more)
         zero_r = jnp.zeros(res.shape, res.dtype)
         zero_rq = jnp.zeros(rq.shape, rq.dtype)
+        unit_rs = jnp.ones_like(sketch_scale)
         allv = jnp.ones(valid.shape, bool)
         if kind == "ref":
             ds = ref.hntl_scan_single_ref(sq, zero_rq, sketch, zero_r, allv,
-                                          sketch_scale, res_scale)
+                                          sketch_scale, unit_rs)
         else:
             ds = hntl_scan_single(sq, zero_rq, sketch, zero_r, allv,
-                                  sketch_scale, res_scale, interpret=interp)
+                                  sketch_scale, unit_rs, interpret=interp)
         d = jnp.where(d < NEG_BIG / 2, d + ds, d)
     return d
 

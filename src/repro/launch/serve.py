@@ -19,7 +19,7 @@ import jax
 import numpy as np
 
 from ..configs import get_config, get_smoke_config
-from ..core import HNTLConfig
+from ..core import HNTLConfig, scan_plane_names
 from ..core.store import VectorStore
 from ..models import get_model
 from ..serve.engine import ServeEngine
@@ -54,6 +54,11 @@ def main(argv=None):
                     help="attach a demo vector memory with N documents")
     ap.add_argument("--retrieval-shards", type=int, default=1,
                     help="grain-shard the memory over an N-way search mesh")
+    ap.add_argument("--scan-impl", default=None,
+                    choices=sorted(scan_plane_names()),
+                    help="ScanPlane backend for retrieval (default auto — "
+                         "the fused scan→select kernel on TPU, the jnp "
+                         "reference elsewhere)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -67,13 +72,14 @@ def main(argv=None):
     engine = ServeEngine(model, params, n_slots=args.slots,
                          max_len=args.max_len, temperature=args.temperature,
                          seed=args.seed, memory=memory,
-                         memory_mesh=memory_mesh)
+                         memory_mesh=memory_mesh, scan_impl=args.scan_impl)
     if memory is not None:
         res = engine.retrieve(demo_q, topk=4, mode="B")
         plane = ("sharded x%d" % args.retrieval_shards
                  if memory_mesh is not None else "single-device")
         print(f"[serve] retrieval sidecar: {memory.n_vectors} docs, "
-              f"{plane} search plane, probe ids[0]="
+              f"{plane} search plane, scan_impl="
+              f"{args.scan_impl or 'auto'}, probe ids[0]="
               f"{np.asarray(res.ids)[0].tolist()}")
 
     rng = np.random.default_rng(args.seed)

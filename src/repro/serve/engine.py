@@ -33,9 +33,14 @@ class Request:
 
 
 class ServeEngine:
+    # class-level default: the memory sidecar API works on partially
+    # constructed engines (tests build them with __new__, no model needed)
+    scan_impl: Optional[str] = None
+
     def __init__(self, model, params, *, n_slots: int = 4,
                  max_len: int = 512, temperature: float = 0.0, seed: int = 0,
-                 memory: Optional[VectorStore] = None, memory_mesh=None):
+                 memory: Optional[VectorStore] = None, memory_mesh=None,
+                 scan_impl: Optional[str] = None):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -46,6 +51,9 @@ class ServeEngine:
         # optional (data, model) mesh: retrieval runs on the distributed
         # search plane — grain-sharded index, one all-gather top-k merge
         self.memory_mesh = memory_mesh
+        # ScanPlane backend for every retrieve() (core.scanplane registry);
+        # None = auto (fused scan→select kernel on TPU, jnp ref elsewhere)
+        self.scan_impl = scan_impl
         self.rng = np.random.default_rng(seed)
         self.caches = model.init_cache(n_slots, max_len)
         self.pos = np.zeros(n_slots, np.int64)        # next position per slot
@@ -149,7 +157,8 @@ class ServeEngine:
         q = np.asarray(q_embed, np.float32)
         return self.memory.search(q, topk=topk, mode=mode,
                                   tag_mask=tag_mask, ts_range=ts_range,
-                                  mesh=self.memory_mesh)
+                                  mesh=self.memory_mesh,
+                                  scan_impl=self.scan_impl)
 
     def remember(self, vecs, *, tags=None, ts=None, ttl=None) -> np.ndarray:
         """Write docs/session state into the vector memory; ``ttl`` (seconds)

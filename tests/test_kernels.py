@@ -111,6 +111,53 @@ def test_planner_scan_fn_via_vmap(rng):
                                np.asarray(ref), rtol=1e-5, atol=1e-4)
 
 
+def test_ops_sketch_single_parity(rng):
+    """scan_single with the sketch term: ref == interpret (pins the
+    self-describing sketch invocation — zero residuals, unit residual
+    scale — through the single-query path too)."""
+    p, k, s, cap = 3, 16, 8, 256
+    a = _panel(rng, p, 1, k, cap)
+    kw = dict(sq=rng.integers(-100, 100, (p, s)).astype(np.int32),
+              sketch=rng.integers(-100, 100, (p, s, cap)).astype(np.int8),
+              sketch_scale=(rng.random(p) * 0.01 + 1e-4).astype(np.float32))
+    r = ops.scan_single(a["zq"][:, 0], a["rq"][:, 0], a["coords"], a["res"],
+                        a["valid"], a["scale"], a["res_scale"],
+                        backend="ref", **kw)
+    i = ops.scan_single(a["zq"][:, 0], a["rq"][:, 0], a["coords"], a["res"],
+                        a["valid"], a["scale"], a["res_scale"],
+                        backend="interpret", **kw)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(i),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_adaptive_query_block():
+    """Q=1 serving path must not burn a 128-row MXU tile: the query block
+    is the next multiple of 8 >= Q, capped at BLK_Q."""
+    from repro.kernels.hntl_scan import BLK_Q, _query_block
+    assert _query_block(1) == 8
+    assert _query_block(8) == 8
+    assert _query_block(9) == 16
+    assert _query_block(128) == BLK_Q
+    assert _query_block(1000) == BLK_Q
+
+
+def test_adaptive_block_bit_for_bit(rng):
+    """The adaptive tile height must not change results: the SAME query row
+    scanned through the Q=1 path (8-row tile) and as part of a Q=128 batch
+    (full 128-row tile) agrees BIT-FOR-BIT — and both match the ref oracle
+    to float tolerance."""
+    a = _panel(rng, 2, 128, 16, 256)
+    full = hntl_scan(a["zq"], a["rq"], a["coords"], a["res"], a["valid"],
+                     a["scale"], a["res_scale"], interpret=True)
+    one = hntl_scan(a["zq"][:, :1], a["rq"][:, :1], a["coords"], a["res"],
+                    a["valid"], a["scale"], a["res_scale"], interpret=True)
+    assert np.array_equal(np.asarray(one), np.asarray(full)[:, :1])
+    ref = hntl_scan_ref(a["zq"], a["rq"], a["coords"], a["res"], a["valid"],
+                        a["scale"], a["res_scale"])
+    np.testing.assert_allclose(np.asarray(full), np.asarray(ref),
+                               rtol=1e-5, atol=1e-4)
+
+
 def test_invalid_slots_get_big(rng):
     a = _panel(rng, 2, 3, 8, 128)
     a["valid"][:] = False
@@ -126,6 +173,7 @@ def test_invalid_slot_sentinel_is_single_sourced():
     the kernels wrote."""
     from repro.core import scan as core_scan
     from repro.core.types import BIG
+    from repro.kernels import fused_select as kfsel
     from repro.kernels import hntl_scan as kscan
     from repro.kernels import ref as kref
     from repro.models import hntl_attention as kv
@@ -133,4 +181,5 @@ def test_invalid_slot_sentinel_is_single_sourced():
     assert kscan.NEG_BIG == BIG
     assert kref.NEG_BIG == BIG
     assert ops.NEG_BIG == BIG
+    assert kfsel.NEG_BIG == BIG
     assert kv.BIG == BIG
