@@ -21,6 +21,8 @@ BENCHES = [
     ("segment_scale", "LSM store: fused stacked search vs per-segment loop"),
     ("churn", "Mutation plane: QPS/recall under delete+upsert churn, "
               "compaction reclaim"),
+    ("drift", "Maintenance plane: recall under streaming drift, frozen "
+              "partition vs split/merge/refit"),
     ("shard_scale", "Distributed plane: QPS + per-shard scan work vs shards"),
     ("hntl_kv_decode", "HNTL-KV retrieval decode vs exact attention"),
 ]

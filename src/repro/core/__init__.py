@@ -4,8 +4,11 @@ from .types import (HNTLConfig, HNTLIndex, GrainStore, RoutingPlane,
 from .index import build, search, BuildInfo, int32_safe_qmax
 from .scanplane import (ScanPlane, get_scan_plane, register_scan_plane,
                         scan_plane_names)
+from .maintenance import (MaintenancePolicy, MaintenanceReport,
+                          SegmentReport)
 
 __all__ = ["HNTLConfig", "HNTLIndex", "GrainStore", "RoutingPlane",
            "SearchResult", "StackedSegments", "tree_bytes", "build",
            "search", "BuildInfo", "int32_safe_qmax", "ScanPlane",
-           "get_scan_plane", "register_scan_plane", "scan_plane_names"]
+           "get_scan_plane", "register_scan_plane", "scan_plane_names",
+           "MaintenancePolicy", "MaintenanceReport", "SegmentReport"]

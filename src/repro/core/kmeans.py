@@ -62,6 +62,49 @@ def kmeans(key: jax.Array, x: jax.Array, g: int, iters: int = 25):
     return centers, _assign(x, centers)
 
 
+def two_means(x, iters: int = 16):
+    """Deterministic host-side 2-means — the grain *split* primitive.
+
+    Maintenance splits an overfull grain by bisecting its live members;
+    determinism matters (no RNG) because the same split must come out of
+    every process that maintains the same store (shard-count invariance,
+    derandomized CI).  Init is farthest-point: c0 = the member farthest
+    from the grain mean, c1 = the member farthest from c0.
+
+    x: [m, d] float32, m >= 2.  Returns (centers [2, d], assign [m] in
+    {0, 1}).  Degenerate input (all members identical) leaves one side
+    empty — callers skip the split when a half comes back empty.
+    """
+    import numpy as np
+
+    xn = np.asarray(x, np.float32)
+    c0 = xn[int(np.argmax(np.sum((xn - xn.mean(0)) ** 2, axis=1)))]
+    c1 = xn[int(np.argmax(np.sum((xn - c0) ** 2, axis=1)))]
+    centers = np.stack([c0, c1])
+    assign = np.zeros(len(xn), np.int64)
+    for it in range(iters):
+        d2 = (np.sum(xn * xn, axis=1, keepdims=True)
+              - 2.0 * xn @ centers.T + np.sum(centers * centers, axis=1))
+        new_assign = np.argmin(d2, axis=1)
+        if it > 0 and (new_assign == assign).all():
+            break
+        assign = new_assign
+        for c in range(2):
+            if (assign == c).any():
+                centers[c] = xn[assign == c].mean(0)
+    return centers, assign
+
+
+def steal_rows(d2_src: "jax.Array", n_move: int):
+    """Pick which members an overfull grain hands to a neighbour: the
+    ``n_move`` rows *farthest* from the source centroid (they are the ones
+    the source frame represents worst).  d2_src: [m] distances to the
+    source centroid.  Returns index array of the rows to move."""
+    import numpy as np
+
+    return np.argsort(np.asarray(d2_src))[::-1][:n_move]
+
+
 def balanced_assign(x: jax.Array, centers: jax.Array, cap: int) -> jax.Array:
     """Capacity-bounded assignment: greedily spill overflow to the next-nearest
     grain with room.  Host-side (numpy) — build-time only.

@@ -46,3 +46,24 @@ def scatter_to_grains(values: np.ndarray, assign: np.ndarray, slot: np.ndarray,
     out = np.full(out_shape, fill, dtype=values.dtype)
     out[assign, slot] = values
     return out
+
+
+def pack_members(members, cap: int):
+    """Lay out explicit member lists as Block-SoA id/valid panels — the
+    maintenance plane's *group rewrite* primitive.
+
+    members: sequence of [m_g] int arrays (local raw rows of each group,
+    m_g <= cap).  Rows pack densely from slot 0 (affine addressing — the
+    whole point of the pointerless layout); remaining slots are -1/False
+    padding.  Returns (ids [G, cap] i32, valid [G, cap] bool).
+    """
+    g = len(members)
+    ids = np.full((g, cap), -1, np.int32)
+    valid = np.zeros((g, cap), bool)
+    for gi, rows in enumerate(members):
+        m = len(rows)
+        if m > cap:
+            raise ValueError(f"group {gi} overflows cap: {m} > {cap}")
+        ids[gi, :m] = np.asarray(rows, np.int32)
+        valid[gi, :m] = True
+    return ids, valid

@@ -1,0 +1,516 @@
+"""Adaptive grain maintenance: split / merge / tangent refit under churn.
+
+The paper's quality story (§2.1-§2.3) rests on grains staying *locally
+coherent*: routing assumes the centroid is where the members are, and the
+quantized tangent-local distances assume the PCA frame spans the members'
+local structure.  Both are frozen at build time, but since the mutation
+plane landed the member set is not: deletes and upsert-shadowing carve
+survivors out of sealed grains, and under drifting workloads the survivors'
+mean walks away from the frozen centroid while the frame keeps spending its
+k dimensions on structure that is no longer there.  Nothing *breaks* —
+searches stay exact under exhaustive knobs — but at production knobs
+(small nprobe, envelope filter on) recall silently rots.
+
+This module is the repair plane.  Per sealed segment it computes per-grain
+health from the store's mutation state and the raw tier:
+
+- **overfull** — live occupancy far above the segment's per-grain target
+  (a density hotspot: one grain soaking up a drifted cluster).  Repair:
+  *split* by deterministic 2-means over the live members
+  (:func:`repro.core.kmeans.two_means`), growing the grain axis.
+- **underfull** — live occupancy far below target (post-tombstone husk).
+  Repair: *merge* the live members into the nearest grain with room
+  (:func:`repro.core.routing.merge_target`), retiring the husk; all-dead
+  grains retire outright, and a segment whose every grain retires is
+  dropped from the manifest.
+- **frame-stale** — the existing frame's captured energy over the live
+  members (:func:`repro.core.pca.captured_fraction`, recentred on the
+  *live* mean) falls measurably below the best any rank-(k+s) frame could
+  capture (:func:`repro.core.pca.best_captured_fraction`).  Judging
+  staleness *relative to the refit bound* is what keeps intrinsically
+  high-dimensional grains (isotropic data captures ~k/d even when fresh)
+  from being refit forever.  Repair: *refit* — recenter on the live mean,
+  re-run the local PCA on the live rows, re-fit both quantizer scales, and
+  re-encode the group in place.
+
+Rewrite discipline (what makes this cheap):
+
+- Only *touched* groups are re-encoded; every untouched grain's Block-SoA
+  panel rows, routing row and quantizer scales are copied **bit-identical**
+  into the new segment, and an all-healthy segment is returned by
+  *identity* (no new object, no plane-cache invalidation at all).
+- The raw tier is never rewritten: grains address raw rows by id, so a
+  split/merge/refit only moves [cap]-sized panel rows.  Dead raw rows are
+  physically reclaimed by ``compact()``, exactly as before.
+- A refit keeps the group's slot layout (dead slots stay, masked by the
+  per-epoch liveness bitmap as always), so a refit-only epoch preserves the
+  shard row permutation and the distributed plane can re-place grain panels
+  while *reusing* the placed raw tier (`store._sharded_for`'s delta path).
+- One maintenance epoch replaces the manifest's segment tuple once, so the
+  plane cache re-stacks at most once per epoch no matter how many grains
+  were repaired.
+
+Everything here is host-side control-plane (numpy + small jitted encode
+batches), like build and compaction; searches running on older manifests
+keep their segments untouched (copy-on-write, as everywhere in the store).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import kmeans as km
+from . import layout, pca, quantize, routing
+from .types import GrainStore, HNTLConfig, HNTLIndex
+
+
+@dataclasses.dataclass(frozen=True)
+class MaintenancePolicy:
+    """Health thresholds for the maintenance plane.
+
+    target = live rows / grains of the segment; all ratios are against it.
+    """
+
+    underfull_frac: float = 0.25   # live < frac * target  -> merge candidate
+    overfull_ratio: float = 2.0    # live > ratio * target -> split candidate
+    stale_ratio: float = 0.90      # captured < ratio * refit-bound -> stale
+    stale_margin: float = 0.01     # plus an absolute gap (no fp-noise refits)
+    # ||live mean - frozen centroid||^2 > ratio * live variance -> stale.
+    # Catches the failure captured-variance alone cannot: when deletes
+    # shift the survivors' mean ALONG the frame's own span, the frame
+    # still captures fine but routing ranks the grain by a centroid that
+    # is no longer where the members are.
+    drift_ratio: float = 0.25
+    min_split_rows: Optional[int] = None   # default 2 * cfg.block
+    min_refit_rows: int = 4        # don't judge a frame on fewer live rows
+
+
+@dataclasses.dataclass
+class SegmentReport:
+    """What maintenance did to one segment."""
+
+    seg_id: int
+    changed: bool
+    dropped: bool = False          # every row dead -> segment removed
+    grains_before: int = 0
+    grains_after: int = 0
+    splits: int = 0                # grains bisected (each adds one grain)
+    merges: int = 0                # underfull grains folded into a neighbour
+    retires: int = 0               # all-dead grains removed
+    refits: int = 0                # frames/scales re-fit (incl. split/merge
+    #                                targets — any re-encoded group)
+    unchanged: tuple = ()          # (old_gi, new_gi) pairs copied verbatim
+    slots_preserved: bool = True   # no membership moved (refit-only epoch)
+
+
+@dataclasses.dataclass
+class MaintenanceReport:
+    """Aggregate over all sealed segments of one ``store.maintain()``."""
+
+    segments: tuple = ()
+
+    @property
+    def changed(self) -> bool:
+        return any(s.changed for s in self.segments)
+
+    def total(self, field: str) -> int:
+        return sum(getattr(s, field) for s in self.segments)
+
+    def summary(self) -> str:
+        return (f"splits={self.total('splits')} merges={self.total('merges')}"
+                f" retires={self.total('retires')}"
+                f" refits={self.total('refits')} dropped_segments="
+                f"{sum(s.dropped for s in self.segments)}")
+
+
+def _occupancy_stats(seg, live_rows: Optional[np.ndarray]) -> dict:
+    """The cheap half of the health stats: panel occupancy only — no raw
+    tier read, no eigendecomposition."""
+    g = seg.index.grains
+    ids = np.asarray(g.ids)
+    valid = np.asarray(g.valid)
+    live_panel = valid & (ids >= 0)
+    if live_rows is not None:
+        live_panel &= np.asarray(live_rows, bool)[np.maximum(ids, 0)]
+    return dict(ids=ids, valid=valid, live_panel=live_panel,
+                live_cnt=live_panel.sum(axis=1))
+
+
+def _pristine_stats(seg, occ: dict) -> dict:
+    """Stats for a segment with NO dead rows: every frame is provably in
+    its build/refit state (mean exact, basis the live rows' own PCA), so
+    captured == best and drift == 0 *by construction* — report them as
+    such without materializing the raw tier.  Only the occupancy signals
+    (overfull / empty-grain retire) can fire on such a segment; if they
+    do, the caller falls back to the full stats before acting.
+    """
+    g_n = occ["valid"].shape[0]
+    return occ | dict(captured=np.ones(g_n, np.float32),
+                      best=np.ones(g_n, np.float32),
+                      drift2=np.zeros(g_n, np.float32),
+                      var_live=np.ones(g_n, np.float32),
+                      live_mean=np.zeros(
+                          (g_n, np.asarray(seg.index.grains.mu).shape[1]),
+                          np.float32))
+
+
+def grain_stats(seg, live_rows: Optional[np.ndarray]):
+    """Per-grain live stats of one sealed segment (host-side).
+
+    live_rows: [n] bool per raw row (None = all live).  Returns a dict:
+    ``live_panel`` [G, cap], ``live_cnt`` [G], ``captured`` [G] (existing
+    frame, live-mean-centred), ``best`` [G] (refit bound), ``live_mean``
+    [G, d], and ``x`` (the raw tier, loaded once for reuse).
+    """
+    g = seg.index.grains
+    occ = _occupancy_stats(seg, live_rows)
+    ids, valid, live_panel = occ["ids"], occ["valid"], occ["live_panel"]
+    x = np.asarray(seg.raw_vectors(), np.float32)
+    xg = x[np.maximum(ids, 0)]                            # [G, cap, d]
+    captured, live_mean = pca.captured_fraction(
+        xg, live_panel, g.basis,
+        g.sketch_basis if g.sketch_basis is not None else None)
+    k = g.k
+    s = (np.asarray(g.sketch_basis).shape[2]
+         if g.sketch_basis is not None else 0)
+    best = pca.best_captured_fraction(xg, live_panel, k, s)
+    cnt = occ["live_cnt"]
+    # routing-health pair: how far the live mean walked off the frozen
+    # centroid, against the survivors' own spread
+    drift2 = np.sum((live_mean - np.asarray(g.mu, np.float32)) ** 2, axis=1)
+    w = live_panel[..., None].astype(np.float32)
+    var_live = (np.sum(((xg - live_mean[:, None, :]) * w) ** 2, axis=(1, 2))
+                / np.maximum(cnt, 1))
+    return occ | dict(captured=captured, best=best, live_mean=live_mean,
+                      drift2=drift2, var_live=var_live, x=x)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "s", "qeff", "quantile",
+                                             "mult"))
+def _encode_groups(xm, valid, fit, *, k: int, s: int, qeff: int,
+                   quantile: float, mult: float):
+    """Re-encode a batch of grain groups, mirroring ``index.build``'s
+    per-grain math exactly (same PCA, same scale fitters, same quantizers).
+
+    xm [T, cap, d]: member rows (zeros at invalid slots); valid [T, cap]:
+    slots physically present; fit [T, cap]: slots the *frame and scales*
+    are fit on (the live subset — dead slots are re-encoded under the new
+    frame so they stay addressable, but never steer it).
+    """
+    w = fit.astype(xm.dtype)
+    cnt = jnp.maximum(w.sum(axis=1), 1.0)                  # [T]
+    mu = (xm * w[..., None]).sum(axis=1) / cnt[:, None]    # [T, d]
+    xc = (xm - mu[:, None, :]) * valid[..., None]          # [T, cap, d]
+    basis, sketch_basis, var = jax.vmap(
+        lambda xcg, mg: pca.grain_pca(xcg, mg, k, s))(xc, fit)
+    z = jnp.einsum("gcd,gdk->gck", xc, basis)              # [T, cap, k]
+    scale = jax.vmap(lambda zz, mm: quantize.fit_scale(
+        zz, mm, qmax=qeff, quantile=quantile, mult=mult))(z, fit)
+    zq = quantize.quantize_coords(z, scale[:, None, None], qmax=qeff)
+    vc2 = jnp.sum(xc * xc, axis=-1)
+    r = jnp.maximum(vc2 - jnp.sum(z * z, axis=-1), 0.0)
+    out = dict(mu=mu, basis=basis, scale=scale, var=var,
+               coords=jnp.transpose(zq, (0, 2, 1)))
+    if s > 0:
+        s_coords = jnp.einsum("gcd,gds->gcs", xc, sketch_basis)
+        r = jnp.maximum(r - jnp.sum(s_coords * s_coords, axis=-1), 0.0)
+        sk_scale = jax.vmap(lambda zz, mm: quantize.fit_scale(
+            zz, mm, qmax=127, quantile=quantile, mult=mult))(s_coords, fit)
+        sq = quantize.quantize_coords(
+            s_coords, sk_scale[:, None, None], qmax=127).astype(jnp.int8)
+        out["sketch"] = jnp.transpose(sq, (0, 2, 1))
+        out["sketch_basis"] = sketch_basis
+        out["sketch_scale"] = sk_scale
+    res_scale = jax.vmap(quantize.fit_res_scale)(r, fit)
+    out["res_scale"] = res_scale
+    out["res"] = quantize.quantize_residual(r, res_scale[:, None])
+    return out
+
+
+def _plan_segment(stats: dict, cfg: HNTLConfig, policy: MaintenancePolicy):
+    """Decide per-grain actions from the health stats.
+
+    Returns (actions [G] str in {keep, refit, split, merge, retire},
+    merge_dst [G] int, target float).  ``merge`` means "fold my live rows
+    into merge_dst and retire me"; the dst itself becomes a re-encoded
+    (touched) group.
+    """
+    live_cnt = stats["live_cnt"].astype(np.int64)
+    built_cnt = stats["valid"].sum(axis=1).astype(np.int64)  # physical rows
+    g_n = len(live_cnt)
+    total_live = int(live_cnt.sum())
+    # two occupancy scales: what the grain HOLDS now (live mean — the
+    # density hotspot scale for splits) and what the layout was BUILT for
+    # (physical mean — the structural scale a husk is judged against)
+    live_target = max(total_live / max(g_n, 1), 1.0)
+    built_target = max(float(built_cnt.sum()) / max(g_n, 1), 1.0)
+    target = max(live_target, built_target)
+    min_split = (policy.min_split_rows if policy.min_split_rows is not None
+                 else 2 * cfg.block)
+
+    actions = np.full(g_n, "keep", dtype=object)
+    merge_dst = np.full(g_n, -1, np.int64)
+
+    frame_stale = ((stats["best"] - stats["captured"] > policy.stale_margin)
+                   & (stats["captured"]
+                      < policy.stale_ratio * stats["best"]))
+    centroid_stale = (stats["drift2"]
+                      > policy.drift_ratio * stats["var_live"] + 1e-8)
+    stale = ((frame_stale | centroid_stale)
+             & (live_cnt >= policy.min_refit_rows))
+    actions[stale] = "refit"
+    actions[live_cnt == 0] = "retire"
+    overfull = ((live_cnt > policy.overfull_ratio * target)
+                & (live_cnt >= min_split))
+    actions[overfull] = "split"
+
+    # Underfull husks — grains that lost most of their OWN built rows to
+    # tombstones (live vs the grain's physical occupancy, so a freshly
+    # built segment never triggers) — fold into the nearest grain with
+    # room, smallest first.  This is what keeps dying segments from
+    # bleeding probes: a refit husk would otherwise sit right in the
+    # query-dense region with 2 live rows, out-competing full grains for
+    # a routing slot.  A grain already chosen as a dst stays a dst (its
+    # membership is growing), and split/retired/merged grains are never
+    # targets.
+    cap = stats["valid"].shape[1]
+    cur_cnt = live_cnt.copy()
+    underfull = np.flatnonzero(
+        (live_cnt > 0) & (live_cnt < policy.underfull_frac * built_cnt))
+    # a merged grain of int(ratio*target) rows fails the strict `>` overfull
+    # test, but one of exactly min_split rows would pass the `>=` size gate —
+    # cap the merge at min_split - 1 so no merge manufactures a grain the
+    # next epoch would re-split
+    limit = max(int(policy.overfull_ratio * target), int(min_split) - 1)
+    dsts: set = set()
+    for src in underfull[np.argsort(live_cnt[underfull], kind="stable")]:
+        if int(src) in dsts:               # already grew: no merge chains
+            continue
+        excluded = [gi for gi in range(g_n)
+                    if actions[gi] in ("retire", "split", "merge")]
+        dst = routing.merge_target(stats["live_mean"], cur_cnt, cap,
+                                   int(src), excluded=excluded,
+                                   max_merged=limit)
+        if dst < 0:
+            continue                       # nowhere with room: leave as-is
+        actions[src] = "merge"
+        merge_dst[src] = dst
+        dsts.add(dst)
+        cur_cnt[dst] += cur_cnt[src]
+        cur_cnt[src] = 0
+    return actions, merge_dst, target
+
+
+def maintain_segment(seg, live_rows: Optional[np.ndarray], cfg: HNTLConfig,
+                     policy: MaintenancePolicy, qeff: int):
+    """Repair one sealed segment.  Returns (new_segment, SegmentReport).
+
+    new_segment is ``seg`` ITSELF (identity) when every grain is healthy,
+    ``None`` when every row is dead (caller drops the segment), else a new
+    Segment sharing the raw tier / id tables with only the touched grain
+    groups re-encoded.
+    """
+    g = seg.index.grains
+    g_n, cap = g.n_grains, g.cap
+    rep = SegmentReport(seg_id=seg.seg_id, changed=False,
+                        grains_before=g_n, grains_after=g_n)
+    if live_rows is None:
+        # No dead rows anywhere: frames are in build/refit state by
+        # construction, so only occupancy signals can fire — plan on the
+        # cheap stats and skip the raw-tier read + eigendecomposition in
+        # the (common) all-healthy case, e.g. periodic compact() on an
+        # unmutated store.
+        stats = _pristine_stats(seg, _occupancy_stats(seg, None))
+    else:
+        stats = grain_stats(seg, live_rows)
+    if int(stats["live_cnt"].sum()) == 0:
+        rep.changed = rep.dropped = True
+        rep.retires, rep.grains_after = g_n, 0
+        rep.slots_preserved = False
+        return None, rep
+
+    actions, merge_dst, _ = _plan_segment(stats, cfg, policy)
+    if (actions == "keep").all():
+        rep.unchanged = tuple((gi, gi) for gi in range(g_n))
+        return seg, rep                    # identity: no cache invalidation
+    if "x" not in stats:                   # pristine plan wants repairs:
+        stats = grain_stats(seg, live_rows)        # get the real stats
+        actions, merge_dst, _ = _plan_segment(stats, cfg, policy)
+        if (actions == "keep").all():      # (only possible via fp margins)
+            rep.unchanged = tuple((gi, gi) for gi in range(g_n))
+            return seg, rep
+
+    ids, valid, live_panel = stats["ids"], stats["valid"], stats["live_panel"]
+    x = stats["x"]
+    live_members = [ids[gi][live_panel[gi]].astype(np.int64)
+                    for gi in range(g_n)]
+    for src in np.flatnonzero(actions == "merge"):
+        live_members[merge_dst[src]] = np.concatenate(
+            [live_members[merge_dst[src]], live_members[src]])
+
+    # ---- final grain order: originals in place, split halves appended ----
+    # entries: ("copy", gi) | ("refit", gi) | ("pack", gi, member_rows)
+    entries, appends = [], []
+    dsts = set(int(dd) for dd in merge_dst[merge_dst >= 0])
+    for gi in range(g_n):
+        act = actions[gi]
+        if act in ("retire", "merge"):
+            rep.retires += act == "retire"
+            rep.merges += act == "merge"
+            continue
+        if gi in dsts:                     # a merge target: repack + refit
+            entries.append(("pack", gi, live_members[gi]))
+            rep.refits += 1
+            continue
+        if act == "keep":
+            entries.append(("copy", gi))
+        elif act == "refit":
+            entries.append(("refit", gi))
+            rep.refits += 1
+        else:                              # split
+            mem = live_members[gi]
+            _, half = km.two_means(x[mem])
+            if not (half == 0).any() or not (half == 1).any():
+                # degenerate (identical points): steal the farthest half
+                d2 = np.sum((x[mem] - x[mem].mean(0)) ** 2, axis=1)
+                move = km.steal_rows(d2, len(mem) // 2)
+                half = np.zeros(len(mem), np.int64)
+                half[move] = 1
+            entries.append(("pack", gi, mem[half == 0]))
+            appends.append(("pack", gi, mem[half == 1]))
+            rep.splits += 1
+            rep.refits += 2
+    entries += appends
+    rep.slots_preserved = not appends and len(entries) == g_n and all(
+        e[0] != "pack" for e in entries)
+
+    # ---- batched re-encode of every touched group ------------------------
+    touched = [e for e in entries if e[0] != "copy"]
+    panels = {}
+    if touched:
+        t_ids = np.full((len(touched), cap), -1, np.int32)
+        t_valid = np.zeros((len(touched), cap), bool)
+        t_fit = np.zeros((len(touched), cap), bool)
+        pack_idx = [i for i, e in enumerate(touched) if e[0] == "pack"]
+        if pack_idx:
+            p_ids, p_valid = layout.pack_members(
+                [touched[i][2] for i in pack_idx], cap)
+            t_ids[pack_idx], t_valid[pack_idx] = p_ids, p_valid
+            t_fit[pack_idx] = p_valid      # packed rows are all live
+        for i, e in enumerate(touched):
+            if e[0] == "refit":            # keep slot layout, fit on live
+                gi = e[1]
+                t_ids[i], t_valid[i], t_fit[i] = \
+                    ids[gi], valid[gi], live_panel[gi]
+        xm = np.where(t_valid[..., None], x[np.maximum(t_ids, 0)], 0.0)
+        enc = _encode_groups(
+            jnp.asarray(xm, jnp.float32), jnp.asarray(t_valid),
+            jnp.asarray(t_fit), k=cfg.k, s=cfg.s, qeff=qeff,
+            quantile=cfg.scale_quantile, mult=cfg.scale_mult)
+        panels = {name: np.asarray(a) for name, a in enc.items()}
+        panels["ids"], panels["valid"], panels["fit"] = t_ids, t_valid, t_fit
+
+    new_seg = _assemble_segment(seg, entries, panels, rep)
+    rep.changed = True
+    rep.grains_after = len(entries)
+    return new_seg, rep
+
+
+def _assemble_segment(seg, entries, panels, rep: SegmentReport):
+    """Write the final grain arrays: untouched rows copied bit-identical
+    from the old panels, touched rows from the batched re-encode."""
+    g = seg.index.grains
+    g2, cap, k, d = len(entries), g.cap, g.k, np.asarray(g.mu).shape[1]
+    has_sketch = g.sketch is not None
+    s_dim = np.asarray(g.sketch).shape[1] if has_sketch else 0
+    old = {name: np.asarray(getattr(g, name))
+           for name in ("coords", "res", "ids", "valid", "basis", "mu",
+                        "scale", "res_scale")}
+    for name in ("sketch", "sketch_basis", "sketch_scale", "tags", "ts"):
+        arr = getattr(g, name)
+        old[name] = np.asarray(arr) if arr is not None else None
+    old["sizes"] = np.asarray(seg.index.routing.sizes)
+
+    out = dict(
+        coords=np.zeros((g2, k, cap), np.int16),
+        res=np.zeros((g2, cap), np.int32),
+        ids=np.full((g2, cap), -1, np.int32),
+        valid=np.zeros((g2, cap), bool),
+        basis=np.zeros((g2, d, k), np.float32),
+        mu=np.zeros((g2, d), np.float32),
+        scale=np.ones(g2, np.float32),
+        res_scale=np.ones(g2, np.float32),
+        sizes=np.zeros(g2, np.int32),
+    )
+    if has_sketch:
+        out["sketch"] = np.zeros((g2, s_dim, cap), np.int8)
+        out["sketch_basis"] = np.zeros((g2, d, s_dim), np.float32)
+        out["sketch_scale"] = np.ones(g2, np.float32)
+    if old["tags"] is not None:
+        out["tags"] = np.zeros((g2, cap), np.uint32)
+    if old["ts"] is not None:
+        out["ts"] = np.zeros((g2, cap), np.float32)
+    enc_fields = ["coords", "res", "basis", "mu", "scale", "res_scale"] + \
+        (["sketch", "sketch_basis", "sketch_scale"] if has_sketch else [])
+
+    # per-raw-row tag/ts tables for re-scattered (packed) groups
+    seg_tags = seg.tags if seg.tags is not None else None
+    seg_ts = seg.ts if seg.ts is not None else None
+
+    unchanged, ti = [], 0
+    for new_gi, e in enumerate(entries):
+        if e[0] == "copy":
+            gi = e[1]
+            for name in ("coords", "res", "ids", "valid", "basis", "mu",
+                         "scale", "res_scale", "sizes"):
+                out[name][new_gi] = old[name][gi]
+            for name in ("sketch", "sketch_basis", "sketch_scale",
+                         "tags", "ts"):
+                if old[name] is not None:
+                    out[name][new_gi] = old[name][gi]
+            unchanged.append((gi, new_gi))
+            continue
+        for name in enc_fields:
+            out[name][new_gi] = panels[name][ti]
+        out["ids"][new_gi] = panels["ids"][ti]
+        out["valid"][new_gi] = panels["valid"][ti]
+        out["sizes"][new_gi] = int(panels["fit"][ti].sum())
+        rows = panels["ids"][ti]
+        vmask = panels["valid"][ti]
+        if e[0] == "refit":                # slot layout kept: copy panels
+            gi = e[1]
+            if old["tags"] is not None:
+                out["tags"][new_gi] = old["tags"][gi]
+            if old["ts"] is not None:
+                out["ts"][new_gi] = old["ts"][gi]
+        else:                              # packed: re-scatter from raw rows
+            if old["tags"] is not None:
+                out["tags"][new_gi][vmask] = (
+                    seg_tags[rows[vmask]] if seg_tags is not None else 0)
+            if old["ts"] is not None:
+                out["ts"][new_gi][vmask] = (
+                    seg_ts[rows[vmask]] if seg_ts is not None else 0.0)
+        ti += 1
+    rep.unchanged = tuple(unchanged)
+
+    grains = GrainStore(
+        coords=jnp.asarray(out["coords"]), res=jnp.asarray(out["res"]),
+        sketch=jnp.asarray(out["sketch"]) if has_sketch else None,
+        ids=jnp.asarray(out["ids"]), valid=jnp.asarray(out["valid"]),
+        basis=jnp.asarray(out["basis"]), mu=jnp.asarray(out["mu"]),
+        scale=jnp.asarray(out["scale"]),
+        res_scale=jnp.asarray(out["res_scale"]),
+        sketch_basis=jnp.asarray(out["sketch_basis"]) if has_sketch else None,
+        sketch_scale=jnp.asarray(out["sketch_scale"]) if has_sketch else None,
+        tags=jnp.asarray(out["tags"]) if old["tags"] is not None else None,
+        ts=jnp.asarray(out["ts"]) if old["ts"] is not None else None)
+    index = HNTLIndex(
+        routing=routing.rebuild_plane(out["mu"], out["sizes"]),
+        grains=grains,
+        raw=seg.index.raw)                 # the raw tier is never rewritten
+    return dataclasses.replace(seg, index=index)

@@ -40,6 +40,67 @@ def grain_pca(x_centered: jax.Array, mask: jax.Array, k: int, s: int = 0):
     return basis, sketch, var_captured
 
 
+def captured_fraction(x: "jax.Array", mask: "jax.Array", basis: "jax.Array",
+                      sketch_basis: "jax.Array" = None) -> "jax.Array":
+    """Fraction of the masked rows' centered energy a frame captures — the
+    maintenance plane's *frame-staleness* signal (host numpy, build-time).
+
+    Unlike build-time ``var_captured`` this recenters on the masked rows'
+    OWN mean, not the frame's frozen ``mu``: after deletes the survivors'
+    mean drifts away from the centroid, and energy the frame spends
+    representing that offset is energy it no longer has for the survivors'
+    local structure.  The sketch basis counts as captured when present
+    (the scan subtracts its energy from the residual too).
+
+    x: [G, cap, d] member rows; mask: [G, cap] live validity.  Returns
+    (captured [G] in [0, 1], live_mean [G, d]); empty grains report 1.0
+    (nothing to misrepresent).
+    """
+    import numpy as np
+
+    xn = np.asarray(x, np.float32)
+    m = np.asarray(mask, bool)
+    cnt = m.sum(axis=1)                                       # [G]
+    w = m[..., None].astype(np.float32)
+    mean = (xn * w).sum(axis=1) / np.maximum(cnt, 1)[:, None]  # [G, d]
+    xc = (xn - mean[:, None, :]) * w
+    total = np.sum(xc * xc, axis=(1, 2))                       # [G]
+    z = np.einsum("gcd,gdk->gck", xc, np.asarray(basis, np.float32))
+    cap_e = np.sum(z * z, axis=(1, 2))
+    if sketch_basis is not None:
+        s = np.einsum("gcd,gds->gcs", xc,
+                      np.asarray(sketch_basis, np.float32))
+        cap_e = cap_e + np.sum(s * s, axis=(1, 2))
+    captured = np.where(total > 1e-12, cap_e / np.maximum(total, 1e-12), 1.0)
+    return np.clip(captured, 0.0, 1.0), mean
+
+
+def best_captured_fraction(x: "jax.Array", mask: "jax.Array", k: int,
+                           s: int = 0) -> "jax.Array":
+    """Upper bound on :func:`captured_fraction` over all rank-(k+s) frames:
+    top-(k+s) eigenvalue mass of the live rows' covariance.  Staleness is
+    judged *relative* to this bound, so intrinsically high-dimensional
+    grains (isotropic data, captured ~ k/d even when fresh) are never
+    flagged — only grains whose existing frame is beaten by a refit.
+
+    Returns [G] in [0, 1]; empty grains report 1.0.
+    """
+    import numpy as np
+
+    xn = np.asarray(x, np.float32)
+    m = np.asarray(mask, bool)
+    cnt = m.sum(axis=1)
+    w = m[..., None].astype(np.float32)
+    mean = (xn * w).sum(axis=1) / np.maximum(cnt, 1)[:, None]
+    xc = (xn - mean[:, None, :]) * w
+    cov = np.einsum("gcd,gce->gde", xc, xc)                    # [G, d, d]
+    ev = np.linalg.eigvalsh(cov)                               # ascending
+    total = ev.sum(axis=1)
+    top = ev[:, -(k + s):].sum(axis=1) if (k + s) > 0 else 0.0
+    best = np.where(total > 1e-12, top / np.maximum(total, 1e-12), 1.0)
+    return np.clip(best, 0.0, 1.0)
+
+
 def project(v_centered: jax.Array, basis: jax.Array) -> jax.Array:
     """Eq. 2: z = W^T v'."""
     return v_centered @ basis

@@ -33,8 +33,16 @@ def fit_scale(z: jax.Array, mask: jax.Array, qmax: int = INT16_MAX,
 
 
 def fit_res_scale(r: jax.Array, mask: jax.Array, rmax: int = UINT16_MAX) -> jax.Array:
-    """Per-grain residual scale from the max residual energy."""
-    m = jnp.max(r * mask.astype(r.dtype))
+    """Per-grain residual scale from the max residual energy.
+
+    r: [cap]; mask: [cap].  The max runs over *valid* slots only (masked
+    rows are NaN-excluded, like :func:`fit_scale`): zero-multiplying would
+    let a NaN/garbage residual on a padded row poison the max, and an
+    all-padding grain would silently fit a denormal-tiny scale instead of
+    the explicit 1e-12/rmax floor.
+    """
+    m = jnp.nanmax(jnp.where(mask, r, jnp.nan))
+    m = jnp.where(jnp.isfinite(m), m, 0.0)        # all-padding grain
     return jnp.maximum(m * 1.05, 1e-12) / rmax
 
 

@@ -47,6 +47,49 @@ def route(plane: RoutingPlane, q: jax.Array, nprobe: int,
     return idx.astype(jnp.int32), -neg_d
 
 
+def merge_target(centroids, live_counts, cap: int, src: int,
+                 excluded=(), max_merged: Optional[int] = None) -> int:
+    """Pick the grain an underfull grain ``src`` should merge into: the
+    *nearest* other centroid whose group has room for src's live rows
+    (combined count <= cap, and <= ``max_merged`` when given, so a merge
+    never manufactures the overfull grain the next epoch would re-split).
+
+    Host-side (numpy) — maintenance control plane.  ``excluded``: grain
+    indices that may not be targets (retired/merged-away this epoch).
+    Returns the target grain index, or -1 when no grain has room.
+    """
+    import numpy as np
+
+    c = np.asarray(centroids, np.float32)
+    cnt = np.asarray(live_counts, np.int64)
+    d2 = np.sum((c - c[src]) ** 2, axis=1)
+    d2[src] = np.inf
+    for gi in excluded:
+        d2[gi] = np.inf
+    merged = cnt + cnt[src]
+    limit = cap if max_merged is None else min(cap, max_merged)
+    d2[(merged > limit) | (cnt == 0)] = np.inf
+    best = int(np.argmin(d2))
+    return best if np.isfinite(d2[best]) else -1
+
+
+def rebuild_plane(centroids, sizes) -> RoutingPlane:
+    """Assemble a routing plane from maintenance-final per-grain tables.
+
+    The centroid table is the one structure whose *row count* tracks the
+    grain count through split (grow), merge/retire (shrink) and refit
+    (in-place recenter); maintenance funnels every rebuild through here so
+    the invariant ``routing rows == grain panels`` has a single owner.
+    Leaves are device arrays, like :func:`repro.core.index.build`'s plane.
+    """
+    import numpy as np
+
+    c = np.asarray(centroids, np.float32)
+    s = np.asarray(sizes, np.int32)
+    assert c.shape[0] == s.shape[0], (c.shape, s.shape)
+    return RoutingPlane(centroids=jnp.asarray(c), sizes=jnp.asarray(s))
+
+
 def route_per_segment(plane: RoutingPlane, q: jax.Array, nprobe: int,
                       seg_shape: tuple,
                       grain_mask: Optional[jax.Array] = None):

@@ -61,6 +61,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import index as index_mod
+from . import maintenance
 from . import planner
 from .types import (BIG, HNTLConfig, HNTLIndex, GrainStore, RoutingPlane,
                     SearchResult, ShardedStackedSegments, StackedSegments)
@@ -123,17 +124,36 @@ def _unlink_quiet(path: str) -> None:
         os.unlink(path)
 
 
+# Cold files are refcounted per Segment *object* that addresses them: a
+# maintenance epoch derives a new Segment sharing the old one's cold file
+# (only grain panels are rewritten), so the file must outlive whichever of
+# the two dies first.
+_COLD_REFS: "collections.Counter" = collections.Counter()
+
+
+def _release_cold(path: str) -> None:
+    _COLD_REFS[path] -= 1
+    if _COLD_REFS[path] <= 0:
+        del _COLD_REFS[path]
+        _unlink_quiet(path)
+
+
 def _reclaim_cold_on_gc(seg: "Segment", path: str) -> None:
-    """Delete a segment's cold memmap when its LAST reference dies.
+    """Delete a segment's cold memmap when the LAST Segment addressing it
+    dies.
 
     Branches, snapshots and the stack cache all hold the same Segment
     *object*, so tying file lifetime to object lifetime is exactly the CoW
     contract: a compacted-away segment's file survives for as long as any
     manifest can still search it, then is reclaimed — cold_dir stays
     bounded under periodic compaction instead of accumulating dead tiers.
-    (POSIX: a concurrently open memmap keeps reading after the unlink.)
+    Maintenance-derived segments share their parent's file; the refcount
+    keeps it alive until both the parent (old manifests) and the repaired
+    child are gone.  (POSIX: a concurrently open memmap keeps reading
+    after the unlink.)
     """
-    weakref.finalize(seg, _unlink_quiet, path)
+    _COLD_REFS[path] += 1
+    weakref.finalize(seg, _release_cold, path)
 
 
 def _plane_key(scan_impl: Optional[str]) -> str:
@@ -190,6 +210,9 @@ class Manifest:
     mut_seq: Optional[np.ndarray] = None  # [M] i64 live seq (-1 = deleted)
     writer: str = ""                 # identity of the capturing store
     epoch: int = 0                   # mutation epoch at capture time
+    maint_epoch: int = 0             # maintenance epoch at capture time
+    #                                  (the segment refs above pin the
+    #                                  pre-repair structures either way)
 
 
 def _live_rows(mut_gid: Optional[np.ndarray], mut_seq: Optional[np.ndarray],
@@ -430,6 +453,7 @@ class VectorStore:
         # (writer, epoch) so a delete invalidates them without re-stacking.
         self._live_seq: dict = {}
         self._epoch = 0
+        self._maint_epoch = 0                   # maintenance epochs applied
         self._mut_cache = (-1, None, None)      # (epoch, mut_gid, mut_seq)
         self._cold_tag = uuid.uuid4().hex[:8]   # per-writer cold-file suffix
         # Bounded LRU of fused/sharded search planes, keyed by (manifest
@@ -584,9 +608,91 @@ class VectorStore:
         self._mem_ids, self._mem_seq, self._mem_expire = [], [], []
         return seg
 
+    # ----------------------------------------------------- grain maintenance
+    def _seg_live_rows(self, seg: Segment, mg, ms,
+                       now: float) -> Optional[np.ndarray]:
+        """[n] bool per raw row of one segment — tombstone/shadow/TTL
+        verdict (None = all live), the input every health signal reads."""
+        live = _live_rows(mg, ms, seg.global_ids(), seg.global_seqs())
+        if seg.expire is not None:
+            alive_t = seg.expire > now
+            if not alive_t.all():
+                live = alive_t if live is None else live & alive_t
+        return live
+
+    def grain_health(self, *, now: Optional[float] = None) -> list:
+        """Per-grain health stats of every sealed segment (read-only).
+
+        Returns one dict per segment: ``live_cnt`` [G], ``captured`` [G]
+        (existing frame over the live rows), ``best`` [G] (refit bound),
+        ``drift2`` [G] (squared centroid walk-off) and ``var_live`` [G] —
+        the signals ``maintain()`` acts on, exposed for monitoring the
+        structural rot the mutation table accumulates between epochs.
+        """
+        now = self._clock() if now is None else now
+        mg, ms = self._mut_arrays()
+        out = []
+        for seg in self._segments:
+            stats = maintenance.grain_stats(
+                seg, self._seg_live_rows(seg, mg, ms, now))
+            out.append({k: stats[k] for k in
+                        ("live_cnt", "captured", "best", "drift2",
+                         "var_live")}
+                       | {"seg_id": seg.seg_id})
+        return out
+
+    def maintain(self, *, now: Optional[float] = None,
+                 policy: Optional[maintenance.MaintenancePolicy] = None
+                 ) -> maintenance.MaintenanceReport:
+        """Adaptive grain maintenance over all sealed segments.
+
+        Detects unhealthy grains (overfull / underfull / frame-stale — see
+        ``core.maintenance``) from the mutation table's live set and
+        repairs them: overfull grains split by 2-means, underfull grains
+        merge into their nearest neighbour with room (all-dead grains
+        retire, fully-dead segments drop), and every touched grain gets its
+        mean / PCA basis / quantizer scales re-fit on its live rows.
+
+        Strictly control-plane + copy-on-write: raw tiers and id tables
+        are shared with the old segments, untouched grains are copied
+        bit-identical, healthy segments keep their identity (their cached
+        planes stay valid), snapshots/branches keep their captured
+        segments, and ONE new manifest emerges per epoch — so the plane
+        cache re-stacks at most once per maintenance epoch.  Runs
+        automatically at ``compact()`` time; call directly for on-demand
+        repair under streaming drift.
+        """
+        now = self._clock() if now is None else now
+        policy = policy if policy is not None \
+            else maintenance.MaintenancePolicy()
+        mg, ms = self._mut_arrays()
+        qeff = index_mod.int32_safe_qmax(self.cfg.k, self.cfg.coord_bits)
+        reports, new_segs, changed = [], [], False
+        for seg in self._segments:
+            new_seg, rep = maintenance.maintain_segment(
+                seg, self._seg_live_rows(seg, mg, ms, now), self.cfg,
+                policy, qeff)
+            reports.append(rep)
+            if new_seg is None:            # every row dead: drop segment
+                changed = True
+                continue
+            if new_seg is not seg:
+                changed = True
+                if new_seg.cold_path is not None:
+                    _reclaim_cold_on_gc(new_seg, new_seg.cold_path)
+            new_segs.append(new_seg)
+        if changed:
+            self._segments = new_segs
+            self._maint_epoch += 1
+            self._purge_tombstones()
+        return maintenance.MaintenanceReport(segments=tuple(reports))
+
     # ------------------------------------------------------------ compaction
     def compact(self, *, fanin: int = 4, tier_factor: int = 4,
-                max_rounds: int = 16, now: Optional[float] = None) -> int:
+                max_rounds: int = 16, now: Optional[float] = None,
+                maintain: bool = True,
+                policy: Optional[maintenance.MaintenancePolicy]
+                = None) -> int:
         """Size-tiered LSM compaction of sealed segments.
 
         Segments are bucketed into size tiers (tier t holds segments of
@@ -610,6 +716,13 @@ class VectorStore:
         branches keep referencing the pre-merge segments (and their own
         captured liveness tables).
 
+        Unless ``maintain=False``, a grain maintenance pass (see
+        :meth:`maintain`) runs after the merges: merged segments are
+        healthy by construction (fresh partition over their live rows), so
+        this repairs exactly the segments compaction did NOT touch — the
+        ones whose grains have been rotting under deletes/upserts since
+        they sealed.
+
         Returns the number of merges performed.
         """
         if fanin < 2:
@@ -624,6 +737,8 @@ class VectorStore:
             merges += 1
         if merges:
             self._purge_tombstones()
+        if maintain:
+            self.maintain(now=now, policy=policy)
         return merges
 
     def _tier_of(self, n: int, tier_factor: int) -> int:
@@ -740,7 +855,8 @@ class VectorStore:
                         mem_seq=tuple(self._mem_seq),
                         mem_expire=tuple(self._mem_expire),
                         mut_gid=mg, mut_seq=ms,
-                        writer=self._cold_tag, epoch=self._epoch)
+                        writer=self._cold_tag, epoch=self._epoch,
+                        maint_epoch=self._maint_epoch)
 
     def branch(self) -> "VectorStore":
         """Zero-copy fork: new store sharing all sealed segments (CoW).
@@ -764,6 +880,9 @@ class VectorStore:
         child._next_seg = self._next_seg
         child._live_seq = dict(self._live_seq)        # isolated mutations
         child._epoch = self._epoch
+        child._maint_epoch = self._maint_epoch  # lineage continues; later
+        #                                         maintain() on either side
+        #                                         stays isolated (CoW segs)
         return child
 
     @property
@@ -793,6 +912,15 @@ class VectorStore:
     @property
     def n_segments(self) -> int:
         return len(self._segments)
+
+    @property
+    def maintenance_epochs(self) -> int:
+        """Maintenance epochs that changed this store's lineage (branches
+        inherit the count; snapshots capture it as ``Manifest.maint_epoch``).
+        The re-stack accounting contract is ``re-stacks <= manifest
+        changes``: each epoch advances this by exactly one, no matter how
+        many grains it repaired (benchmarks/drift.py asserts it)."""
+        return self._maint_epoch
 
     # ------------------------------------------------------------- read path
     def _cache_get(self, key):
@@ -849,7 +977,15 @@ class VectorStore:
         alongside the fused plane (same LRU, keyed additionally by mesh
         identity).  Row metadata is PERMUTED like the raw tier, so the
         liveness bitmap lands shard-aligned and Mode B re-rank stays
-        shard-local under mutation."""
+        shard-local under mutation.
+
+        Maintenance delta path: a refit-only maintenance epoch rewrites
+        grain panels but moves no rows (slot layouts kept), so the row
+        permutation — and with it the permuted raw tier and id table — is
+        unchanged.  When a cached plane for the same mesh proves that
+        (identical per-segment row tables + identical perm), its placed
+        ``raw``/``gid_of_row`` leaves are reused and only the grain panels
+        are re-staged onto the mesh."""
         from ..distributed import sharding as shd
         key = (tuple(id(s) for s in segments), mesh, grain_axis,
                _plane_key(scan_impl))
@@ -860,7 +996,9 @@ class VectorStore:
         plane, perm = shard_segments(segments, n_shards)
         ids_host = np.asarray(plane.index.grains.ids)
         rules = shd.search_plane_rules(mesh, grain_axis=grain_axis)
-        plane = shd.shard_search_plane(plane, rules)
+        reuse = self._reusable_row_leaves(segments, mesh, grain_axis,
+                                          _plane_key(scan_impl), perm)
+        plane = shd.shard_search_plane(plane, rules, reuse=reuse)
         offsets = np.zeros(len(segments) + 1, np.int64)
         np.cumsum([s.n for s in segments], out=offsets[1:])
         gids = np.concatenate([s.global_ids() for s in segments])
@@ -886,6 +1024,29 @@ class VectorStore:
             "live": (None, None),
         }
         return self._cache_put(key, segments, entry)
+
+    def _reusable_row_leaves(self, segments: tuple, mesh, grain_axis: str,
+                             plane_key: str, perm: np.ndarray):
+        """Placed ``raw``/``gid_of_row`` leaves of a cached sharded plane
+        that are provably identical to the ones about to be placed, or
+        None.  Valid iff some cached entry for the same (mesh, grain_axis,
+        backend) has the same per-segment row tables (object identity on
+        the immutable arrays — maintenance shares them via
+        ``dataclasses.replace``) and the same row permutation."""
+        for key, (old_segs, entry) in self._stack_cache.items():
+            if len(key) != 4 or key[1:] != (mesh, grain_axis, plane_key):
+                continue
+            if len(old_segs) != len(segments):
+                continue
+            same_rows = all(
+                o.n == s.n and o.index.raw is s.index.raw
+                and o.id_map is s.id_map and o.id_base == s.id_base
+                and o.seq is s.seq
+                for o, s in zip(old_segs, segments))
+            if same_rows and np.array_equal(entry["perm"], perm):
+                return {"raw": entry["plane"].index.raw,
+                        "gid_of_row": entry["plane"].gid_of_row}
+        return None
 
     def _live_plane(self, entry: dict, man: Manifest, now: float):
         """The entry's plane with the manifest-epoch liveness leaf attached.

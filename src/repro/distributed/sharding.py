@@ -158,15 +158,46 @@ def search_plane_specs(tree, rules: ShardingRules):
     return jax.tree_util.tree_map_with_path(leaf_spec, tree)
 
 
-def shard_search_plane(tree, rules: ShardingRules):
+def shard_search_plane(tree, rules: ShardingRules, *, reuse=None):
     """Place a search-plane pytree on the mesh, each leaf sharded per
     :func:`search_plane_specs` (host numpy leaves go straight to their
-    shards — no replicated staging copy)."""
+    shards — no replicated staging copy).
+
+    ``reuse``: optional ``{field: already-placed leaf}`` — the grain
+    maintenance delta path.  A refit-only maintenance epoch rewrites grain
+    panels but keeps row ownership (and hence the row permutation) intact,
+    so the store passes the previous plane's placed ``raw`` tier and
+    ``gid_of_row`` table here; those leaves are swapped in *after*
+    placement and never re-staged — only the changed grain rows move to
+    the mesh.  Callers are responsible for proving the reused leaves'
+    host content is unchanged (see ``store._reusable_row_leaves``).
+    """
+    reuse = {k: v for k, v in (reuse or {}).items() if v is not None}
+    if reuse:
+        # strip reused leaves before placement (None = empty pytree node),
+        # so zero bytes of theirs are transferred
+        stripped = dict.fromkeys(reuse)
+        tree = dataclasses.replace(
+            tree, gid_of_row=stripped.get("gid_of_row",
+                                          tree.gid_of_row),
+            index=dataclasses.replace(tree.index,
+                                      raw=stripped.get("raw",
+                                                       tree.index.raw))
+            if "raw" in stripped else tree.index)
     shardings = jax.tree_util.tree_map(
         lambda s: NamedSharding(rules.mesh, s),
         search_plane_specs(tree, rules),
         is_leaf=lambda x: isinstance(x, P))
-    return jax.device_put(tree, shardings)
+    placed = jax.device_put(tree, shardings)
+    if reuse:
+        if "raw" in reuse:
+            placed = dataclasses.replace(
+                placed, index=dataclasses.replace(placed.index,
+                                                  raw=reuse["raw"]))
+        if "gid_of_row" in reuse:
+            placed = dataclasses.replace(placed,
+                                         gid_of_row=reuse["gid_of_row"])
+    return placed
 
 
 def shard_plane_field(arr, rules: ShardingRules, field: str):

@@ -1,11 +1,14 @@
 """Shared oracle for the mutation-interleaving property tests.
 
 ``mutation_interleaving_check`` drives a VectorStore through an arbitrary
-interleaving of add/seal/delete/upsert/compact ops while maintaining a
-brute-force model (dict gid -> live record), then asserts that search over
-the real store — fused or mesh-sharded, warm or cold, with and without
-tag/ts filters — returns exactly the brute-force top-k over the surviving
-live set.
+interleaving of add/seal/delete/upsert/compact/maintain ops while
+maintaining a brute-force model (dict gid -> live record), then asserts
+that search over the real store — fused or mesh-sharded, warm or cold,
+with and without tag/ts filters — returns exactly the brute-force top-k
+over the surviving live set.  The ``maintain`` action proves grain
+maintenance (split/merge/retire/refit) preserves the live id set exactly:
+a bijection onto the model — no resurrections, no drops — at any point in
+the interleaving.
 
 Plain module (no hypothesis import) so both the in-process hypothesis
 wrapper (test_core_properties.py) and the forced-multi-device subprocess
@@ -23,7 +26,7 @@ from repro.core.store import VectorStore
 
 D = 16
 NOW = 500.0                       # query-time clock (store clock pinned at 0)
-OPS = ("add", "delete", "upsert", "seal", "compact")
+OPS = ("add", "delete", "upsert", "seal", "compact", "maintain")
 
 
 def _cfg():
@@ -62,6 +65,8 @@ def mutation_interleaving_check(ops, seed: int, cold: bool, mesh=None):
             store.seal()
         elif op == "compact":
             store.compact(fanin=2, now=NOW)
+        elif op == "maintain":
+            store.maintain(now=NOW)
         else:
             known = np.fromiter(sorted(model), np.int64, len(model))
             if not len(known):

@@ -284,10 +284,96 @@ def test_shard_count_invariance_under_mutation():
     """ % (D, N_SEG, SEG_ROWS))
 
 
+def test_maintenance_shard_count_invariance():
+    """After a maintenance epoch (splits/merges/refits from biased
+    deletes), the repaired plane is still shard-count invariant: 1/2/4/8
+    forced host devices return bit-identical ids (and matching dists) to
+    the single-device fused plane — warm and cold tiers, Mode A and B."""
+    run_sub("""
+        import numpy as np
+        from repro.core import HNTLConfig
+        from repro.core.store import VectorStore
+        from repro.launch.mesh import make_host_mesh
+
+        D, N_SEG, SEG = %d, %d, %d
+        for cold in (False, True):
+            rng = np.random.default_rng(11)
+            st = VectorStore(HNTLConfig(d=D, k=8, s=0, n_grains=4, nprobe=4,
+                                        pool=SEG, block=32),
+                             seal_threshold=SEG, cold_tier=cold,
+                             clock=lambda: 0.0)
+            x = rng.standard_normal((N_SEG * SEG, D)).astype(np.float32)
+            for i in range(N_SEG):
+                st.add(x[i*SEG:(i+1)*SEG], tags=[1 << (i %% 3)]*SEG,
+                       ts=[float(i)]*SEG)
+            # biased cut (strands live means) + a fully-hollowed segment
+            dead = np.concatenate([np.flatnonzero(x[:, 0] > 0.3),
+                                   np.arange(0, SEG)])
+            st.delete(dead)
+            rep = st.maintain()
+            assert rep.changed and (rep.total('merges') + rep.total('refits')
+                                    + rep.total('retires')) > 0, rep.summary()
+            q = (x[np.flatnonzero(x[:, 0] <= 0.3)[:6]]
+                 + 0.01*rng.standard_normal((6, D))).astype(np.float32)
+            ex = dict(nprobe=sum(s.index.grains.n_grains
+                                 for s in st._segments),
+                      pool=st.n_vectors * 2)
+            for filt in ({}, dict(tag_mask=2, ts_range=(0.0, 7.0))):
+                for mode in ("A", "B"):
+                    base = st.search(q, topk=10, mode=mode, **filt, **ex)
+                    bi = np.asarray(base.ids)
+                    assert not np.isin(bi, dead).any(), (cold, filt, mode)
+                    for n in (1, 2, 4, 8):
+                        res = st.search(q, topk=10, mode=mode,
+                                        mesh=make_host_mesh(1, n),
+                                        **filt, **ex)
+                        assert np.array_equal(np.asarray(res.ids), bi), \\
+                            (cold, filt, mode, n)
+                        np.testing.assert_allclose(
+                            np.asarray(res.dists), np.asarray(base.dists),
+                            rtol=1e-5, atol=1e-5)
+            print('ok', 'cold' if cold else 'warm')
+        print('maintenance shard invariance ok')
+    """ % (D, N_SEG, SEG_ROWS))
+
+
+def test_refit_only_epoch_reuses_placed_raw(monkeypatch):
+    """A refit-only maintenance epoch keeps the shard row permutation, so
+    the next sharded search re-places only the grain panels: the placed
+    raw tier and id table are the PREVIOUS plane's leaves (object
+    identity), not re-staged copies."""
+    from repro.core.maintenance import MaintenancePolicy
+
+    calls = _counting_stack(monkeypatch)
+    st, x, q = _build(False, stack_cache_entries=4)
+    mesh = make_host_mesh(1, 1)
+    st.search(q[:1], topk=3, mode="B", mesh=mesh)
+    assert len(calls) == 1
+    entry0 = next(v[1] for k, v in st._stack_cache.items() if len(k) == 4)
+    raw0, gid0 = entry0["plane"].index.raw, entry0["plane"].gid_of_row
+    # biased cut -> refits only (merges/splits disabled by policy)
+    dead = np.flatnonzero(x[:, 0] > 0.3)
+    st.delete(dead)
+    rep = st.maintain(policy=MaintenancePolicy(underfull_frac=0.0,
+                                               overfull_ratio=1e9))
+    assert rep.changed and rep.total("refits") > 0
+    assert rep.total("merges") == rep.total("splits") \
+        == rep.total("retires") == 0
+    assert all(s.slots_preserved for s in rep.segments)
+    res = st.search(q[:1], topk=3, mode="B", mesh=mesh)
+    assert len(calls) == 2                 # one re-stack for the epoch
+    entry1 = next(v[1] for k, v in st._stack_cache.items()
+                  if len(k) == 4 and v[1] is not entry0)
+    assert entry1["plane"].index.raw is raw0, "raw tier was re-staged"
+    assert entry1["plane"].gid_of_row is gid0, "id table was re-staged"
+    assert not np.isin(np.asarray(res.ids), dead).any()
+
+
 def test_sharded_mutation_interleaving_matches_bruteforce():
     """The mutation-interleaving property on a forced-host 4-device mesh:
-    random add/seal/delete/upsert/compact sequences, then grain-sharded
-    search must equal brute-force L2 over the live set (the sharded twin of
+    random add/seal/delete/upsert/compact/maintain sequences, then
+    grain-sharded search must equal brute-force L2 over the live set (the
+    sharded twin of
     test_core_properties.test_mutation_interleaving_matches_bruteforce,
     same shared oracle)."""
     run_sub("""
