@@ -24,6 +24,8 @@ BENCHES = [
     ("drift", "Maintenance plane: recall under streaming drift, frozen "
               "partition vs split/merge/refit"),
     ("shard_scale", "Distributed plane: QPS + per-shard scan work vs shards"),
+    ("serve_load", "Tenancy plane: many-tenant coalesced load — one "
+                   "dispatch/window, zero re-stacks, zero leaks"),
     ("hntl_kv_decode", "HNTL-KV retrieval decode vs exact attention"),
 ]
 

@@ -83,13 +83,18 @@ def _project_quantized(index: HNTLIndex, q: jax.Array, gids: jax.Array,
 def scan_probed(index: HNTLIndex, q: jax.Array, gids: jax.Array,
                 envelope_frac: float, qeff: int,
                 scan_fn=None,
-                extra_mask: Optional[jax.Array] = None):
+                extra_mask: Optional[jax.Array] = None,
+                tenant_mask: Optional[jax.Array] = None,
+                tenant_ix: Optional[jax.Array] = None):
     """Gather-plane stages (2)+(3): project, envelope-filter, Block-SoA scan
     over per-query *copies* of the probed panels.
 
     Returns (dists [Q, P*cap] f32, ids [Q, P*cap] i32).
     scan_fn: callable with `scan.blocksoa_scan`'s signature (Pallas or ref).
     extra_mask: [G, cap] bool mixed-recall predicate evaluated in-situ.
+    tenant_mask [T, G, cap] + tenant_ix [Q]: per-query tenant visibility —
+    gather planes fold it into the per-query extra mask (the gather is
+    probed-panels-only, [Q, P, cap], never the full [T, G, cap] stack).
     """
     g = index.grains
     zq_q, rq, keep, sq = _project_quantized(index, q, gids, envelope_frac,
@@ -104,6 +109,10 @@ def scan_probed(index: HNTLIndex, q: jax.Array, gids: jax.Array,
                   sketch_scale=g.sketch_scale[gids])
     if extra_mask is not None:
         kw["extra_mask"] = extra_mask[gids]
+    if tenant_mask is not None:
+        tq = tenant_mask[tenant_ix[:, None], gids]        # [Q, P, cap]
+        kw["extra_mask"] = tq if "extra_mask" not in kw \
+            else jnp.logical_and(kw["extra_mask"], tq)
 
     fn = scan_fn if scan_fn is not None else scan.blocksoa_scan
     dists = jax.vmap(fn)(zq_q, rq, panels["coords"], panels["res"],
@@ -116,12 +125,17 @@ def scan_probed(index: HNTLIndex, q: jax.Array, gids: jax.Array,
 
 def select_probed(index: HNTLIndex, q: jax.Array, gids: jax.Array,
                   envelope_frac: float, qeff: int, *, width: int, runner,
-                  extra_mask: Optional[jax.Array] = None):
+                  extra_mask: Optional[jax.Array] = None,
+                  tenant_mask: Optional[jax.Array] = None,
+                  tenant_ix: Optional[jax.Array] = None):
     """Select-plane stages (2)+(3)+(first-stage top-k): project, then hand
     the STACKED panel tier (no per-query gather) to a streaming scan→select
     runner that emits only the running top-``width`` pool.
 
     Returns (dists [Q, width] f32 ascending, rows [Q, width] i32).
+    tenant_mask/tenant_ix ride through to the runner untouched — select
+    runners stream the per-tenant visibility table (second scalar-prefetch
+    stream in the fused kernel) instead of gathering per-query masks.
     """
     g = index.grains
     zq_q, rq, keep, sq = _project_quantized(index, q, gids, envelope_frac,
@@ -131,6 +145,8 @@ def select_probed(index: HNTLIndex, q: jax.Array, gids: jax.Array,
     kw = {}
     if g.sketch_basis is not None:
         kw = dict(sq=sq, sketch=g.sketch, sketch_scale=g.sketch_scale)
+    if tenant_mask is not None:
+        kw.update(tenant_mask=tenant_mask, tenant_ix=tenant_ix)
     width = min(width, gids.shape[1] * g.cap)
     return runner(gids, zq_q, rq, keep, g.coords, g.res, mask, g.ids,
                   g.scale, g.res_scale, width=width, **kw)
@@ -139,22 +155,29 @@ def select_probed(index: HNTLIndex, q: jax.Array, gids: jax.Array,
 def candidate_stage(index: HNTLIndex, q: jax.Array, gids: jax.Array, *,
                     envelope_frac: float, qeff: int, width: int,
                     scan_impl: Optional[str] = None,
-                    extra_mask: Optional[jax.Array] = None):
+                    extra_mask: Optional[jax.Array] = None,
+                    tenant_mask: Optional[jax.Array] = None,
+                    tenant_ix: Optional[jax.Array] = None):
     """Dispatch the candidate-generation stage to a ScanPlane backend.
 
     Gather backends return the full [Q, P*cap] slot matrix; select backends
     return the two-stage-selected [Q, min(width, P*cap)] pool.  Either shape
     feeds :func:`_candidate_epilogue` unchanged (it tops-k whatever it
     gets), so the epilogue arithmetic — and with it the fused/sharded parity
-    contract — is backend-independent.
+    contract — is backend-independent.  tenant_mask [T, G, cap] +
+    tenant_ix [Q] (multi-tenant serving) are boolean per-query visibility:
+    every backend applies them as a pure AND with its existing masks, so
+    backend parity is tenant-independent too.
     """
     plane = scanplane.get_scan_plane(scan_impl)
     if plane.kind == scanplane.SELECT:
         return select_probed(index, q, gids, envelope_frac, qeff,
                              width=width, runner=plane.runner,
-                             extra_mask=extra_mask)
+                             extra_mask=extra_mask, tenant_mask=tenant_mask,
+                             tenant_ix=tenant_ix)
     return scan_probed(index, q, gids, envelope_frac, qeff,
-                       scan_fn=plane.runner, extra_mask=extra_mask)
+                       scan_fn=plane.runner, extra_mask=extra_mask,
+                       tenant_mask=tenant_mask, tenant_ix=tenant_ix)
 
 
 @functools.partial(
@@ -226,6 +249,21 @@ def _mixed_recall_mask(grains, tag_mask, ts_range, live=None):
     return keep, jnp.any(keep, axis=1)
 
 
+def _tenant_grain_mask(grains, extra, grain_ok, tenant_live, tenant_ix):
+    """Per-query routing pushdown for tenant visibility.
+
+    A grain is probe-worthy for query q iff its tenant can see at least one
+    slot that also passes the shared predicate — [T, G, cap] any-reduced to
+    [T, G] once, then gathered per query.  Combined with the shared [G]
+    pushdown; returns a [Q, G] mask (or the unchanged shared one)."""
+    if tenant_live is None:
+        return grain_ok
+    base = extra if extra is not None else grains.valid
+    ok_q = jnp.any(jnp.logical_and(tenant_live, base[None]),
+                   axis=2)[tenant_ix]                     # [Q, G]
+    return ok_q if grain_ok is None else jnp.logical_and(grain_ok, ok_q)
+
+
 def _translate_rows(stacked: StackedSegments, rows: jax.Array,
                     dists: jax.Array) -> jax.Array:
     """Flat raw rows -> global vector ids (-1 for padding / pruned slots)."""
@@ -272,7 +310,9 @@ def search_stacked(stacked: StackedSegments, q: jax.Array, *, nprobe: int,
                    route_mode: str = "global",
                    seg_shape: Optional[tuple] = None, translate: bool = True,
                    tag_mask: Optional[jax.Array] = None,
-                   ts_range: Optional[tuple] = None) -> SearchResult:
+                   ts_range: Optional[tuple] = None,
+                   tenant_live: Optional[jax.Array] = None,
+                   tenant_ix: Optional[jax.Array] = None) -> SearchResult:
     """Fused HNTL search across *all* sealed segments in one dispatch.
 
     Replaces the per-segment Python loop: one global routing pass over the
@@ -292,6 +332,10 @@ def search_stacked(stacked: StackedSegments, q: jax.Array, *, nprobe: int,
       (and pushed down into routing), so filtered search is still one call.
     ``stacked.live`` (tombstone/upsert/TTL liveness) joins the same in-situ
     predicate, so mutated stores stay a single dispatch too.
+    tenant_live [T, G, cap] + tenant_ix [Q] (multi-tenant coalesced
+    serving): per-QUERY visibility over one shared plane — each query scans
+    only its tenant's rows, with per-query routing pushdown, in the same
+    single dispatch.
     """
     index = stacked.index
     extra, grain_ok = _mixed_recall_mask(index.grains, tag_mask, ts_range,
@@ -300,14 +344,18 @@ def search_stacked(stacked: StackedSegments, q: jax.Array, *, nprobe: int,
         # no filter pushdown here: the legacy loop routes unmasked and only
         # filters in-scan, and this mode's contract is loop-identical probes
         assert seg_shape is not None, "per_segment routing needs seg_shape"
+        assert tenant_live is None, \
+            "tenant visibility needs global routing (per-query pushdown)"
         gids, _ = routing.route_per_segment(index.routing, q, nprobe,
                                             seg_shape)
     else:
-        gids, _ = routing.route(index.routing, q, nprobe,
-                                grain_mask=grain_ok)
+        gmask = _tenant_grain_mask(index.grains, extra, grain_ok,
+                                   tenant_live, tenant_ix)
+        gids, _ = routing.route(index.routing, q, nprobe, grain_mask=gmask)
     dists, rows = candidate_stage(
         index, q, gids, envelope_frac=envelope_frac, qeff=qeff,
-        width=max(pool, topk), scan_impl=scan_impl, extra_mask=extra)
+        width=max(pool, topk), scan_impl=scan_impl, extra_mask=extra,
+        tenant_mask=tenant_live, tenant_ix=tenant_ix)
 
     # Mode B: merged candidate pool -> exact f32 re-rank over the fused
     # warm tier (single gather into the concatenated raw array).
@@ -343,7 +391,10 @@ def search_stacked_sharded(plane: ShardedStackedSegments, q: jax.Array, *,
                            scan_impl: Optional[str] = None,
                            translate: bool = True,
                            tag_mask: Optional[jax.Array] = None,
-                           ts_range: Optional[tuple] = None) -> SearchResult:
+                           ts_range: Optional[tuple] = None,
+                           tenant_live: Optional[jax.Array] = None,
+                           tenant_ix: Optional[jax.Array] = None
+                           ) -> SearchResult:
     """Grain-sharded fused search: shard-local route/scan/pool/re-rank plus
     ONE top-k merge collective.
 
@@ -380,6 +431,12 @@ def search_stacked_sharded(plane: ShardedStackedSegments, q: jax.Array, *,
     the grain axis like every panel) is applied in-situ inside each shard's
     scan, so a shard's Mode B re-rank can never resurrect a dead row of its
     own raw slice.
+    ``tenant_live`` [T, SG, cap] + ``tenant_ix`` [Q] (multi-tenant
+    coalesced serving): per-query visibility, sharded along the *grain*
+    axis (dim 1 — the tenant axis replicates, see
+    ``sharding.shard_plane_field(dim=1)``) so each shard holds exactly its
+    grain slice of every tenant's bitmap; ``tenant_ix`` rides with the
+    queries (replicated, or batch-sharded alongside them).
     """
     from ..distributed.sharding import SHARD_MAP_CHECK_KW, shard_map
 
@@ -398,16 +455,16 @@ def search_stacked_sharded(plane: ShardedStackedSegments, q: jax.Array, *,
     assert mode == "A" or plane.index.raw is not None, \
         "in-jit Mode B needs the warm tier; cold stores re-rank on host"
 
-    def body(index, gid_local, live, qv, tm, tr):
+    def body(index, gid_local, live, qv, tm, tr, tliv, tix):
         extra, grain_ok = _mixed_recall_mask(index.grains, tm, tr, live=live)
-        gids, _ = routing.route(index.routing, qv, probe,
-                                grain_mask=grain_ok)
+        gmask = _tenant_grain_mask(index.grains, extra, grain_ok, tliv, tix)
+        gids, _ = routing.route(index.routing, qv, probe, grain_mask=gmask)
         # same ScanPlane backend per shard: the fused select kernel streams
         # this shard's probed panels and emits its [Q, pool_eff] pool only
         dists, rows = candidate_stage(
             index, qv, gids, envelope_frac=envelope_frac, qeff=qeff,
             width=max(pool_eff, k_local), scan_impl=scan_impl,
-            extra_mask=extra)
+            extra_mask=extra, tenant_mask=tliv, tenant_ix=tix)
 
         def local_ids(rows_k, d_k):
             ok = jnp.logical_and(rows_k >= 0, d_k < BIG / 2)
@@ -433,9 +490,11 @@ def search_stacked_sharded(plane: ShardedStackedSegments, q: jax.Array, *,
     q_spec = P(batch_axis) if batch_axis is not None else P(None)
     in_specs = (_spec_tree(plane.index, P(grain_axis)), P(grain_axis),
                 _spec_tree(plane.live, P(grain_axis)), q_spec,
-                _spec_tree(tag_mask, P()), _spec_tree(ts_range, P()))
+                _spec_tree(tag_mask, P()), _spec_tree(ts_range, P()),
+                _spec_tree(tenant_live, P(None, grain_axis)),
+                _spec_tree(tenant_ix, q_spec))
     fn = shard_map(body, mesh=mesh, in_specs=in_specs,
                    out_specs=(q_spec, q_spec), **{SHARD_MAP_CHECK_KW: False})
     ids, d = fn(plane.index, plane.gid_of_row, plane.live, q, tag_mask,
-                ts_range)
+                ts_range, tenant_live, tenant_ix)
     return SearchResult(ids=ids, dists=d)

@@ -31,8 +31,11 @@ def _centroid_d2(plane: RoutingPlane, q: jax.Array,
     d2 = q2 - 2.0 * (q @ plane.centroids.T) + c2[None, :]         # [Q, G]
     ok = plane.sizes > 0
     if grain_mask is not None:
+        # [G] shared pushdown, or [Q, G] per-query (tenant visibility)
         ok = jnp.logical_and(ok, grain_mask)
-    return jnp.where(ok[None, :], d2, BIG)
+    if ok.ndim == 1:
+        ok = ok[None, :]
+    return jnp.where(ok, d2, BIG)
 
 
 def route(plane: RoutingPlane, q: jax.Array, nprobe: int,
@@ -40,7 +43,9 @@ def route(plane: RoutingPlane, q: jax.Array, nprobe: int,
     """Select the top-P closest grains per query.
 
     q: [Q, d].  grain_mask: optional [G] bool — additional grain validity
-    (filter pushdown).  Returns (grain_ids [Q, P] i32, grain_d2 [Q, P] f32).
+    (filter pushdown) — or [Q, G] bool for *per-query* pushdown (each
+    query routes only over the grains its tenant can see).
+    Returns (grain_ids [Q, P] i32, grain_d2 [Q, P] f32).
     """
     d2 = _centroid_d2(plane, q, grain_mask)
     neg_d, idx = jax.lax.top_k(-d2, nprobe)

@@ -74,7 +74,9 @@ def blocksoa_select_ref(gids: jax.Array, zq: jax.Array, rq: jax.Array,
                         sq: jax.Array | None = None,
                         sketch: jax.Array | None = None,
                         sketch_scale: jax.Array | None = None, *,
-                        width: int):
+                        width: int,
+                        tenant_mask: jax.Array | None = None,
+                        tenant_ix: jax.Array | None = None):
     """Pure-jnp oracle for the fused scan→select kernel
     (`repro.kernels.fused_select.fused_scan_select`) — the CPU reference of
     the "fused" ScanPlane backend.
@@ -88,6 +90,10 @@ def blocksoa_select_ref(gids: jax.Array, zq: jax.Array, rq: jax.Array,
     Shapes: gids [Q, P] i32, zq [Q, P, k] i32, rq/keep [Q, P],
     coords [G, k, cap] i16, res/mask/rows [G, cap], scale/res_scale [G];
     optional sq [Q, P, s] i32, sketch [G, s, cap] i8, sketch_scale [G].
+
+    tenant_mask [T, G, cap] bool + tenant_ix [Q] i32: optional *per-query*
+    visibility (multi-tenant coalesced serving) — query q only sees slots
+    where tenant_mask[tenant_ix[q], g] holds, ANDed with the shared mask.
     """
     q_n, p_n, _ = zq.shape
     cap = coords.shape[2]
@@ -102,7 +108,10 @@ def blocksoa_select_ref(gids: jax.Array, zq: jax.Array, rq: jax.Array,
             sq, sketch[gids].astype(jnp.int32))
         ss = sketch_scale[gids]
         d = d + s_int.astype(jnp.float32) * (ss * ss)[..., None]
-    d = jnp.where(jnp.logical_and(mask[gids], keep[..., None]), d, NEG_BIG)
+    m = mask[gids]                                       # [Q, P, cap]
+    if tenant_mask is not None:
+        m = jnp.logical_and(m, tenant_mask[tenant_ix[:, None], gids])
+    d = jnp.where(jnp.logical_and(m, keep[..., None]), d, NEG_BIG)
     rows_g = rows[gids]                                  # [Q, P, cap]
 
     # stage 1: per-grain top-w (the kernel's per-tile select)

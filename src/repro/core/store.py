@@ -858,13 +858,20 @@ class VectorStore:
                         writer=self._cold_tag, epoch=self._epoch,
                         maint_epoch=self._maint_epoch)
 
-    def branch(self) -> "VectorStore":
+    def branch(self, *,
+               seal_threshold: Optional[int] = None) -> "VectorStore":
         """Zero-copy fork: new store sharing all sealed segments (CoW).
 
         The liveness table is *copied*: the child starts from the parent's
         mutation state, but neither side's later deletes/upserts leak into
-        the other (each writer owns its own (writer, epoch) lineage)."""
-        child = VectorStore(self.cfg, seal_threshold=self.seal_threshold,
+        the other (each writer owns its own (writer, epoch) lineage).
+
+        ``seal_threshold`` overrides the child's memtable budget (the
+        tenant registry caps per-tenant memtables this way: overflowing the
+        budget force-seals instead of growing without bound)."""
+        child = VectorStore(self.cfg,
+                            seal_threshold=self.seal_threshold
+                            if seal_threshold is None else seal_threshold,
                             cold_dir=self.cold_dir, cold_tier=self.cold_tier,
                             stack_cache_entries=self.stack_cache_entries,
                             clock=self._clock)
@@ -1198,9 +1205,16 @@ class VectorStore:
 
     def _search_segments_fused(self, q, man, *, topk, mode, tag_mask,
                                ts_range, scan_impl, nprobe, pool,
-                               route_mode, now):
+                               route_mode, now, tenant_live=None,
+                               tenant_ix=None):
         """One jitted search over the stacked plane.  Returns numpy
-        (global_ids [Q, k], dists [Q, k])."""
+        (global_ids [Q, k], dists [Q, k]).
+
+        tenant_live [T, G, cap] + tenant_ix [Q] (host bools/ints): per-query
+        tenant visibility for the coalesced serving plane — the manifest is
+        then the registry's *union* of segments and per-tenant
+        liveness/membership arrives through these masks instead of the
+        manifest's own mutation table."""
         segments = man.segments
         entry = self._stacked_for(segments, scan_impl)
         stacked = self._live_plane(entry, man, now)
@@ -1214,6 +1228,9 @@ class VectorStore:
         kw = dict(nprobe=probe, envelope_frac=self.cfg.envelope_frac,
                   qeff=qeff, scan_impl=scan_impl, route_mode=route_mode,
                   seg_shape=seg_shape, tag_mask=tm, ts_range=tr)
+        if tenant_live is not None:
+            kw["tenant_live"] = jnp.asarray(tenant_live)
+            kw["tenant_ix"] = jnp.asarray(tenant_ix, jnp.int32)
         qj = jnp.asarray(q)
 
         if mode == "B" and stacked.index.raw is None:
@@ -1285,10 +1302,16 @@ class VectorStore:
 
     def _search_segments_sharded(self, q, man, *, topk, mode, tag_mask,
                                  ts_range, scan_impl, nprobe, pool, mesh,
-                                 grain_axis, shard_queries, now):
+                                 grain_axis, shard_queries, now,
+                                 tenant_live=None, tenant_ix=None):
         """Distributed fused search: shard-local route/scan/pool/re-rank and
         one all-gather merge collective.  Returns numpy (global_ids, dists).
+
+        tenant_live/tenant_ix: as in :meth:`_search_segments_fused`; the
+        [T, G, cap] stack is placed grain-sharded on dim 1 (tenant axis
+        replicated) so each shard sees its slice of every tenant's bitmap.
         """
+        from ..distributed import sharding as shd
         segments = man.segments
         entry = self._sharded_for(segments, mesh, grain_axis, scan_impl)
         plane = self._live_plane(entry, man, now)
@@ -1307,6 +1330,11 @@ class VectorStore:
                   nprobe=probe, envelope_frac=self.cfg.envelope_frac,
                   qeff=qeff, scan_impl=scan_impl, tag_mask=tm,
                   ts_range=tr)
+        if tenant_live is not None:
+            kw["tenant_live"] = shd.shard_plane_field(
+                np.asarray(tenant_live), entry["rules"], "tenant_live",
+                dim=1)
+            kw["tenant_ix"] = jnp.asarray(tenant_ix, jnp.int32)
         qj = jnp.asarray(q)
 
         if mode == "B" and plane.index.raw is None:

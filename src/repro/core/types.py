@@ -231,6 +231,9 @@ SEARCH_PLANE_AXES = {
     "tags": "grains", "ts": "grains", "centroids": "grains", "sizes": "grains",
     # mutation-epoch liveness mask — one entry per (grain, slot)
     "live": "grains",
+    # multi-tenant visibility stack [T, G, cap] — grain axis is dim 1
+    # (placed via shard_plane_field(dim=1); the tenant axis replicates)
+    "tenant_live": "grains",
     # raw tier + id translation — one entry per (permuted) raw row
     "raw": "rows", "gid_of_row": "rows",
 }

@@ -200,16 +200,22 @@ def shard_search_plane(tree, rules: ShardingRules, *, reuse=None):
     return placed
 
 
-def shard_plane_field(arr, rules: ShardingRules, field: str):
+def shard_plane_field(arr, rules: ShardingRules, field: str, *,
+                      dim: int = 0):
     """Place ONE search-plane leaf on the mesh per its declared logical axis.
 
     The mutation path uses this to swap the per-epoch ``live`` bitmap into
     an already-placed plane (`dataclasses.replace`) without re-staging any
     other leaf: a delete/upsert moves G*cap bools, not the index.
+
+    ``dim``: which dimension carries the logical axis (default 0, like the
+    plane leaves).  The multi-tenant serving plane passes dim=1 for its
+    [T, G, cap] per-tenant visibility stack — the grain axis must line up
+    with the sharded panels while the tenant axis stays replicated.
     """
     from ..core.types import SEARCH_PLANE_AXES  # deferred: no import cycle
     logical = SEARCH_PLANE_AXES.get(field)
-    axes = (logical,) + (None,) * (arr.ndim - 1) if arr.ndim else ()
+    axes = tuple(logical if i == dim else None for i in range(arr.ndim))
     spec = rules.spec_for_shape(arr.shape, axes)
     return jax.device_put(arr, NamedSharding(rules.mesh, spec))
 

@@ -23,6 +23,15 @@ scan/select boundary):
 Grid: (Q, P, cap-tiles); the leading query axis is embarrassingly parallel
 (each query owns its scratch carry — a megacore split on q is safe), the
 trailing two axes are sequential reductions into the carry.
+
+Multi-tenant serving rides the same machinery with a SECOND scalar-prefetch
+stream: the mask argument generalizes to a flattened [T*G, cap] per-tenant
+visibility table and ``mgids[q, p] = tenant_ix[q] * G + gids[q, p]`` drives
+its block index map, so every (query, probe) cell streams exactly its own
+tenant's [1, BLK_C] mask tile.  No [Q, P, cap] per-query mask is ever
+materialized — tenant state in HBM is O(T·G·cap), shared across queries —
+and the no-tenant path simply passes ``mgids = gids`` with the usual
+[G, cap] mask (same kernel, no extra cost).
 """
 from __future__ import annotations
 
@@ -81,7 +90,7 @@ def _make_select_kernel(has_sketch: bool):
     else (carry lifecycle, in-situ predicate, emit) is single-sourced here.
     """
 
-    def kernel(gids_ref, zq_ref, rq_ref, keep_ref, *rest):
+    def kernel(gids_ref, mgids_ref, zq_ref, rq_ref, keep_ref, *rest):
         if has_sketch:
             (sq_ref, coords_ref, res_ref, mask_ref, rows_ref, scale_ref,
              res_scale_ref, sketch_ref, sk_scale_ref,
@@ -136,7 +145,8 @@ def _round_up(n: int, m: int) -> int:
 @functools.partial(jax.jit, static_argnames=("width", "interpret"))
 def fused_scan_select(gids, zq, rq, keep, coords, res, mask, rows, scale,
                       res_scale, sq=None, sketch=None, sketch_scale=None, *,
-                      width: int, interpret=None):
+                      width: int, interpret=None,
+                      tenant_mask=None, tenant_ix=None):
     """Streaming scan→select over the probed grains of a stacked index.
 
     Args (Q queries, P probed grains/query, G total grains, cap slots/grain):
@@ -150,6 +160,10 @@ def fused_scan_select(gids, zq, rq, keep, coords, res, mask, rows, scale,
       rows   [G, cap] i32 (payload row ids), scale/res_scale [G] f32.
       Optional sketch: sq [Q, P, s] i32, sketch [G, s, cap] i8,
       sketch_scale [G] f32 — folded into the same pass.
+      Optional tenancy: tenant_mask [T, G, cap] bool + tenant_ix [Q] i32 —
+      per-query visibility (coalesced multi-tenant serving).  Folded into
+      the streamed mask via the second scalar-prefetch stream (see module
+      docstring); the kernel body is tenant-oblivious.
 
     Returns (dists [Q, width] f32 ascending, rows [Q, width] i32); slots
     beyond the live candidates carry (BIG, -1).  ``interpret=None`` resolves
@@ -159,6 +173,15 @@ def fused_scan_select(gids, zq, rq, keep, coords, res, mask, rows, scale,
         interpret = jax.default_backend() != "tpu"
     q_n, p_n, k = zq.shape
     g_n, _, cap = coords.shape
+    gids = gids.astype(jnp.int32)
+    if tenant_mask is not None:
+        # flatten tenants into the mask's leading axis; the second prefetch
+        # stream addresses tenant t's grain g at row t*G + g
+        mask = jnp.logical_and(tenant_mask, mask[None]) \
+            .reshape(tenant_mask.shape[0] * g_n, cap)
+        mgids = tenant_ix.astype(jnp.int32)[:, None] * g_n + gids
+    else:
+        mgids = gids
     c_pad = -cap % BLK_C
     if c_pad:
         coords = jnp.pad(coords, ((0, 0), (0, 0), (0, c_pad)))
@@ -172,11 +195,13 @@ def fused_scan_select(gids, zq, rq, keep, coords, res, mask, rows, scale,
 
     grid = (q_n, p_n, capp // BLK_C)
     # Block index maps: scalar-prefetched gids turn (q, p) into the probed
-    # grain's HBM offset — affine streaming, no gather anywhere.
+    # grain's HBM offset — affine streaming, no gather anywhere.  The mask
+    # alone is addressed through the second prefetch stream (mg), which is
+    # the per-(query, probe) row of the possibly-tenant-flattened table.
     in_specs = [
-        pl.BlockSpec((None, None, 1, k), lambda q, p, j, g: (q, p, 0, 0)),
-        pl.BlockSpec((None, None, 1, 1), lambda q, p, j, g: (q, p, 0, 0)),
-        pl.BlockSpec((None, None, 1, 1), lambda q, p, j, g: (q, p, 0, 0)),
+        pl.BlockSpec((None, None, 1, k), lambda q, p, j, g, mg: (q, p, 0, 0)),
+        pl.BlockSpec((None, None, 1, 1), lambda q, p, j, g, mg: (q, p, 0, 0)),
+        pl.BlockSpec((None, None, 1, 1), lambda q, p, j, g, mg: (q, p, 0, 0)),
     ]
     args = [
         zq[:, :, None, :],
@@ -187,15 +212,19 @@ def fused_scan_select(gids, zq, rq, keep, coords, res, mask, rows, scale,
         s_dim = sq.shape[2]
         in_specs.append(
             pl.BlockSpec((None, None, 1, s_dim),
-                         lambda q, p, j, g: (q, p, 0, 0)))
+                         lambda q, p, j, g, mg: (q, p, 0, 0)))
         args.append(sq[:, :, None, :])
     in_specs += [
-        pl.BlockSpec((None, k, BLK_C), lambda q, p, j, g: (g[q, p], 0, j)),
-        pl.BlockSpec((None, 1, BLK_C), lambda q, p, j, g: (g[q, p], 0, j)),
-        pl.BlockSpec((None, 1, BLK_C), lambda q, p, j, g: (g[q, p], 0, j)),
-        pl.BlockSpec((None, 1, BLK_C), lambda q, p, j, g: (g[q, p], 0, j)),
-        pl.BlockSpec((None, 1, 1), lambda q, p, j, g: (g[q, p], 0, 0)),
-        pl.BlockSpec((None, 1, 1), lambda q, p, j, g: (g[q, p], 0, 0)),
+        pl.BlockSpec((None, k, BLK_C),
+                     lambda q, p, j, g, mg: (g[q, p], 0, j)),
+        pl.BlockSpec((None, 1, BLK_C),
+                     lambda q, p, j, g, mg: (g[q, p], 0, j)),
+        pl.BlockSpec((None, 1, BLK_C),
+                     lambda q, p, j, g, mg: (mg[q, p], 0, j)),
+        pl.BlockSpec((None, 1, BLK_C),
+                     lambda q, p, j, g, mg: (g[q, p], 0, j)),
+        pl.BlockSpec((None, 1, 1), lambda q, p, j, g, mg: (g[q, p], 0, 0)),
+        pl.BlockSpec((None, 1, 1), lambda q, p, j, g, mg: (g[q, p], 0, 0)),
     ]
     args += [
         coords,
@@ -209,18 +238,18 @@ def fused_scan_select(gids, zq, rq, keep, coords, res, mask, rows, scale,
         s_dim = sq.shape[2]
         in_specs += [
             pl.BlockSpec((None, s_dim, BLK_C),
-                         lambda q, p, j, g: (g[q, p], 0, j)),
-            pl.BlockSpec((None, 1, 1), lambda q, p, j, g: (g[q, p], 0, 0)),
+                         lambda q, p, j, g, mg: (g[q, p], 0, j)),
+            pl.BlockSpec((None, 1, 1), lambda q, p, j, g, mg: (g[q, p], 0, 0)),
         ]
         args += [sketch, sketch_scale[:, None, None]]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=grid,
         in_specs=in_specs,
         out_specs=[
-            pl.BlockSpec((None, 1, w_pad), lambda q, p, j, g: (q, 0, 0)),
-            pl.BlockSpec((None, 1, w_pad), lambda q, p, j, g: (q, 0, 0)),
+            pl.BlockSpec((None, 1, w_pad), lambda q, p, j, g, mg: (q, 0, 0)),
+            pl.BlockSpec((None, 1, w_pad), lambda q, p, j, g, mg: (q, 0, 0)),
         ],
         scratch_shapes=[
             pltpu.VMEM((1, w_pad), jnp.float32),   # running top-W dists
@@ -236,5 +265,5 @@ def fused_scan_select(gids, zq, rq, keep, coords, res, mask, rows, scale,
             jax.ShapeDtypeStruct((q_n, 1, w_pad), jnp.int32),
         ],
         interpret=interpret,
-    )(gids.astype(jnp.int32), *args)
+    )(gids, mgids, *args)
     return out_d[:, 0, :width], out_r[:, 0, :width]

@@ -59,6 +59,12 @@ def main(argv=None):
                     help="ScanPlane backend for retrieval (default auto — "
                          "the fused scan→select kernel on TPU, the jnp "
                          "reference elsewhere)")
+    ap.add_argument("--tenants", type=int, default=0,
+                    help="serve the memory multi-tenant: N namespaces with "
+                         "private writes over the shared corpus, retrievals "
+                         "coalesced into one fused dispatch per window")
+    ap.add_argument("--tenant-budget", type=int, default=256,
+                    help="per-tenant memtable row budget (overflow seals)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -69,10 +75,17 @@ def main(argv=None):
     if args.retrieval_docs > 0:
         memory, memory_mesh, demo_q = _build_memory(
             args.retrieval_docs, args.retrieval_shards, args.seed)
+    tenants = None
+    if args.tenants > 0:
+        if memory is None:
+            raise SystemExit("--tenants requires --retrieval-docs > 0")
+        from ..serve.tenancy import TenantRegistry
+        tenants = TenantRegistry(memory, memtable_budget=args.tenant_budget)
     engine = ServeEngine(model, params, n_slots=args.slots,
                          max_len=args.max_len, temperature=args.temperature,
                          seed=args.seed, memory=memory,
-                         memory_mesh=memory_mesh, scan_impl=args.scan_impl)
+                         memory_mesh=memory_mesh, scan_impl=args.scan_impl,
+                         tenants=tenants)
     if memory is not None:
         res = engine.retrieve(demo_q, topk=4, mode="B")
         plane = ("sharded x%d" % args.retrieval_shards
@@ -81,6 +94,23 @@ def main(argv=None):
               f"{plane} search plane, scan_impl="
               f"{args.scan_impl or 'auto'}, probe ids[0]="
               f"{np.asarray(res.ids)[0].tolist()}")
+    if tenants is not None:
+        # demo window: every tenant writes a few private docs, then one
+        # coalesced flush serves one retrieval per tenant in ONE dispatch
+        # per (mode, topk) group
+        trng = np.random.default_rng(args.seed + 1)
+        d = memory.cfg.d
+        for t in range(args.tenants):
+            engine.remember(trng.standard_normal((4, d)).astype(np.float32),
+                            tenant=f"tenant{t}")
+        pend = [engine.submit_retrieval(
+            trng.standard_normal(d).astype(np.float32),
+            tenant=f"tenant{t}", topk=4) for t in range(args.tenants)]
+        done = engine.flush_retrievals()
+        hits = sum(int((np.asarray(r.result.ids) >= 0).sum()) for r in done)
+        print(f"[serve] tenancy: {args.tenants} tenants coalesced into one "
+              f"window ({len(pend)} requests, {hits} hits, budget="
+              f"{args.tenant_budget})")
 
     rng = np.random.default_rng(args.seed)
     reqs = [engine.submit(rng.integers(0, cfg.vocab, size=args.prompt_len),

@@ -33,14 +33,16 @@ class Request:
 
 
 class ServeEngine:
-    # class-level default: the memory sidecar API works on partially
+    # class-level defaults: the memory sidecar API works on partially
     # constructed engines (tests build them with __new__, no model needed)
     scan_impl: Optional[str] = None
+    tenants = None                  # Optional[tenancy.TenantRegistry]
+    memory_mesh = None
 
     def __init__(self, model, params, *, n_slots: int = 4,
                  max_len: int = 512, temperature: float = 0.0, seed: int = 0,
                  memory: Optional[VectorStore] = None, memory_mesh=None,
-                 scan_impl: Optional[str] = None):
+                 scan_impl: Optional[str] = None, tenants=None):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -48,6 +50,13 @@ class ServeEngine:
         self.max_len = max_len
         self.temperature = temperature
         self.memory = memory        # optional RAG tier (fused stacked search)
+        # optional multi-tenant registry (serve.tenancy.TenantRegistry):
+        # tenant-scoped retrieve()/remember() and coalesced batching.  With
+        # tenants= but no memory=, the registry's base serves tenant-less
+        # calls.
+        self.tenants = tenants
+        if memory is None and tenants is not None:
+            self.memory = tenants.base
         # optional (data, model) mesh: retrieval runs on the distributed
         # search plane — grain-sharded index, one all-gather top-k merge
         self.memory_mesh = memory_mesh
@@ -142,9 +151,33 @@ class ServeEngine:
             max_ticks -= 1
 
     # ---------------------------------------------------------- retrieval
+    def _check_retrieval_args(self, topk, mode) -> None:
+        """Up-front request validation with actionable errors: a malformed
+        request must fail HERE, not as a shape error three layers down the
+        jitted dispatch (or silently — an unknown mode used to fall through
+        to the Mode-B branch)."""
+        if isinstance(topk, bool) or not isinstance(topk, int) or topk <= 0:
+            raise ValueError(f"topk must be a positive int, got {topk!r}")
+        if mode not in ("A", "B"):
+            raise ValueError(f"mode must be 'A' or 'B', got {mode!r}")
+        if getattr(self, "memory", None) is None:
+            raise ValueError(
+                "engine built without memory= or tenants=; attach a "
+                "VectorStore (or a TenantRegistry) to serve retrievals")
+
+    def _check_query(self, q: np.ndarray) -> np.ndarray:
+        if q.ndim == 1:
+            q = q[None]
+        d = self.memory.cfg.d
+        if q.ndim != 2 or q.shape[1] != d:
+            raise ValueError(
+                f"query must be [d] or [Q, d] with d={d}, got {q.shape}")
+        return q
+
     def retrieve(self, q_embed, *, topk: int = 4, mode: str = "B",
                  tag_mask: Optional[int] = None,
-                 ts_range: Optional[tuple] = None) -> SearchResult:
+                 ts_range: Optional[tuple] = None,
+                 tenant: Optional[str] = None) -> SearchResult:
         """Retrieve context docs from the attached vector memory.
 
         One jitted stacked-segment search regardless of how many sealed
@@ -152,36 +185,111 @@ class ServeEngine:
         per-segment dispatch on the request path.  With ``memory_mesh`` set
         the search runs grain-sharded across the mesh (shard-local
         scan/re-rank + one merge collective), still a single dispatch.
+
+        tenant: retrieve in one namespace of the engine's TenantRegistry —
+        the tenant sees the shared base corpus plus its own private writes,
+        and never another tenant's rows.  Routed through the same coalesced
+        path as ``flush_retrievals`` (a batch of one), so results are
+        bit-identical whether a request travels alone or fused with other
+        tenants' traffic.
         """
-        assert self.memory is not None, "engine built without memory="
-        q = np.asarray(q_embed, np.float32)
+        self._check_retrieval_args(topk, mode)
+        q = self._check_query(np.asarray(q_embed, np.float32))
+        if tenant is not None:
+            if self.tenants is None:
+                raise ValueError(
+                    "tenant= requires the engine to be built with "
+                    "tenants=TenantRegistry(...)")
+            from . import tenancy
+            reqs = [tenancy.RetrievalRequest(
+                rid=i, tenant=tenant, q=q[i], topk=topk, mode=mode,
+                tag_mask=tag_mask, ts_range=ts_range)
+                for i in range(q.shape[0])]
+            tenancy.coalesced_retrieve(self.tenants, reqs,
+                                       mesh=self.memory_mesh,
+                                       scan_impl=self.scan_impl)
+            return SearchResult(
+                ids=jnp.stack([r.result.ids for r in reqs]),
+                dists=jnp.stack([r.result.dists for r in reqs]))
         return self.memory.search(q, topk=topk, mode=mode,
                                   tag_mask=tag_mask, ts_range=ts_range,
                                   mesh=self.memory_mesh,
                                   scan_impl=self.scan_impl)
 
-    def remember(self, vecs, *, tags=None, ts=None, ttl=None) -> np.ndarray:
-        """Write docs/session state into the vector memory; ``ttl`` (seconds)
-        makes the entries self-expiring session memory.  Returns gids."""
-        assert self.memory is not None, "engine built without memory="
-        return self.memory.add(np.asarray(vecs, np.float32), tags=tags,
-                               ts=ts, ttl=ttl)
+    def submit_retrieval(self, q_embed, *, tenant: str, topk: int = 4,
+                         mode: str = "B", tag_mask: Optional[int] = None,
+                         ts_range: Optional[tuple] = None):
+        """Enqueue one tenant-scoped retrieval for the next coalescing
+        window; returns the pending request (``.done``/``.result`` are
+        filled by :meth:`flush_retrievals`).  Validation runs at submit
+        time so a bad request never poisons a whole batch."""
+        if self.tenants is None:
+            raise ValueError("submit_retrieval requires tenants=")
+        self._check_retrieval_args(topk, mode)
+        q = np.asarray(q_embed, np.float32)
+        if q.ndim != 1 or q.shape[0] != self.memory.cfg.d:
+            raise ValueError(
+                f"submit_retrieval takes ONE query [d={self.memory.cfg.d}],"
+                f" got {q.shape}")
+        from . import tenancy
+        queue = self.__dict__.setdefault("_retrieval_queue", [])
+        rid = self.__dict__.setdefault("_next_rrid", 0)
+        self._next_rrid = rid + 1
+        req = tenancy.RetrievalRequest(rid=rid, tenant=tenant, q=q,
+                                       topk=topk, mode=mode,
+                                       tag_mask=tag_mask, ts_range=ts_range)
+        queue.append(req)
+        return req
 
-    def evict(self, ids) -> int:
+    def flush_retrievals(self, *, max_batch: Optional[int] = None,
+                         now: Optional[float] = None) -> list:
+        """Dispatch the pending retrieval window: everything queued since
+        the last flush fuses into one padded stacked-search dispatch per
+        (mode, topk, filter) group, across ALL tenants.  Returns the
+        completed requests (arrival order).  Batch-window determinism:
+        slicing the queue differently (``max_batch``) or reordering
+        arrivals never changes any individual request's result."""
+        from . import tenancy
+        queue = self.__dict__.setdefault("_retrieval_queue", [])
+        if not queue:
+            return []
+        n = len(queue) if max_batch is None else min(max_batch, len(queue))
+        batch, self._retrieval_queue = queue[:n], queue[n:]
+        return tenancy.coalesced_retrieve(self.tenants, batch,
+                                          mesh=self.memory_mesh,
+                                          scan_impl=self.scan_impl, now=now)
+
+    def _memory_for(self, tenant: Optional[str]) -> VectorStore:
+        if tenant is None:
+            mem = getattr(self, "memory", None)
+            assert mem is not None, "engine built without memory="
+            return mem
+        if self.tenants is None:
+            raise ValueError("tenant= requires tenants=")
+        return self.tenants.get(tenant)
+
+    def remember(self, vecs, *, tags=None, ts=None, ttl=None,
+                 tenant: Optional[str] = None) -> np.ndarray:
+        """Write docs/session state into the vector memory; ``ttl`` (seconds)
+        makes the entries self-expiring session memory.  Returns gids.
+        ``tenant=`` writes into that namespace's private branch (bounded
+        memtable: overflow force-seals, it never drops rows)."""
+        return self._memory_for(tenant).add(np.asarray(vecs, np.float32),
+                                            tags=tags, ts=ts, ttl=ttl)
+
+    def evict(self, ids, *, tenant: Optional[str] = None) -> int:
         """Memory eviction (session teardown, GDPR removal, stale docs):
         tombstone entries by gid.  The next retrieve() — fused or sharded —
         masks them in-scan; no plane is rebuilt on the request path.
         Returns the number of entries newly evicted."""
-        assert self.memory is not None, "engine built without memory="
-        return self.memory.delete(ids)
+        return self._memory_for(tenant).delete(ids)
 
-    def refresh(self, ids, vecs, *, tags=None, ts=None,
-                ttl=None) -> np.ndarray:
+    def refresh(self, ids, vecs, *, tags=None, ts=None, ttl=None,
+                tenant: Optional[str] = None) -> np.ndarray:
         """Re-embed docs in place (upsert): same gids, new vectors; older
         versions are shadowed immediately and reclaimed at compaction."""
-        assert self.memory is not None, "engine built without memory="
-        return self.memory.upsert(ids, np.asarray(vecs, np.float32),
-                                  tags=tags, ts=ts, ttl=ttl)
+        return self._memory_for(tenant).upsert(
+            ids, np.asarray(vecs, np.float32), tags=tags, ts=ts, ttl=ttl)
 
 
 def promote_to_retrieval(model, caches, cache_len: int):

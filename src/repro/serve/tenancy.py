@@ -1,0 +1,399 @@
+"""Multi-tenant serving plane: branch-registry tenancy + coalesced retrieval.
+
+The serving tier's answer to "heavy traffic from millions of users"
+(ROADMAP item 1) is built from two pieces the store already has — cheap
+``branch()`` forks and the no-re-stack liveness machinery — plus one new
+planner capability (per-query tenant masks, PR 6):
+
+**TenantRegistry** — one namespace = one ``branch()`` of a shared base
+store.  Every tenant shares the base's sealed segments by reference (CoW);
+private writes land in the tenant's own memtable, capped by a per-tenant
+budget (overflowing the budget force-SEALS — data is never dropped), and
+private mutations stay in the tenant's own liveness table.  The total
+number of live (hydrated) branches is LRU-bounded: evicting a tenant seals
+its memtable and freezes its plain-Python control state (segment refs,
+counters, liveness table) — a few hundred bytes plus shared segment refs —
+and the next access rehydrates an equivalent store.  Manifests snapshotted
+before an eviction stay valid forever (they pin the segment objects).
+
+**Coalesced retrieval** — concurrent retrievals from many tenants fuse
+into ONE padded ``search_stacked`` dispatch over the registry's *union*
+plane (base + every tenant's private segments, stacked once and cached in
+the base store's plane LRU).  Per-request tenancy enters as a per-query
+visibility bitmap: rows outside the tenant's manifest (another tenant's
+private rows) or dead in the tenant's liveness table are masked in-scan
+with routing pushdown — the same mechanism as tombstones, so the hot path
+never re-stacks and never leaks a row across tenants.  Results are
+demultiplexed by rid; each request's pool is then merged with its OWN
+tenant's memtable scan, which keeps coalesced results bit-identical to a
+per-request dispatch.
+
+Background maintenance (seal/compact/maintain) runs off the serving path
+via :meth:`TenantRegistry.run_maintenance` — the usual epoch/manifest swap
+means in-flight coalesced batches keep their pinned manifests while the
+next batch picks up the repaired plane (at most one re-stack per epoch).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from ..core.store import Manifest, VectorStore, _finalize, _live_rows
+from ..core.types import BIG, SearchResult
+
+_BIG = float(BIG)
+
+# coalesced query batches are padded up to power-of-two buckets (>= _BUCKET)
+# to bound jit retraces across batch compositions; padding rows carry
+# tenant_ix 0 and a zero query, and their results are dropped at demux
+_BUCKET = 8
+
+
+@dataclasses.dataclass
+class RetrievalRequest:
+    """One tenant-scoped retrieval in flight through the coalescer."""
+
+    rid: int
+    tenant: str
+    q: np.ndarray                      # [d] f32
+    topk: int
+    mode: str
+    tag_mask: Optional[int] = None
+    ts_range: Optional[tuple] = None
+    result: Optional[SearchResult] = None   # [topk] ids/dists once done
+    done: bool = False
+
+
+@dataclasses.dataclass
+class _FrozenTenant:
+    """Evicted tenant: sealed-segment refs + plain-Python control state.
+
+    Holds NO device arrays and no memtable rows (eviction seals first), so
+    an evicted tenant costs shared segment refs + counters.  ``cold_tag``
+    and the epochs are preserved so the rehydrated store continues the same
+    (writer, epoch) liveness lineage — cached bitmaps stay coherent."""
+
+    segments: list
+    next_id: int
+    next_seq: int
+    next_seg: int
+    live_seq: dict
+    epoch: int
+    maint_epoch: int
+    cold_tag: str
+
+
+class TenantRegistry:
+    """Per-namespace ``branch()``es of one base store, with budgets.
+
+    base: the shared corpus.  Sealed at construction so every tenant branch
+      shares segments only (memtables are never shared between writers).
+    memtable_budget: per-tenant memtable row cap — the branch's
+      seal_threshold, so overflow force-seals into a private segment.
+    max_live: LRU bound on simultaneously hydrated tenant stores.
+    """
+
+    def __init__(self, base: VectorStore, *, memtable_budget: int = 1024,
+                 max_live: int = 64):
+        if memtable_budget < 1:
+            raise ValueError("memtable_budget must be >= 1")
+        if max_live < 1:
+            raise ValueError("max_live must be >= 1")
+        base.seal()
+        self.base = base
+        self.memtable_budget = int(memtable_budget)
+        self.max_live = int(max_live)
+        self._live: "OrderedDict[str, VectorStore]" = OrderedDict()
+        self._frozen: Dict[str, _FrozenTenant] = {}
+        # stable REGISTRATION order — union_segments must not depend on LRU
+        # access order, or the union plane's cache key would churn
+        self._order: List[str] = []
+
+    # ------------------------------------------------------------ lifecycle
+    def get(self, name: str) -> VectorStore:
+        """The tenant's hydrated store (branching / rehydrating lazily)."""
+        st = self._live.get(name)
+        if st is not None:
+            self._live.move_to_end(name)
+            return st
+        if name in self._frozen:
+            st = self._thaw(self._frozen.pop(name))
+        else:
+            st = self.base.branch(seal_threshold=self.memtable_budget)
+            self._order.append(name)
+        self._live[name] = st
+        while len(self._live) > self.max_live:
+            old, old_st = self._live.popitem(last=False)
+            self._frozen[old] = self._freeze(old_st)
+        return st
+
+    def evict(self, name: str) -> bool:
+        """Explicitly freeze a tenant (session teardown).  Data survives:
+        the memtable is sealed and control state kept; the next ``get``
+        rehydrates.  Returns False for unknown/already-frozen tenants."""
+        st = self._live.pop(name, None)
+        if st is None:
+            return False
+        self._frozen[name] = self._freeze(st)
+        return True
+
+    def _freeze(self, st: VectorStore) -> _FrozenTenant:
+        st.seal()                       # memtable rows become a segment
+        return _FrozenTenant(
+            segments=list(st._segments), next_id=st._next_id,
+            next_seq=st._next_seq, next_seg=st._next_seg,
+            live_seq=dict(st._live_seq), epoch=st._epoch,
+            maint_epoch=st._maint_epoch, cold_tag=st._cold_tag)
+
+    def _thaw(self, fz: _FrozenTenant) -> VectorStore:
+        st = VectorStore(self.base.cfg,
+                         seal_threshold=self.memtable_budget,
+                         cold_dir=self.base.cold_dir,
+                         cold_tier=self.base.cold_tier,
+                         clock=self.base._clock)
+        st._segments = list(fz.segments)
+        st._next_id = fz.next_id
+        st._next_seq = fz.next_seq
+        st._next_seg = fz.next_seg
+        st._live_seq = dict(fz.live_seq)
+        st._epoch = fz.epoch
+        st._maint_epoch = fz.maint_epoch
+        st._cold_tag = fz.cold_tag      # same writer identity: liveness
+        #                                 cache keys continue the lineage
+        return st
+
+    def tenants(self) -> tuple:
+        """Every registered namespace, in registration order."""
+        return tuple(self._order)
+
+    @property
+    def n_live(self) -> int:
+        return len(self._live)
+
+    # -------------------------------------------------------- serving plane
+    def union_segments(self) -> tuple:
+        """Registry-wide segment union: base + every tenant's private
+        segments, deduped by object identity in REGISTRATION order.  This
+        tuple is the coalesced plane's manifest — it only changes when some
+        tenant seals (or maintenance swaps a manifest), so the stacked
+        plane in the base store's LRU cache is reused across every flush:
+        zero re-stacks on the hot path."""
+        segs, seen = [], set()
+        for s in self.base._segments:
+            if id(s) not in seen:
+                seen.add(id(s))
+                segs.append(s)
+        for name in self._order:
+            st = self._live.get(name)
+            slist = (st._segments if st is not None
+                     else self._frozen[name].segments)
+            for s in slist:
+                if id(s) not in seen:
+                    seen.add(id(s))
+                    segs.append(s)
+        return tuple(segs)
+
+    def run_maintenance(self, now: Optional[float] = None, *,
+                        compact_fanin: Optional[int] = None) -> dict:
+        """Background plane upkeep, OFF the serving path: per-tenant
+        compact (optional) + grain maintenance via the normal epoch /
+        manifest swap.  In-flight manifests keep their pinned segments; the
+        next coalesced flush sees the repaired union (one re-stack per
+        changed manifest, never per request).  Returns {tenant: n_repairs}.
+        """
+        out = {}
+        for name in list(self._live):
+            st = self._live[name]
+            if compact_fanin is not None:
+                st.compact(fanin=compact_fanin, now=now)
+                rep_n = 0                  # compact already ran maintain()
+            else:
+                rep = st.maintain(now=now)
+                rep_n = sum(1 for r in rep.segments if not r.unchanged)
+            out[name] = rep_n
+        return out
+
+    # ------------------------------------------------- per-tenant bitmaps
+    def _visible_rows(self, entry: dict, union: tuple, man: Manifest,
+                      now: float) -> np.ndarray:
+        """[n_rows] bool: rows of the union plane this manifest can see —
+        segment membership ∧ the manifest's liveness table ∧ TTL."""
+        mine = {id(s) for s in man.segments}
+        offs = entry["offsets"]
+        vis = np.zeros(entry["row_gid"].shape[0], bool)
+        if entry["row_base"] is None:        # fused layout: original order
+            for si, seg in enumerate(union):
+                if id(seg) in mine:
+                    vis[offs[si]:offs[si + 1]] = True
+        else:                                # sharded layout: permute
+            vis_orig = np.zeros(int(offs[-1]), bool)
+            for si, seg in enumerate(union):
+                if id(seg) in mine:
+                    vis_orig[offs[si]:offs[si + 1]] = True
+            perm = entry["perm"]
+            vis = np.where(perm >= 0, vis_orig[np.maximum(perm, 0)], False)
+        lv = _live_rows(man.mut_gid, man.mut_seq,
+                        entry["row_gid"], entry["row_seq"])
+        if lv is not None:
+            vis &= lv
+        if entry["row_exp"] is not None:
+            vis &= entry["row_exp"] > now
+        return vis
+
+    def _tenant_bitmap(self, entry: dict, union: tuple, man: Manifest,
+                       now: float) -> np.ndarray:
+        """[G, cap] visibility bitmap of one tenant over a union-plane
+        entry, cached per (writer, epoch, union, now-if-ttl) in the entry.
+        Mirrors ``store._live_plane``'s recipe with segment membership
+        added: cross-tenant gid collisions are safe because membership is
+        physical (row ranges), not id-based."""
+        has_ttl = entry["row_exp"] is not None
+        key = (man.writer, man.epoch, tuple(id(s) for s in man.segments),
+               now if has_ttl else None)
+        cache = entry.setdefault("tenant_bm", OrderedDict())
+        hit = cache.get(key)
+        if hit is not None:
+            cache.move_to_end(key)
+            return hit
+        ok = self._visible_rows(entry, union, man, now)
+        ids = entry["ids_host"]
+        rows = ids.astype(np.int64)
+        if entry["row_base"] is not None:
+            rows = rows + entry["row_base"][:, None]
+        bm = (ids >= 0) & ok[np.maximum(rows, 0)]
+        cache[key] = bm
+        while len(cache) > 4 * self.max_live:
+            cache.popitem(last=False)
+        return bm
+
+
+def _pad_rows(n: int) -> int:
+    b = _BUCKET
+    while b < n:
+        b *= 2
+    return b
+
+
+def coalesced_retrieve(registry: TenantRegistry,
+                       requests: List[RetrievalRequest], *,
+                       mesh=None, grain_axis: str = "model",
+                       scan_impl: Optional[str] = None,
+                       nprobe: Optional[int] = None,
+                       pool: Optional[int] = None,
+                       now: Optional[float] = None
+                       ) -> List[RetrievalRequest]:
+    """Fuse many tenants' retrievals into one dispatch per (mode, topk,
+    filter) group.
+
+    Requests sharing ``(mode, topk, tag_mask, ts_range)`` — the arguments
+    that shape the jitted dispatch — batch together over the registry's
+    union plane; per-request tenancy is purely the per-query visibility
+    bitmap, so adding a request to a batch cannot change any other
+    request's result (per-query routing, per-query carry, per-query
+    epilogue).  ``topk`` is part of the group key deliberately: the pool
+    clamp depends on it, and splitting the group keeps every request
+    bit-identical to its own solo dispatch.
+
+    Each request's candidate pool is merged with its own tenant's memtable
+    scan and finalized to [topk]; results land on ``req.result`` (ids [k],
+    dists [k]) with ``req.done = True``.  Order of ``requests`` never
+    affects any individual result (batch-window determinism).
+    """
+    base = registry.base
+    now = base._clock() if now is None else now
+    groups: "OrderedDict[tuple, List[RetrievalRequest]]" = OrderedDict()
+    for r in requests:
+        groups.setdefault((r.mode, r.topk, r.tag_mask, r.ts_range),
+                          []).append(r)
+    # Snapshot EVERY batch tenant BEFORE computing the union: hydrating
+    # tenant i can LRU-freeze tenant j — sealing j's memtable into a new
+    # segment — and a snapshot taken only afterwards would reference a
+    # segment the precomputed union doesn't carry (silent row loss).
+    # Snapshots pin their memtable rows + segments, so capture-then-union
+    # is stable no matter what later gets evict.
+    mans: Dict[str, Manifest] = {}
+    for r in requests:
+        if r.tenant not in mans:
+            mans[r.tenant] = registry.get(r.tenant).snapshot()
+    union = registry.union_segments()
+    for (mode, topk, tag_mask, ts_range), reqs in groups.items():
+        _dispatch_group(registry, union, reqs, mans, mode=mode, topk=topk,
+                        tag_mask=tag_mask, ts_range=ts_range, mesh=mesh,
+                        grain_axis=grain_axis, scan_impl=scan_impl,
+                        nprobe=nprobe, pool=pool, now=now)
+    return requests
+
+
+def _dispatch_group(registry: TenantRegistry, union: tuple,
+                    reqs: List[RetrievalRequest],
+                    mans: Dict[str, Manifest], *, mode: str, topk: int,
+                    tag_mask, ts_range, mesh, grain_axis: str,
+                    scan_impl, nprobe, pool, now: float) -> None:
+    base = registry.base
+    names: List[str] = []
+    name_ix: Dict[str, int] = {}
+    for r in reqs:
+        if r.tenant not in name_ix:
+            name_ix[r.tenant] = len(names)
+            names.append(r.tenant)
+    q = np.stack([np.asarray(r.q, np.float32) for r in reqs])
+    tix = np.fromiter((name_ix[r.tenant] for r in reqs), np.int64,
+                      len(reqs))
+
+    seg_ids = seg_d = None
+    if union:
+        man_u = Manifest(segments=union, mem_n=0, writer="<registry>")
+        qp = _pad_rows(len(reqs))
+        q_pad = np.zeros((qp, q.shape[1]), np.float32)
+        q_pad[:len(reqs)] = q
+        tix_pad = np.zeros(qp, np.int64)
+        tix_pad[:len(reqs)] = tix
+        kw = dict(topk=topk, mode=mode, tag_mask=tag_mask,
+                  ts_range=ts_range, scan_impl=scan_impl, nprobe=nprobe,
+                  pool=pool, now=now, tenant_ix=tix_pad)
+        if mesh is not None:
+            entry = base._sharded_for(union, mesh, grain_axis, scan_impl)
+            tl = np.stack([registry._tenant_bitmap(entry, union, mans[n],
+                                                   now) for n in names])
+            ids, d = base._search_segments_sharded(
+                q_pad, man_u, mesh=mesh, grain_axis=grain_axis,
+                shard_queries=False, tenant_live=tl, **kw)
+        else:
+            entry = base._stacked_for(union, scan_impl)
+            tl = np.stack([registry._tenant_bitmap(entry, union, mans[n],
+                                                   now) for n in names])
+            ids, d = base._search_segments_fused(
+                q_pad, man_u, route_mode="global", tenant_live=tl, **kw)
+        seg_ids, seg_d = ids[:len(reqs)], d[:len(reqs)]
+
+    # per-tenant memtable pools (host-side exact scan of the captured rows)
+    mem: Dict[str, tuple] = {}
+    rows_of: Dict[str, List[int]] = {}
+    for i, r in enumerate(reqs):
+        rows_of.setdefault(r.tenant, []).append(i)
+    for n, rows in rows_of.items():
+        mem[n] = base._search_memtable(q[rows], mans[n], topk, tag_mask,
+                                       ts_range, now)
+
+    for i, r in enumerate(reqs):
+        parts_i, parts_d = [], []
+        if seg_ids is not None:
+            parts_i.append(np.asarray(seg_ids[i:i + 1], np.int64))
+            parts_d.append(np.asarray(seg_d[i:i + 1], np.float32))
+        m_ids, m_d = mem[r.tenant]
+        if m_ids is not None:
+            j = rows_of[r.tenant].index(i)
+            parts_i.append(np.asarray(m_ids[j:j + 1], np.int64))
+            parts_d.append(np.asarray(m_d[j:j + 1], np.float32))
+        if parts_i:
+            res = _finalize(np.concatenate(parts_i, axis=1),
+                            np.concatenate(parts_d, axis=1), topk)
+            r.result = SearchResult(ids=res.ids[0], dists=res.dists[0])
+        else:                                   # fully empty store
+            r.result = SearchResult(
+                ids=np.full(topk, -1, np.int64),
+                dists=np.full(topk, _BIG, np.float32))
+        r.done = True

@@ -27,6 +27,10 @@ from repro.core.store import VectorStore
 D = 16
 NOW = 500.0                       # query-time clock (store clock pinned at 0)
 OPS = ("add", "delete", "upsert", "seal", "compact", "maintain")
+# per-tenant interleavings (tenant_interleaving_check): "evict" freezes the
+# LRU-victim tenant (seal + dehydrate) and the next touch must rehydrate an
+# equivalent store; "retrieve" runs a mid-interleaving coalesced window
+TENANT_OPS = ("add", "delete", "upsert", "seal", "evict", "retrieve")
 
 
 def _cfg():
@@ -117,3 +121,121 @@ def mutation_interleaving_check(ops, seed: int, cold: bool, mesh=None):
                                        np.sort(d_all[qi][order]),
                                        rtol=1e-4, atol=1e-4)
             assert (ids[qi, k_eff:] == -1).all(), (filt, qi, ids[qi])
+
+
+# ---------------------------------------------------------------- tenancy
+def _assert_matches_oracle(req, model, seed, ops):
+    """One coalesced result == brute-force filtered L2 over the tenant's
+    live set (set equality on ids, allclose on distances)."""
+    live = [(g, v) for g, (v, tag, ts, exp) in sorted(model.items())
+            if exp > NOW]
+    ids = np.asarray(req.result.ids)
+    dists = np.asarray(req.result.dists)
+    if not live:
+        assert (ids == -1).all(), (req.tenant, ids, seed, ops)
+        return
+    gs = np.fromiter((g for g, _ in live), np.int64, len(live))
+    vs = np.stack([v for _, v in live])
+    d_all = np.sum((vs - req.q[None, :]) ** 2, axis=-1)
+    k_eff = min(req.topk, len(live))
+    order = np.argsort(d_all)[:k_eff]
+    assert set(ids[:k_eff].tolist()) == set(gs[order].tolist()), \
+        (req.tenant, ids, gs[order], seed, ops)
+    np.testing.assert_allclose(np.sort(dists[:k_eff]),
+                               np.sort(d_all[order]),
+                               rtol=1e-4, atol=1e-4)
+    assert (ids[k_eff:] == -1).all(), (req.tenant, ids, seed, ops)
+
+
+def tenant_interleaving_check(ops, seed: int, cold: bool, mesh=None,
+                              n_tenants: int = 3):
+    """Coalesced multi-tenant retrieval vs per-tenant brute-force oracles.
+
+    ``n_tenants`` branches of one shared base run an arbitrary interleaving
+    of per-tenant add/delete/upsert/seal plus registry evictions (freeze/
+    thaw through a max_live=2 LRU), with deletes and upserts also hitting
+    SHARED base gids (the tenant must stop seeing the shared row / see only
+    its own new version, while every other tenant keeps the original).
+    After every "retrieve" op and at the end, one coalesced window serving
+    all tenants at exhaustive knobs must return exactly each tenant's own
+    brute-force top-k — per-request, bit-independent of the co-batched
+    tenants.
+    """
+    from repro.serve.tenancy import (RetrievalRequest, TenantRegistry,
+                                     coalesced_retrieve)
+    rng = np.random.default_rng(seed)
+    base = VectorStore(_cfg(), seal_threshold=64, cold_tier=cold,
+                       clock=lambda: 0.0)
+    shared = {}
+    vecs = rng.standard_normal((32, D)).astype(np.float32)
+    tags = rng.integers(1, 4, size=32)
+    ts = rng.uniform(0.0, 10.0, size=32)
+    gids = base.add(vecs, tags=tags.tolist(), ts=ts.tolist())
+    for i, g in enumerate(np.asarray(gids, np.int64).tolist()):
+        shared[g] = (vecs[i], int(tags[i]), float(ts[i]), np.inf)
+    # max_live=2 < n_tenants: every interleaving exercises freeze/thaw
+    reg = TenantRegistry(base, memtable_budget=16, max_live=2)
+    names = [f"t{i}" for i in range(n_tenants)]
+    models = {n: dict(shared) for n in names}
+
+    def write(name, gids=None):
+        st = reg.get(name)
+        n = 8 if gids is None else len(gids)
+        v = rng.standard_normal((n, D)).astype(np.float32)
+        tg = rng.integers(1, 4, size=n)
+        tv = rng.uniform(0.0, 10.0, size=n)
+        ttl = rng.uniform(100.0, 2000.0, size=n) \
+            if rng.random() < 0.4 else None
+        if gids is None:
+            ids = st.add(v, tags=tg.tolist(), ts=tv.tolist(), ttl=ttl)
+        else:
+            ids = st.upsert(gids, v, tags=tg.tolist(), ts=tv.tolist(),
+                            ttl=ttl)
+        exp = ttl if ttl is not None else np.full(n, np.inf)
+        for i, g in enumerate(np.asarray(ids, np.int64).tolist()):
+            models[name][g] = (v[i], int(tg[i]), float(tv[i]),
+                               float(exp[i]))
+
+    def window():
+        reqs = []
+        for rid, name in enumerate(names):
+            live = [v for v, _, _, e in models[name].values() if e > NOW]
+            near = (live[int(rng.integers(len(live)))] if live
+                    else np.zeros(D, np.float32))
+            q = (near + 0.05 * rng.standard_normal(D)).astype(np.float32)
+            reqs.append(RetrievalRequest(rid=rid, tenant=name, q=q,
+                                         topk=5, mode="B"))
+        total_rows = sum(s.n for s in reg.union_segments()) \
+            + sum(len(reg.get(n)._mem) for n in names)
+        total_grains = sum(s.index.grains.n_grains
+                           for s in reg.union_segments())
+        coalesced_retrieve(reg, reqs, mesh=mesh,
+                           nprobe=max(total_grains, 1),
+                           pool=max(2 * total_rows, 1), now=NOW)
+        for r in reqs:
+            _assert_matches_oracle(r, models[r.tenant], seed, ops)
+
+    for op, who in ops:
+        name = names[who % n_tenants]
+        if op == "add":
+            write(name)
+        elif op == "seal":
+            reg.get(name).seal()
+        elif op == "evict":
+            reg.evict(name)
+        elif op == "retrieve":
+            window()
+        else:
+            known = np.fromiter(sorted(models[name]), np.int64,
+                                len(models[name]))
+            if not len(known):
+                continue
+            k = min(len(known), 8 if op == "delete" else 4)
+            sel = rng.choice(known, size=k, replace=False)
+            if op == "delete":
+                reg.get(name).delete(sel)
+                for g in sel.tolist():
+                    models[name].pop(g, None)
+            else:
+                write(name, gids=sel)
+    window()
