@@ -1,0 +1,174 @@
+"""Mixed-precision cascade: index bytes/vector + staged-select recall/QPS.
+
+The claim under test (ISSUE 7 tentpole): density-aware per-grain bit
+allocation stores easy grains' tangent coordinates at int4 and hard grains
+at int8, shrinking the at-rest coordinate payload to <= 0.6x the fixed
+int16 baseline on anisotropic-manifold data — at UNCHANGED recall, because
+the staged cascade re-ranks exactly (stage 3) and with exhaustive budgets
+is bit-identical to the fused plane by construction.
+
+Four assertions:
+  1. *Bytes/vector* (exact, by construction): serializing every sealed
+     segment's coordinate panels at their recorded per-grain widths
+     (``layout.pack_coords_blob``) costs <= 0.6x the same panels at the
+     fixed width, on manifold data where most grains tier to int4.
+  2. *Recall equality at exhaustive budgets*: cascade ids == fused_ref ids
+     (and so equal Recall@10) when budgets cover the pool.
+  3. *Recall floor under real budgets*: with stage 1 keeping 3/5 of the
+     probed slots (b2 = pool) the staged path still meets Recall@10 >=
+     0.95 vs brute force (recorded, and asserted — the §2.2 cheap filter
+     is a heuristic, so this is the empirical lock on the paper's cascade
+     claim).
+  4. *QPS guardrail*: the budgeted cascade_ref is not structurally slower
+     than fused_ref on this CPU container (the kernel-stage1 variant is a
+     TPU artifact, excluded from timing like benchmarks/scan_select.py).
+
+Emits BENCH_cascade.json at the repo root (bytes/vector, recall, QPS).
+
+  PYTHONPATH=src python -m benchmarks.cascade [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import HNTLConfig, layout, quantize
+from repro.core.store import VectorStore
+from repro.data import synthetic as syn
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_cascade.json")
+
+
+def _time(fn, iters: int = 10, warmup: int = 2, reps: int = 3) -> float:
+    for _ in range(warmup):
+        fn()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            fn()
+        best = min(best, (time.perf_counter() - t0) / iters)
+    return best
+
+
+def _build(x, bit_alloc: str, *, d: int, k: int, n_grains: int,
+           nprobe: int, pool: int):
+    cfg = HNTLConfig(d=d, k=k, s=0, n_grains=n_grains, nprobe=nprobe,
+                     pool=pool, block=64, bit_alloc=bit_alloc)
+    st = VectorStore(cfg, seal_threshold=x.shape[0])
+    st.add(x)
+    st.seal()
+    return st
+
+
+def _coord_bytes(st) -> tuple:
+    """At-rest coordinate payload across sealed segments, serialized at
+    each grain's recorded width (qmaxg=None -> fixed int16)."""
+    total, widths = 0, []
+    for seg in st.snapshot().segments:
+        g = seg.index.grains
+        blob, _, w = layout.pack_coords_blob(
+            np.asarray(g.coords), g.qmaxg)
+        total += blob.size
+        widths.append(np.asarray(w))
+    return total, np.concatenate(widths)
+
+
+def _recall(ids, gt, topk: int) -> float:
+    hit = sum(len(set(ids[i, :topk].tolist())
+                  & set(gt[i, :topk].tolist())) for i in range(gt.shape[0]))
+    return hit / (gt.shape[0] * topk)
+
+
+def main(quick: bool = False):
+    n = 8192 if quick else 32768
+    d, k, n_grains, nprobe, pool, topk = 64, 12, 32, 32, 64, 10
+    nq = 16 if quick else 64
+    iters = 4 if quick else 10
+
+    x = syn.anisotropic_manifold(n, d, intrinsic=6, curvature=0.5,
+                                 noise=0.01, seed=0)
+    q = syn.queries_from(x, nq)
+    gt = np.argsort(((x[None] - q[:, None]) ** 2).sum(-1), axis=1)[:, :topk]
+
+    kw = dict(d=d, k=k, n_grains=n_grains, nprobe=nprobe, pool=pool)
+    fixed = _build(x, "fixed", **kw)
+    dens = _build(x, "density", **kw)
+
+    # --- 1. bytes/vector at rest ----------------------------------------
+    b_fixed, _ = _coord_bytes(fixed)
+    b_dens, w = _coord_bytes(dens)
+    n_int4 = int((w == 4).sum())
+    bpv_fixed, bpv_dens = b_fixed / n, b_dens / n
+    ratio = b_dens / b_fixed
+    print(f"  coord payload: fixed int16 {bpv_fixed:.1f} B/vec  ->  "
+          f"density {bpv_dens:.1f} B/vec ({ratio:.2f}x; "
+          f"{n_int4}/{len(w)} grains at int4)")
+    assert ratio <= 0.6, \
+        f"density coords {ratio:.2f}x fixed, want <= 0.6x on manifold data"
+
+    # --- 2. exhaustive budgets: cascade == fused_ref exactly -------------
+    skw = dict(topk=topk, mode="B")
+    cap = dens._segments[0].index.grains.cap
+    exhaustive = (nprobe * cap, pool)
+    ids_fused = np.asarray(dens.search(q, scan_impl="fused_ref", **skw).ids)
+    ids_ex = np.asarray(dens.search(q, scan_impl="cascade_ref",
+                                    budgets=exhaustive, **skw).ids)
+    assert np.array_equal(ids_ex, ids_fused), \
+        "cascade at exhaustive budgets diverged from fused_ref"
+    r_fused = _recall(ids_fused, gt, topk)
+
+    # --- 3. recall under real stage budgets ------------------------------
+    # Stage 1's price is a lower bound dominated by the per-grain query
+    # residual, so it separates grains, not rows: with every grain probed
+    # (nprobe = n_grains) a b1 of 3/5 of the slots drops the low-affinity
+    # 40% of the corpus before any coordinate is touched, and stage 2's
+    # exact quantized re-price earns the row-level pruning down to b2.
+    budgets = (nprobe * cap * 3 // 5, pool)
+    ids_b = np.asarray(dens.search(q, scan_impl="cascade_ref",
+                                   budgets=budgets, **skw).ids)
+    r_budg = _recall(ids_b, gt, topk)
+    print(f"  Recall@{topk}: fused {r_fused:.3f} == cascade(exhaustive) "
+          f"{_recall(ids_ex, gt, topk):.3f};  cascade{budgets} {r_budg:.3f}")
+    assert r_budg >= 0.95, \
+        f"budgeted cascade Recall@{topk} {r_budg:.3f} < 0.95"
+
+    # --- 4. QPS guardrail -------------------------------------------------
+    f_fused = lambda: np.asarray(dens.search(                  # noqa: E731
+        q, scan_impl="fused_ref", **skw).ids)
+    f_casc = lambda: np.asarray(dens.search(                   # noqa: E731
+        q, scan_impl="cascade_ref", budgets=budgets, **skw).ids)
+    t_fused, t_casc = _time(f_fused, iters=iters), _time(f_casc, iters=iters)
+    qps_fused, qps_casc = nq / t_fused, nq / t_casc
+    print(f"  QPS @ Q={nq}: fused_ref {qps_fused:,.0f} q/s  ->  budgeted "
+          f"cascade_ref {qps_casc:,.0f} q/s ({qps_casc/qps_fused:.2f}x)")
+    # Loose structural floor only: on CPU the jnp oracle pays stage 2's
+    # [Q, b1, k] survivor gather as a scalar XLA gather (the TPU kernel
+    # streams panels), so the cascade's win — touching half the coordinate
+    # bytes — shows up in the byte accounting above, not in oracle QPS.
+    assert qps_casc >= 0.1 * qps_fused, \
+        f"cascade regressed QPS: {qps_casc:.0f} vs {qps_fused:.0f}"
+
+    with open(OUT, "w") as f:
+        json.dump({"n": n, "d": d, "k": k, "quick": quick,
+                   "bytes_per_vector_fixed": round(bpv_fixed, 2),
+                   "bytes_per_vector_density": round(bpv_dens, 2),
+                   "coord_bytes_ratio": round(ratio, 4),
+                   "grains_int4": n_int4, "grains_total": int(len(w)),
+                   "recall_at_10_fused": round(r_fused, 4),
+                   "recall_at_10_cascade_budgeted": round(r_budg, 4),
+                   "budgets": list(budgets),
+                   "qps_fused_ref": round(qps_fused, 1),
+                   "qps_cascade_ref": round(qps_casc, 1)}, f, indent=2)
+        f.write("\n")
+    print(f"  wrote {os.path.relpath(OUT)}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    main(quick=ap.parse_args().quick)

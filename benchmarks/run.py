@@ -16,6 +16,8 @@ BENCHES = [
     ("table2_scan", "Paper Table 2: Block-SoA vs AoS vs pointer-chase"),
     ("scan_select", "Fused scan→select: O(Q·pool) candidate state vs "
                     "full materialize, gather-free fused path"),
+    ("cascade", "Mixed-precision cascade: int4/int8 bytes/vector <= 0.6x "
+                "fixed, staged-budget recall, BENCH_cascade.json"),
     ("memory_footprint", "Paper 3.2: 66 B/vec vs HNSW graph bytes"),
     ("sift_scale", "Paper 4: SIFT-like scale recall/QPS/DRAM"),
     ("segment_scale", "LSM store: fused stacked search vs per-segment loop"),

@@ -84,10 +84,22 @@ def build(x, cfg: HNTLConfig, *, tags: Optional[np.ndarray] = None,
 
     z = jnp.einsum("gcd,gdk->gck", xc, basis)                     # [G, cap, k]
     qeff = int32_safe_qmax(cfg.k, cfg.coord_bits)
-    scale = jax.vmap(lambda zz, mm: quantize.fit_scale(
-        zz, mm, qmax=qeff, quantile=cfg.scale_quantile,
-        mult=cfg.scale_mult))(z, maskj)                            # [G]
-    zq = quantize.quantize_coords(z, scale[:, None, None], qmax=qeff)
+    # Density-aware mixed precision: easy grains (high captured variance,
+    # enough rows) quantize to int4, hard grains to int8, recorded per grain
+    # so search and maintenance re-tiering read the same width.
+    qmaxg = None
+    if cfg.bit_alloc == "density":
+        qmaxg = quantize.assign_grain_qmax(
+            var_cap, jnp.asarray(counts), captured_min=cfg.int4_captured_min,
+            min_rows=cfg.int4_min_rows)
+    qm_fit = (jnp.full(g, qeff, jnp.int32) if qmaxg is None else qmaxg) \
+        .astype(jnp.float32)
+    scale = jax.vmap(lambda zz, mm, qm: quantize.fit_scale(
+        zz, mm, qmax=qm, quantile=cfg.scale_quantile,
+        mult=cfg.scale_mult))(z, maskj, qm_fit)                    # [G]
+    zq = quantize.quantize_coords(
+        z, scale[:, None, None],
+        qmax=qeff if qmaxg is None else qmaxg[:, None, None])
 
     vc2 = jnp.sum(xc * xc, axis=-1)                                # [G, cap]
     r = jnp.maximum(vc2 - jnp.sum(z * z, axis=-1), 0.0)
@@ -120,6 +132,7 @@ def build(x, cfg: HNTLConfig, *, tags: Optional[np.ndarray] = None,
         if tags is not None else None,
         ts=jnp.asarray(layout.scatter_to_grains(ts, assign, slot, g, cap))
         if ts is not None else None,
+        qmaxg=qmaxg,
     )
     index = HNTLIndex(
         routing=RoutingPlane(centroids=jnp.asarray(mu),

@@ -48,6 +48,67 @@ def scatter_to_grains(values: np.ndarray, assign: np.ndarray, slot: np.ndarray,
     return out
 
 
+def coord_width_bits(qmaxg, n_grains: int, full_bits: int = 16) -> np.ndarray:
+    """Stored bits-per-coordinate of each grain: 4 / 8 / ``full_bits``.
+
+    ``qmaxg`` is the per-grain quantization magnitude recorded by the
+    density-aware encoder (None = every grain at the fixed ``full_bits``).
+    """
+    if qmaxg is None:
+        return np.full(n_grains, full_bits, np.uint8)
+    qm = np.asarray(qmaxg)
+    return np.where(qm <= 7, 4, np.where(qm <= 127, 8, full_bits)) \
+        .astype(np.uint8)
+
+
+def pack_coords_blob(coords, qmaxg):
+    """Serialize [G, k, cap] int16 coordinate panels at their per-grain
+    stored width — the mixed-precision DRAM/disk representation.
+
+    The *device* kernel view stays widened int16 (fixed-shape arrays can't
+    be per-grain ragged); this blob is what the index actually costs at
+    rest, measured by ``benchmarks/cascade.py``.  int4 grains hold two
+    signed nibbles per byte (``quantize.pack_int4``), int8 grains one byte
+    per coordinate, full-width grains two.
+
+    Returns (blob [B] u8, offsets [G+1] i64, width_bits [G] u8).
+    """
+    from .quantize import pack_int4
+    coords = np.asarray(coords)
+    g, k, cap = coords.shape
+    widths = coord_width_bits(qmaxg, g)
+    parts, offsets = [], [0]
+    for gi in range(g):
+        c = coords[gi].reshape(-1)
+        if widths[gi] == 4:
+            b = np.asarray(pack_int4(c)).view(np.uint8)
+        elif widths[gi] == 8:
+            b = c.astype(np.int8).view(np.uint8)
+        else:
+            b = c.astype("<i2").view(np.uint8).reshape(-1)
+        parts.append(b)
+        offsets.append(offsets[-1] + b.size)
+    blob = np.concatenate(parts) if parts else np.zeros(0, np.uint8)
+    return blob, np.asarray(offsets, np.int64), widths
+
+
+def unpack_coords_blob(blob, offsets, width_bits, k: int, cap: int):
+    """Inverse of :func:`pack_coords_blob`: blob -> [G, k, cap] int16."""
+    from .quantize import unpack_int4
+    g = len(width_bits)
+    out = np.zeros((g, k, cap), np.int16)
+    for gi in range(g):
+        raw = np.asarray(blob[offsets[gi]:offsets[gi + 1]], np.uint8)
+        if width_bits[gi] == 4:
+            vals = np.asarray(unpack_int4(raw, k * cap), np.int16)
+        elif width_bits[gi] == 8:
+            vals = raw.view(np.int8).astype(np.int16)
+        else:
+            vals = raw.view("<i2").astype(np.int16)
+        out[gi] = vals.reshape(k, cap)
+    return out
+
+
 def pack_members(members, cap: int):
     """Lay out explicit member lists as Block-SoA id/valid panels — the
     maintenance plane's *group rewrite* primitive.

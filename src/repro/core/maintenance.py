@@ -191,9 +191,11 @@ def grain_stats(seg, live_rows: Optional[np.ndarray]):
 
 
 @functools.partial(jax.jit, static_argnames=("k", "s", "qeff", "quantile",
-                                             "mult"))
+                                             "mult", "bit_alloc",
+                                             "captured_min", "min_rows"))
 def _encode_groups(xm, valid, fit, *, k: int, s: int, qeff: int,
-                   quantile: float, mult: float):
+                   quantile: float, mult: float, bit_alloc: str = "fixed",
+                   captured_min: float = 0.85, min_rows: int = 8):
     """Re-encode a batch of grain groups, mirroring ``index.build``'s
     per-grain math exactly (same PCA, same scale fitters, same quantizers).
 
@@ -201,6 +203,13 @@ def _encode_groups(xm, valid, fit, *, k: int, s: int, qeff: int,
     slots physically present; fit [T, cap]: slots the *frame and scales*
     are fit on (the live subset — dead slots are re-encoded under the new
     frame so they stay addressable, but never steer it).
+
+    bit_alloc="density" re-tiers each group's stored width from its FRESH
+    fit statistics (the new frame's captured fraction + live count,
+    exactly :func:`quantize.assign_grain_qmax` as at build), so a grain
+    that drifted easy packs down to int4 and one that drifted hard climbs
+    back to int8; "fixed" keeps every group at ``qeff``.  ``out["qmaxg"]``
+    records the per-group decision either way.
     """
     w = fit.astype(xm.dtype)
     cnt = jnp.maximum(w.sum(axis=1), 1.0)                  # [T]
@@ -209,12 +218,19 @@ def _encode_groups(xm, valid, fit, *, k: int, s: int, qeff: int,
     basis, sketch_basis, var = jax.vmap(
         lambda xcg, mg: pca.grain_pca(xcg, mg, k, s))(xc, fit)
     z = jnp.einsum("gcd,gdk->gck", xc, basis)              # [T, cap, k]
-    scale = jax.vmap(lambda zz, mm: quantize.fit_scale(
-        zz, mm, qmax=qeff, quantile=quantile, mult=mult))(z, fit)
-    zq = quantize.quantize_coords(z, scale[:, None, None], qmax=qeff)
+    if bit_alloc == "density":
+        qm = quantize.assign_grain_qmax(
+            var, cnt, captured_min=captured_min, min_rows=min_rows)
+    else:
+        qm = jnp.full(var.shape, qeff, jnp.int32)
+    scale = jax.vmap(lambda zz, mm, q: quantize.fit_scale(
+        zz, mm, qmax=q, quantile=quantile, mult=mult))(
+            z, fit, qm.astype(xm.dtype))
+    zq = quantize.quantize_coords(z, scale[:, None, None],
+                                  qmax=qm[:, None, None])
     vc2 = jnp.sum(xc * xc, axis=-1)
     r = jnp.maximum(vc2 - jnp.sum(z * z, axis=-1), 0.0)
-    out = dict(mu=mu, basis=basis, scale=scale, var=var,
+    out = dict(mu=mu, basis=basis, scale=scale, var=var, qmaxg=qm,
                coords=jnp.transpose(zq, (0, 2, 1)))
     if s > 0:
         s_coords = jnp.einsum("gcd,gds->gcs", xc, sketch_basis)
@@ -411,7 +427,9 @@ def maintain_segment(seg, live_rows: Optional[np.ndarray], cfg: HNTLConfig,
         enc = _encode_groups(
             jnp.asarray(xm, jnp.float32), jnp.asarray(t_valid),
             jnp.asarray(t_fit), k=cfg.k, s=cfg.s, qeff=qeff,
-            quantile=cfg.scale_quantile, mult=cfg.scale_mult)
+            quantile=cfg.scale_quantile, mult=cfg.scale_mult,
+            bit_alloc=cfg.bit_alloc, captured_min=cfg.int4_captured_min,
+            min_rows=cfg.int4_min_rows)
         panels = {name: np.asarray(a) for name, a in enc.items()}
         panels["ids"], panels["valid"], panels["fit"] = t_ids, t_valid, t_fit
 
@@ -431,10 +449,12 @@ def _assemble_segment(seg, entries, panels, rep: SegmentReport):
     old = {name: np.asarray(getattr(g, name))
            for name in ("coords", "res", "ids", "valid", "basis", "mu",
                         "scale", "res_scale")}
-    for name in ("sketch", "sketch_basis", "sketch_scale", "tags", "ts"):
+    for name in ("sketch", "sketch_basis", "sketch_scale", "tags", "ts",
+                 "qmaxg"):
         arr = getattr(g, name)
         old[name] = np.asarray(arr) if arr is not None else None
     old["sizes"] = np.asarray(seg.index.routing.sizes)
+    has_qmax = old["qmaxg"] is not None
 
     out = dict(
         coords=np.zeros((g2, k, cap), np.int16),
@@ -455,8 +475,11 @@ def _assemble_segment(seg, entries, panels, rep: SegmentReport):
         out["tags"] = np.zeros((g2, cap), np.uint32)
     if old["ts"] is not None:
         out["ts"] = np.zeros((g2, cap), np.float32)
+    if has_qmax:
+        out["qmaxg"] = np.ones(g2, np.int32)
     enc_fields = ["coords", "res", "basis", "mu", "scale", "res_scale"] + \
-        (["sketch", "sketch_basis", "sketch_scale"] if has_sketch else [])
+        (["sketch", "sketch_basis", "sketch_scale"] if has_sketch else []) + \
+        (["qmaxg"] if has_qmax else [])
 
     # per-raw-row tag/ts tables for re-scattered (packed) groups
     seg_tags = seg.tags if seg.tags is not None else None
@@ -470,7 +493,7 @@ def _assemble_segment(seg, entries, panels, rep: SegmentReport):
                          "scale", "res_scale", "sizes"):
                 out[name][new_gi] = old[name][gi]
             for name in ("sketch", "sketch_basis", "sketch_scale",
-                         "tags", "ts"):
+                         "tags", "ts", "qmaxg"):
                 if old[name] is not None:
                     out[name][new_gi] = old[name][gi]
             unchanged.append((gi, new_gi))
@@ -508,7 +531,8 @@ def _assemble_segment(seg, entries, panels, rep: SegmentReport):
         sketch_basis=jnp.asarray(out["sketch_basis"]) if has_sketch else None,
         sketch_scale=jnp.asarray(out["sketch_scale"]) if has_sketch else None,
         tags=jnp.asarray(out["tags"]) if old["tags"] is not None else None,
-        ts=jnp.asarray(out["ts"]) if old["ts"] is not None else None)
+        ts=jnp.asarray(out["ts"]) if old["ts"] is not None else None,
+        qmaxg=jnp.asarray(out["qmaxg"]) if has_qmax else None)
     index = HNTLIndex(
         routing=routing.rebuild_plane(out["mu"], out["sizes"]),
         grains=grains,

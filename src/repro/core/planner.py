@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from . import quantize, routing, scan, scanplane
+from .cascade import check_budgets
 from .types import (BIG, HNTLIndex, SearchResult, ShardedStackedSegments,
                     StackedSegments)
 
@@ -67,11 +68,16 @@ def _project_quantized(index: HNTLIndex, q: jax.Array, gids: jax.Array,
     g = index.grains
     proj = project_queries(index, q, gids)
     scale = g.scale[gids]                                 # [Q, P]
+    # Mixed precision: each probed grain quantizes the query at ITS stored
+    # width (qmaxg gather), so query coords live on the same integer lattice
+    # as the panel they are scanned against.  Fixed-width planes keep the
+    # static qeff.
+    qm = qeff if g.qmaxg is None else g.qmaxg[gids][..., None]
     # Envelope filter: prune structurally-incompatible grains (paper §2.3).
     keep = quantize.envelope_keep(proj["zq"], scale[..., None], envelope_frac,
-                                  qmax=qeff)              # [Q, P]
+                                  qmax=qm)                # [Q, P]
     zq_q = quantize.quantize_coords(proj["zq"], scale[..., None],
-                                    qmax=qeff).astype(jnp.int32)
+                                    qmax=qm).astype(jnp.int32)
     sq = None
     if g.sketch_basis is not None:
         sk_scale = g.sketch_scale[gids]
@@ -125,6 +131,7 @@ def scan_probed(index: HNTLIndex, q: jax.Array, gids: jax.Array,
 
 def select_probed(index: HNTLIndex, q: jax.Array, gids: jax.Array,
                   envelope_frac: float, qeff: int, *, width: int, runner,
+                  budgets: Optional[tuple] = None,
                   extra_mask: Optional[jax.Array] = None,
                   tenant_mask: Optional[jax.Array] = None,
                   tenant_ix: Optional[jax.Array] = None):
@@ -147,6 +154,8 @@ def select_probed(index: HNTLIndex, q: jax.Array, gids: jax.Array,
         kw = dict(sq=sq, sketch=g.sketch, sketch_scale=g.sketch_scale)
     if tenant_mask is not None:
         kw.update(tenant_mask=tenant_mask, tenant_ix=tenant_ix)
+    if budgets is not None:
+        kw["budgets"] = budgets
     width = min(width, gids.shape[1] * g.cap)
     return runner(gids, zq_q, rq, keep, g.coords, g.res, mask, g.ids,
                   g.scale, g.res_scale, width=width, **kw)
@@ -155,6 +164,7 @@ def select_probed(index: HNTLIndex, q: jax.Array, gids: jax.Array,
 def candidate_stage(index: HNTLIndex, q: jax.Array, gids: jax.Array, *,
                     envelope_frac: float, qeff: int, width: int,
                     scan_impl: Optional[str] = None,
+                    budgets: Optional[tuple] = None,
                     extra_mask: Optional[jax.Array] = None,
                     tenant_mask: Optional[jax.Array] = None,
                     tenant_ix: Optional[jax.Array] = None):
@@ -170,9 +180,14 @@ def candidate_stage(index: HNTLIndex, q: jax.Array, gids: jax.Array, *,
     backend parity is tenant-independent too.
     """
     plane = scanplane.get_scan_plane(scan_impl)
+    if budgets is not None and not plane.staged:
+        raise ValueError(
+            f"scan plane {plane.name!r} is not staged; per-stage survivor "
+            "budgets need a cascade backend (scan_impl='cascade')")
     if plane.kind == scanplane.SELECT:
         return select_probed(index, q, gids, envelope_frac, qeff,
                              width=width, runner=plane.runner,
+                             budgets=budgets if plane.staged else None,
                              extra_mask=extra_mask, tenant_mask=tenant_mask,
                              tenant_ix=tenant_ix)
     return scan_probed(index, q, gids, envelope_frac, qeff,
@@ -183,22 +198,25 @@ def candidate_stage(index: HNTLIndex, q: jax.Array, gids: jax.Array, *,
 @functools.partial(
     jax.jit,
     static_argnames=("nprobe", "pool", "topk", "mode", "envelope_frac",
-                     "qeff", "scan_impl"))
+                     "qeff", "scan_impl", "budgets"))
 def search(index: HNTLIndex, q: jax.Array, *, nprobe: int, pool: int,
            topk: int, mode: str = "B", envelope_frac: float = 0.25,
            qeff: int = 8191, scan_impl: Optional[str] = None,
+           budgets: Optional[tuple] = None,
            extra_mask: Optional[jax.Array] = None) -> SearchResult:
     """Full HNTL search.  mode='A' self-contained, mode='B' tiered re-rank.
 
     scan_impl: ScanPlane backend name (see ``core.scanplane``); None=auto.
+    budgets: (b1, b2) per-stage survivor budgets for cascade backends.
     Pruned result slots (filtered, padding, pool exhausted) return id -1 —
     the same ``dist >= BIG / 2`` convention as the stacked planes.
     """
+    check_budgets(budgets, topk)
     gids, _ = routing.route(index.routing, q, nprobe)
     dists, ids = candidate_stage(
         index, q, gids, envelope_frac=envelope_frac, qeff=qeff,
         width=min(max(pool, topk), nprobe * index.grains.cap),
-        scan_impl=scan_impl, extra_mask=extra_mask)
+        scan_impl=scan_impl, budgets=budgets, extra_mask=extra_mask)
 
     if mode == "A":
         neg_d, pos = jax.lax.top_k(-dists, topk)
@@ -301,12 +319,13 @@ def _candidate_epilogue(dists, rows, q, raw, *, pool: int, topk: int,
 @functools.partial(
     jax.jit,
     static_argnames=("nprobe", "pool", "topk", "mode", "envelope_frac",
-                     "qeff", "scan_impl", "route_mode", "seg_shape",
-                     "translate"))
+                     "qeff", "scan_impl", "budgets", "route_mode",
+                     "seg_shape", "translate"))
 def search_stacked(stacked: StackedSegments, q: jax.Array, *, nprobe: int,
                    pool: int, topk: int, mode: str = "B",
                    envelope_frac: float = 0.25, qeff: int = 8191,
                    scan_impl: Optional[str] = None,
+                   budgets: Optional[tuple] = None,
                    route_mode: str = "global",
                    seg_shape: Optional[tuple] = None, translate: bool = True,
                    tag_mask: Optional[jax.Array] = None,
@@ -337,6 +356,7 @@ def search_stacked(stacked: StackedSegments, q: jax.Array, *, nprobe: int,
     only its tenant's rows, with per-query routing pushdown, in the same
     single dispatch.
     """
+    check_budgets(budgets, topk)
     index = stacked.index
     extra, grain_ok = _mixed_recall_mask(index.grains, tag_mask, ts_range,
                                          live=stacked.live)
@@ -354,8 +374,8 @@ def search_stacked(stacked: StackedSegments, q: jax.Array, *, nprobe: int,
         gids, _ = routing.route(index.routing, q, nprobe, grain_mask=gmask)
     dists, rows = candidate_stage(
         index, q, gids, envelope_frac=envelope_frac, qeff=qeff,
-        width=max(pool, topk), scan_impl=scan_impl, extra_mask=extra,
-        tenant_mask=tenant_live, tenant_ix=tenant_ix)
+        width=max(pool, topk), scan_impl=scan_impl, budgets=budgets,
+        extra_mask=extra, tenant_mask=tenant_live, tenant_ix=tenant_ix)
 
     # Mode B: merged candidate pool -> exact f32 re-rank over the fused
     # warm tier (single gather into the concatenated raw array).
@@ -382,13 +402,14 @@ def _spec_tree(tree, spec):
     jax.jit,
     static_argnames=("mesh", "grain_axis", "batch_axis", "nprobe", "pool",
                      "topk", "mode", "envelope_frac", "qeff", "scan_impl",
-                     "translate"))
+                     "budgets", "translate"))
 def search_stacked_sharded(plane: ShardedStackedSegments, q: jax.Array, *,
                            mesh, grain_axis: str = "model",
                            batch_axis: Optional[str] = None, nprobe: int,
                            pool: int, topk: int, mode: str = "B",
                            envelope_frac: float = 0.25, qeff: int = 8191,
                            scan_impl: Optional[str] = None,
+                           budgets: Optional[tuple] = None,
                            translate: bool = True,
                            tag_mask: Optional[jax.Array] = None,
                            ts_range: Optional[tuple] = None,
@@ -451,6 +472,9 @@ def search_stacked_sharded(plane: ShardedStackedSegments, q: jax.Array, *,
     pool_eff = (min(max(pool, topk), slots) if mode == "B"
                 else max(1, min(pool, slots)))
     k_local = min(topk, pool_eff)
+    # budgets are per-shard knobs like nprobe/pool: the final stage must be
+    # able to fill each shard's wire contribution, not the gathered width
+    check_budgets(budgets, k_local)
     k_final = min(topk, n_shards * k_local)
     assert mode == "A" or plane.index.raw is not None, \
         "in-jit Mode B needs the warm tier; cold stores re-rank on host"
@@ -464,7 +488,8 @@ def search_stacked_sharded(plane: ShardedStackedSegments, q: jax.Array, *,
         dists, rows = candidate_stage(
             index, qv, gids, envelope_frac=envelope_frac, qeff=qeff,
             width=max(pool_eff, k_local), scan_impl=scan_impl,
-            extra_mask=extra, tenant_mask=tliv, tenant_ix=tix)
+            budgets=budgets, extra_mask=extra, tenant_mask=tliv,
+            tenant_ix=tix)
 
         def local_ids(rows_k, d_k):
             ok = jnp.logical_and(rows_k >= 0, d_k < BIG / 2)

@@ -15,6 +15,11 @@ import jax.numpy as jnp
 
 INT16_MAX = 32767
 UINT16_MAX = 65535
+# Mixed-precision coordinate tiers (density-aware bit allocation): easy
+# grains quantize to the signed-nibble range, hard grains to int8.  Both are
+# far inside the int32-exactness bound, so the scan math never changes.
+INT4_QMAX = 7
+INT8_QMAX = 127
 
 
 def fit_scale(z: jax.Array, mask: jax.Array, qmax: int = INT16_MAX,
@@ -83,5 +88,56 @@ def envelope_keep(z_q: jax.Array, scale: jax.Array, frac: float,
     """Envelope filter verdict: True = keep grain, False = prune.
 
     z_q: the *query's* float coords in this grain's tangent frame.
+    ``qmax`` may be a broadcastable array (per-grain mixed precision).
     """
     return saturation_fraction(z_q, scale, qmax) <= frac
+
+
+# ---------------------------------------------------------------------------
+# Density-aware mixed precision: per-grain width policy + int4 nibble packing
+# ---------------------------------------------------------------------------
+
+
+def assign_grain_qmax(captured: jax.Array, live: jax.Array, *,
+                      captured_min: float, min_rows: int,
+                      hard_qmax: int = INT8_QMAX) -> jax.Array:
+    """Per-grain coordinate quantization magnitude from density signals.
+
+    A grain is "easy" — packs to int4 (qmax=7) — iff its tangent frame
+    captures at least ``captured_min`` of member variance AND it holds at
+    least ``min_rows`` live rows; everything else keeps ``hard_qmax``
+    (int8).  captured [G] f32 in [0, 1], live [G] integer counts.
+    """
+    easy = jnp.logical_and(captured >= captured_min, live >= min_rows)
+    return jnp.where(easy, INT4_QMAX, hard_qmax).astype(jnp.int32)
+
+
+def pack_int4(q: jax.Array) -> jax.Array:
+    """Pack values two signed nibbles per byte along the last axis.
+
+    Input is rounded and clipped to the nibble range [-8, 7] first, so
+    pack∘unpack is exactly the clip-to-[-8, 7] identity.  NaNs (garbage on
+    padded rows) pack as 0 — mirroring the NaN-exclusion discipline of
+    :func:`fit_scale`/:func:`fit_res_scale`, padded-row garbage can never
+    leak into a real nibble.  Odd-length axes are zero-padded.
+    """
+    q = jnp.asarray(q)
+    if jnp.issubdtype(q.dtype, jnp.floating):
+        q = jnp.round(jnp.where(jnp.isnan(q), 0.0, q))
+    q = jnp.clip(q, -8, 7).astype(jnp.int8)
+    if q.shape[-1] % 2:
+        q = jnp.pad(q, [(0, 0)] * (q.ndim - 1) + [(0, 1)])
+    lo = (q[..., 0::2] & 0x0F).astype(jnp.uint8)
+    hi = (q[..., 1::2] & 0x0F).astype(jnp.uint8)
+    return lo | (hi << 4)
+
+
+def unpack_int4(packed: jax.Array, n: int) -> jax.Array:
+    """Inverse of :func:`pack_int4`: [..., ceil(n/2)] u8 -> [..., n] i8."""
+    p = jnp.asarray(packed, jnp.uint8)
+    lo = (p & 0x0F).astype(jnp.int8)
+    hi = ((p >> 4) & 0x0F).astype(jnp.int8)
+    lo = jnp.where(lo > 7, lo - 16, lo).astype(jnp.int8)
+    hi = jnp.where(hi > 7, hi - 16, hi).astype(jnp.int8)
+    out = jnp.stack([lo, hi], axis=-1).reshape(p.shape[:-1] + (-1,))
+    return out[..., :n]

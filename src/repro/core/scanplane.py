@@ -20,6 +20,11 @@ Registered backends:
   "fused"       select   scalar-prefetch fused scan→select Pallas kernel
                          (compiled on TPU, interpret elsewhere)
   "fused_ref"   select   jnp two-stage-select oracle of the fused kernel
+  "cascade"     select   mixed-precision 3-stage cascade (sketch filter →
+                         quantized re-price → exact re-rank), staged:
+                         accepts budgets=(b1, b2); stage 1 on the fused
+                         kernel
+  "cascade_ref" select   the cascade with stage 1 on the jnp oracle
   "auto"        —        "fused" on TPU, "ref" elsewhere
 
 Every planner entry point and ``VectorStore.search`` accept the backend by
@@ -36,7 +41,7 @@ from typing import Callable, Optional
 
 import jax
 
-from . import scan
+from . import cascade, scan
 from ..kernels import ops as kernel_ops
 from ..kernels.fused_select import fused_scan_select
 
@@ -54,21 +59,27 @@ class ScanPlane:
       select: ``fused_scan_select``-compatible (gids, zq, rq, keep, coords,
         res, mask, rows, scale, res_scale, [sq, sketch, sketch_scale], *,
         width) -> (dists [Q, width], rows [Q, width]).
+
+    ``staged`` backends additionally accept ``budgets=(b1, b2)`` per-stage
+    survivor budgets (the mixed-precision cascade); passing budgets to a
+    non-staged backend is a validation error.
     """
 
     name: str
     kind: str
     runner: Callable
     doc: str = ""
+    staged: bool = False
 
 
 _REGISTRY: dict = {}
 
 
 def register_scan_plane(name: str, kind: str, runner: Callable,
-                        doc: str = "") -> ScanPlane:
+                        doc: str = "", staged: bool = False) -> ScanPlane:
     assert kind in (GATHER, SELECT), kind
-    plane = ScanPlane(name=name, kind=kind, runner=runner, doc=doc)
+    plane = ScanPlane(name=name, kind=kind, runner=runner, doc=doc,
+                      staged=staged)
     _REGISTRY[name] = plane
     return plane
 
@@ -111,3 +122,13 @@ register_scan_plane(
     "fused_ref", SELECT, scan.blocksoa_select_ref,
     "jnp two-stage-select oracle of the fused kernel (CPU oracle for the "
     "select contract)")
+register_scan_plane(
+    "cascade", SELECT, cascade.make_cascade_runner("kernel"),
+    "mixed-precision cascade: §2.2 sketch/residual filter (stage 1, the "
+    "fused kernel on a zero-k panel) → quantized tangent-coord re-price of "
+    "the b1 survivors (stage 2) → exact raw re-rank (stage 3, the shared "
+    "epilogue); accepts budgets=(b1, b2)", staged=True)
+register_scan_plane(
+    "cascade_ref", SELECT, cascade.make_cascade_runner("ref"),
+    "the cascade with stage 1 on the jnp select oracle (fast CPU parity "
+    "path for the staged contract)", staged=True)

@@ -281,6 +281,11 @@ def stack_segments(segments: Sequence["Segment"], *,
     d = g0.mu.shape[1]
     has_sketch = g0.sketch is not None
     warm = all(s.index.raw is not None for s in segs)
+    # Per-grain mixed-precision widths fuse like any grain-axis leaf.  A
+    # fixed-width segment in a density stack (off-cfg corner: one store's
+    # cfg is uniform) gets its effective qmax spelled out explicitly.
+    any_qmax = any(s.index.grains.qmaxg is not None for s in segs)
+    qeff_fb = index_mod.int32_safe_qmax(k)
 
     offsets = np.zeros(s_n + 1, np.int64)
     np.cumsum([s.n for s in segs], out=offsets[1:])
@@ -311,6 +316,10 @@ def stack_segments(segments: Sequence["Segment"], *,
         ts = (np.asarray(g.ts) if g.ts is not None
               else np.zeros((g.n_grains, g.cap), np.float32))
         acc["ts"].append(_pad_to(ts, (gmax, capmax), 0.0))
+        if any_qmax:
+            qm = (np.asarray(g.qmaxg, np.int32) if g.qmaxg is not None
+                  else np.full(g.n_grains, qeff_fb, np.int32))
+            acc["qmaxg"].append(_pad_to(qm, (gmax,), 1))
         if has_sketch:
             s_dim = g.sketch.shape[1]
             acc["sketch"].append(_pad_to(np.asarray(g.sketch),
@@ -333,7 +342,8 @@ def stack_segments(segments: Sequence["Segment"], *,
         mu=fuse("mu"), scale=fuse("scale"), res_scale=fuse("res_scale"),
         sketch_basis=fuse("sketch_basis") if has_sketch else None,
         sketch_scale=fuse("sketch_scale") if has_sketch else None,
-        tags=fuse("tags"), ts=fuse("ts"))
+        tags=fuse("tags"), ts=fuse("ts"),
+        qmaxg=fuse("qmaxg") if any_qmax else None)
     index = HNTLIndex(
         routing=RoutingPlane(centroids=grains.mu, sizes=fuse("sizes")),
         grains=grains,
@@ -417,7 +427,8 @@ def shard_segments(segments: Sequence["Segment"], n_shards: int):
         res_scale=padg(g.res_scale, 1.0),
         sketch_basis=padg(g.sketch_basis, 0.0) if has_sketch else None,
         sketch_scale=padg(g.sketch_scale, 1.0) if has_sketch else None,
-        tags=padg(g.tags, 0), ts=padg(g.ts, 0.0))
+        tags=padg(g.tags, 0), ts=padg(g.ts, 0.0),
+        qmaxg=padg(g.qmaxg, 1) if g.qmaxg is not None else None)
     index = HNTLIndex(
         routing=RoutingPlane(centroids=grains.mu,
                              sizes=padg(stacked.index.routing.sizes, 0)),
@@ -1099,6 +1110,7 @@ class VectorStore:
                ts_range: Optional[tuple] = None,
                manifest: Optional[Manifest] = None,
                scan_impl: Optional[str] = None,
+               budgets: Optional[tuple] = None,
                nprobe: Optional[int] = None, pool: Optional[int] = None,
                fused: bool = True, route_mode: str = "global",
                mesh=None, grain_axis: str = "model",
@@ -1118,6 +1130,11 @@ class VectorStore:
           "fused_ref" | "auto" (None = auto).  "fused"/"fused_ref" run the
           streaming scan→select pipeline — candidate state O(Q·pool), no
           probed-panel gather — on every plane (fused, sharded, looped).
+        budgets: (b1, b2) per-stage survivor budgets for staged (cascade)
+          backends: stage 1 keeps b1 probed slots, stage 2 keeps b2 for the
+          exact re-rank.  Validated host-side (b1 >= b2 >= topk); needs a
+          staged scan_impl and the fused plane.  On a mesh the budgets are
+          per-shard knobs, like nprobe/pool.
         nprobe / pool: override cfg.nprobe / cfg.pool for the fused plane
           (e.g. exhaustive probing for parity checks).
         route_mode: "global" (top-P over all segments' grains at once) or
@@ -1138,6 +1155,13 @@ class VectorStore:
         q = np.asarray(q, np.float32)
         if q.ndim == 1:
             q = q[None]
+        if budgets is not None:
+            from .cascade import check_budgets
+            check_budgets(budgets, topk)
+            if not fused:
+                raise ValueError(
+                    "budgets= needs the fused search plane; the legacy "
+                    "looped path has no staged candidate stage")
         if not fused:
             if mesh is not None:
                 raise ValueError("mesh= requires the fused search plane")
@@ -1154,15 +1178,15 @@ class VectorStore:
                 ids_s, d_s = self._search_segments_sharded(
                     q, man, topk=topk, mode=mode, tag_mask=tag_mask,
                     ts_range=ts_range, scan_impl=scan_impl,
-                    nprobe=nprobe, pool=pool, mesh=mesh,
+                    budgets=budgets, nprobe=nprobe, pool=pool, mesh=mesh,
                     grain_axis=grain_axis,
                     shard_queries=shard_queries, now=now)
             else:
                 ids_s, d_s = self._search_segments_fused(
                     q, man, topk=topk, mode=mode, tag_mask=tag_mask,
                     ts_range=ts_range, scan_impl=scan_impl,
-                    nprobe=nprobe, pool=pool, route_mode=route_mode,
-                    now=now)
+                    budgets=budgets, nprobe=nprobe, pool=pool,
+                    route_mode=route_mode, now=now)
             all_ids.append(ids_s)
             all_d.append(d_s)
         return self._merge_with_memtable(q, man, all_ids, all_d, topk,
@@ -1205,8 +1229,8 @@ class VectorStore:
 
     def _search_segments_fused(self, q, man, *, topk, mode, tag_mask,
                                ts_range, scan_impl, nprobe, pool,
-                               route_mode, now, tenant_live=None,
-                               tenant_ix=None):
+                               route_mode, now, budgets=None,
+                               tenant_live=None, tenant_ix=None):
         """One jitted search over the stacked plane.  Returns numpy
         (global_ids [Q, k], dists [Q, k]).
 
@@ -1226,8 +1250,9 @@ class VectorStore:
         tr = ((jnp.float32(ts_range[0]), jnp.float32(ts_range[1]))
               if ts_range is not None else None)
         kw = dict(nprobe=probe, envelope_frac=self.cfg.envelope_frac,
-                  qeff=qeff, scan_impl=scan_impl, route_mode=route_mode,
-                  seg_shape=seg_shape, tag_mask=tm, ts_range=tr)
+                  qeff=qeff, scan_impl=scan_impl, budgets=budgets,
+                  route_mode=route_mode, seg_shape=seg_shape, tag_mask=tm,
+                  ts_range=tr)
         if tenant_live is not None:
             kw["tenant_live"] = jnp.asarray(tenant_live)
             kw["tenant_ix"] = jnp.asarray(tenant_ix, jnp.int32)
@@ -1237,8 +1262,12 @@ class VectorStore:
             # Cold tier: one jitted approximate scan over the whole stack,
             # then ONE merged-pool exact re-rank from the per-segment memmaps
             # (host gather — the mmap tier is not addressable from jit).
+            # Stage budgets cap the useful pool at b2, so the candidate
+            # width the host re-rank reads shrinks with it.
+            pe = (pool_eff if budgets is None
+                  else min(pool_eff, int(budgets[1])))
             res = planner.search_stacked(stacked, qj, pool=pool_eff,
-                                         topk=pool_eff, mode="A",
+                                         topk=pe, mode="A",
                                          translate=False, **kw)
             rows = np.asarray(res.ids)
             ok = (rows >= 0) & (np.asarray(res.dists) < BIG / 2)
@@ -1303,7 +1332,8 @@ class VectorStore:
     def _search_segments_sharded(self, q, man, *, topk, mode, tag_mask,
                                  ts_range, scan_impl, nprobe, pool, mesh,
                                  grain_axis, shard_queries, now,
-                                 tenant_live=None, tenant_ix=None):
+                                 budgets=None, tenant_live=None,
+                                 tenant_ix=None):
         """Distributed fused search: shard-local route/scan/pool/re-rank and
         one all-gather merge collective.  Returns numpy (global_ids, dists).
 
@@ -1328,8 +1358,8 @@ class VectorStore:
                   batch_axis=self._batch_axis(mesh, grain_axis,
                                               shard_queries, q.shape[0]),
                   nprobe=probe, envelope_frac=self.cfg.envelope_frac,
-                  qeff=qeff, scan_impl=scan_impl, tag_mask=tm,
-                  ts_range=tr)
+                  qeff=qeff, scan_impl=scan_impl, budgets=budgets,
+                  tag_mask=tm, ts_range=tr)
         if tenant_live is not None:
             kw["tenant_live"] = shd.shard_plane_field(
                 np.asarray(tenant_live), entry["rules"], "tenant_live",
@@ -1342,8 +1372,11 @@ class VectorStore:
             # per-shard pools (topk = n_shards * pool keeps every shard's
             # pool in the gathered result), host re-rank from the memmaps
             # after translating permuted rows back to original flat rows.
+            # Stage budgets cap each shard's useful pool at b2.
+            pe = (pool_eff if budgets is None
+                  else min(pool_eff, int(budgets[1])))
             res = planner.search_stacked_sharded(
-                plane, qj, pool=pool_eff, topk=n_shards * pool_eff,
+                plane, qj, pool=pe, topk=n_shards * pe,
                 mode="A", translate=False, **kw)
             rows_perm = np.asarray(res.ids)
             ok = (rows_perm >= 0) & (np.asarray(res.dists) < BIG / 2)

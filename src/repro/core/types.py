@@ -47,6 +47,17 @@ class HNTLConfig:
     scale_mult: float = 1.25
     kmeans_iters: int = 25
     seed: int = 0
+    # Density-aware mixed-precision bit allocation ("fixed" = coord_bits
+    # everywhere, the paper baseline; "density" = per-grain int4/int8 picked
+    # from the build/refit variance-capture stats and recorded in
+    # GrainStore.qmaxg so maintain() can re-tier as density drifts).
+    bit_alloc: str = "fixed"
+    # A grain packs to int4 iff its tangent frame captures at least this
+    # fraction of member variance AND it holds at least int4_min_rows live
+    # rows (thin grains keep int8 — their fit statistics are too noisy to
+    # trust a 3-bit magnitude).
+    int4_captured_min: float = 0.85
+    int4_min_rows: int = 8
 
     @property
     def qmax(self) -> int:
@@ -108,6 +119,12 @@ class GrainStore:
     sketch_scale: Optional[jax.Array]  # [G] f32 or None
     tags: Optional[jax.Array] = None   # [G, cap] u32 — mixed-recall symbolic tags
     ts: Optional[jax.Array] = None     # [G, cap] f32 — mixed-recall timestamps
+    # Density-aware mixed precision: per-grain coordinate quantization
+    # magnitude (7 = int4 nibble tier, 127 = int8, int32_safe_qmax(k) =
+    # full int16).  None = the cfg-wide fixed qeff.  The device panel view
+    # stays widened int16 either way (fixed-shape arrays can't be ragged);
+    # the nibble-packed representation lives in layout.pack_coords_blob.
+    qmaxg: Optional[jax.Array] = None  # [G] i32 or None
 
     @property
     def n_grains(self) -> int:
@@ -228,7 +245,8 @@ SEARCH_PLANE_AXES = {
     "coords": "grains", "res": "grains", "sketch": "grains", "ids": "grains",
     "valid": "grains", "basis": "grains", "mu": "grains", "scale": "grains",
     "res_scale": "grains", "sketch_basis": "grains", "sketch_scale": "grains",
-    "tags": "grains", "ts": "grains", "centroids": "grains", "sizes": "grains",
+    "tags": "grains", "ts": "grains", "qmaxg": "grains",
+    "centroids": "grains", "sizes": "grains",
     # mutation-epoch liveness mask — one entry per (grain, slot)
     "live": "grains",
     # multi-tenant visibility stack [T, G, cap] — grain axis is dim 1

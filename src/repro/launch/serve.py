@@ -59,6 +59,10 @@ def main(argv=None):
                     help="ScanPlane backend for retrieval (default auto — "
                          "the fused scan→select kernel on TPU, the jnp "
                          "reference elsewhere)")
+    ap.add_argument("--budgets", default=None, metavar="B1,B2",
+                    help="per-stage survivor budgets for staged backends "
+                         "(--scan-impl cascade): stage 1 keeps B1 probed "
+                         "slots, stage 2 keeps B2 for the exact re-rank")
     ap.add_argument("--tenants", type=int, default=0,
                     help="serve the memory multi-tenant: N namespaces with "
                          "private writes over the shared corpus, retrievals "
@@ -66,6 +70,13 @@ def main(argv=None):
     ap.add_argument("--tenant-budget", type=int, default=256,
                     help="per-tenant memtable row budget (overflow seals)")
     args = ap.parse_args(argv)
+    budgets = None
+    if args.budgets is not None:
+        try:
+            budgets = tuple(int(v) for v in args.budgets.split(","))
+        except ValueError:
+            raise SystemExit(f"--budgets expects B1,B2 ints, "
+                             f"got {args.budgets!r}")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     assert cfg.family != "encdec", "use examples/serve_whisper for enc-dec"
@@ -85,7 +96,7 @@ def main(argv=None):
                          max_len=args.max_len, temperature=args.temperature,
                          seed=args.seed, memory=memory,
                          memory_mesh=memory_mesh, scan_impl=args.scan_impl,
-                         tenants=tenants)
+                         budgets=budgets, tenants=tenants)
     if memory is not None:
         res = engine.retrieve(demo_q, topk=4, mode="B")
         plane = ("sharded x%d" % args.retrieval_shards

@@ -36,13 +36,15 @@ class ServeEngine:
     # class-level defaults: the memory sidecar API works on partially
     # constructed engines (tests build them with __new__, no model needed)
     scan_impl: Optional[str] = None
+    budgets: Optional[tuple] = None
     tenants = None                  # Optional[tenancy.TenantRegistry]
     memory_mesh = None
 
     def __init__(self, model, params, *, n_slots: int = 4,
                  max_len: int = 512, temperature: float = 0.0, seed: int = 0,
                  memory: Optional[VectorStore] = None, memory_mesh=None,
-                 scan_impl: Optional[str] = None, tenants=None):
+                 scan_impl: Optional[str] = None,
+                 budgets: Optional[tuple] = None, tenants=None):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -61,8 +63,12 @@ class ServeEngine:
         # search plane — grain-sharded index, one all-gather top-k merge
         self.memory_mesh = memory_mesh
         # ScanPlane backend for every retrieve() (core.scanplane registry);
-        # None = auto (fused scan→select kernel on TPU, jnp ref elsewhere)
+        # None = auto (fused scan→select kernel on TPU, jnp ref elsewhere).
+        # budgets = (b1, b2) per-stage survivor budgets when the backend is
+        # staged (scan_impl="cascade"): stage 1 keeps b1 slots, stage 2
+        # keeps b2 for the exact re-rank (validated against each topk).
         self.scan_impl = scan_impl
+        self.budgets = budgets
         self.rng = np.random.default_rng(seed)
         self.caches = model.init_cache(n_slots, max_len)
         self.pos = np.zeros(n_slots, np.int64)        # next position per slot
@@ -207,14 +213,16 @@ class ServeEngine:
                 for i in range(q.shape[0])]
             tenancy.coalesced_retrieve(self.tenants, reqs,
                                        mesh=self.memory_mesh,
-                                       scan_impl=self.scan_impl)
+                                       scan_impl=self.scan_impl,
+                                       budgets=self.budgets)
             return SearchResult(
                 ids=jnp.stack([r.result.ids for r in reqs]),
                 dists=jnp.stack([r.result.dists for r in reqs]))
         return self.memory.search(q, topk=topk, mode=mode,
                                   tag_mask=tag_mask, ts_range=ts_range,
                                   mesh=self.memory_mesh,
-                                  scan_impl=self.scan_impl)
+                                  scan_impl=self.scan_impl,
+                                  budgets=self.budgets)
 
     def submit_retrieval(self, q_embed, *, tenant: str, topk: int = 4,
                          mode: str = "B", tag_mask: Optional[int] = None,
@@ -257,7 +265,8 @@ class ServeEngine:
         batch, self._retrieval_queue = queue[:n], queue[n:]
         return tenancy.coalesced_retrieve(self.tenants, batch,
                                           mesh=self.memory_mesh,
-                                          scan_impl=self.scan_impl, now=now)
+                                          scan_impl=self.scan_impl,
+                                          budgets=self.budgets, now=now)
 
     def _memory_for(self, tenant: Optional[str]) -> VectorStore:
         if tenant is None:

@@ -281,6 +281,7 @@ def coalesced_retrieve(registry: TenantRegistry,
                        requests: List[RetrievalRequest], *,
                        mesh=None, grain_axis: str = "model",
                        scan_impl: Optional[str] = None,
+                       budgets: Optional[tuple] = None,
                        nprobe: Optional[int] = None,
                        pool: Optional[int] = None,
                        now: Optional[float] = None
@@ -301,9 +302,17 @@ def coalesced_retrieve(registry: TenantRegistry,
     scan and finalized to [topk]; results land on ``req.result`` (ids [k],
     dists [k]) with ``req.done = True``.  Order of ``requests`` never
     affects any individual result (batch-window determinism).
+
+    ``budgets=(b1, b2)`` (staged scan_impl only, e.g. "cascade") applies
+    the cascade's per-stage survivor budgets to every group's dispatch;
+    validated against each group's topk.
     """
     base = registry.base
     now = base._clock() if now is None else now
+    if budgets is not None:
+        from ..core.cascade import check_budgets
+        for r in requests:
+            check_budgets(budgets, r.topk)
     groups: "OrderedDict[tuple, List[RetrievalRequest]]" = OrderedDict()
     for r in requests:
         groups.setdefault((r.mode, r.topk, r.tag_mask, r.ts_range),
@@ -323,7 +332,7 @@ def coalesced_retrieve(registry: TenantRegistry,
         _dispatch_group(registry, union, reqs, mans, mode=mode, topk=topk,
                         tag_mask=tag_mask, ts_range=ts_range, mesh=mesh,
                         grain_axis=grain_axis, scan_impl=scan_impl,
-                        nprobe=nprobe, pool=pool, now=now)
+                        budgets=budgets, nprobe=nprobe, pool=pool, now=now)
     return requests
 
 
@@ -331,7 +340,7 @@ def _dispatch_group(registry: TenantRegistry, union: tuple,
                     reqs: List[RetrievalRequest],
                     mans: Dict[str, Manifest], *, mode: str, topk: int,
                     tag_mask, ts_range, mesh, grain_axis: str,
-                    scan_impl, nprobe, pool, now: float) -> None:
+                    scan_impl, budgets, nprobe, pool, now: float) -> None:
     base = registry.base
     names: List[str] = []
     name_ix: Dict[str, int] = {}
@@ -352,8 +361,8 @@ def _dispatch_group(registry: TenantRegistry, union: tuple,
         tix_pad = np.zeros(qp, np.int64)
         tix_pad[:len(reqs)] = tix
         kw = dict(topk=topk, mode=mode, tag_mask=tag_mask,
-                  ts_range=ts_range, scan_impl=scan_impl, nprobe=nprobe,
-                  pool=pool, now=now, tenant_ix=tix_pad)
+                  ts_range=ts_range, scan_impl=scan_impl, budgets=budgets,
+                  nprobe=nprobe, pool=pool, now=now, tenant_ix=tix_pad)
         if mesh is not None:
             entry = base._sharded_for(union, mesh, grain_axis, scan_impl)
             tl = np.stack([registry._tenant_bitmap(entry, union, mans[n],

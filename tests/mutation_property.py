@@ -33,14 +33,22 @@ OPS = ("add", "delete", "upsert", "seal", "compact", "maintain")
 TENANT_OPS = ("add", "delete", "upsert", "seal", "evict", "retrieve")
 
 
-def _cfg():
+def _cfg(bit_alloc: str = "fixed"):
     return HNTLConfig(d=D, k=4, s=0, n_grains=2, nprobe=2, pool=64,
-                      block=16, envelope_frac=1.0)
+                      block=16, envelope_frac=1.0, bit_alloc=bit_alloc)
 
 
-def mutation_interleaving_check(ops, seed: int, cold: bool, mesh=None):
+def mutation_interleaving_check(ops, seed: int, cold: bool, mesh=None,
+                                scan_impl=None, budgeted: bool = False,
+                                bit_alloc: str = "fixed"):
+    """scan_impl/budgeted/bit_alloc: cascade recall-by-construction twin —
+    with a staged backend and ``budgets=(pool, pool)`` (b1 >= every live
+    slot, so stage 1 prunes nothing real), the cascade's final stage must
+    STILL equal the brute-force oracle through any mutation interleaving;
+    ``bit_alloc="density"`` runs the same property over a mixed
+    int4/int8-width store (incl. maintenance re-tiering)."""
     rng = np.random.default_rng(seed)
-    store = VectorStore(_cfg(), seal_threshold=64, cold_tier=cold,
+    store = VectorStore(_cfg(bit_alloc), seal_threshold=64, cold_tier=cold,
                         clock=lambda: 0.0)
     model = {}                    # gid -> (vec, tag, ts, expire_at)
 
@@ -94,7 +102,9 @@ def mutation_interleaving_check(ops, seed: int, cold: bool, mesh=None):
 
     total_grains = sum(s.index.grains.n_grains for s in store._segments)
     kw = dict(topk=5, mode="B", now=NOW, nprobe=max(total_grains, 1),
-              pool=max(2 * store.n_vectors, 1))
+              pool=max(2 * store.n_vectors, 1), scan_impl=scan_impl)
+    if budgeted:
+        kw["budgets"] = (kw["pool"], kw["pool"])
     if mesh is not None:
         kw["mesh"] = mesh
     for filt in ({}, {"tag_mask": 2}, {"ts_range": (2.0, 8.0)}):
