@@ -1,0 +1,33 @@
+"""hntlint: AST-based jit-hygiene static analysis for the HNTL repo.
+
+The repo's hardest bugs have all been *hygiene* bugs the test suite can't
+see until they bite: module-level ``jnp`` constants that leak tracers,
+inline ``3e38`` sentinel copies drifting from ``types.BIG``, host
+materialization sneaking onto jit-reachable paths.  This package is the
+machine-checked gate for those invariants:
+
+    PYTHONPATH=src python -m repro.analysis src tests
+
+Rules (see :mod:`repro.analysis.rules` for the full contract of each):
+
+  H001  no module-level jnp array constants (tracer-leak hazard)
+  H002  jit/shard_map static args must be hashable literals
+  H003  no Python if/while/assert on tracer values in jit-reachable code
+  H004  no inline 3e38-magnitude sentinels outside core/types.py
+  H005  no np.asarray/.item()/float() host materialization in jit code
+  H006  pytree dataclasses registered + SEARCH_PLANE_AXES <-> leaf parity
+  H007  .at[...].set(...) result discarded (in-place illusion)
+
+Suppression: a ``# hntlint: ok H004`` comment on the flagged line
+suppresses that rule there (``# hntlint: ok`` suppresses every rule);
+deliberate findings that need to survive without touching the source are
+grandfathered in ``baseline.json`` next to this package, keyed on stable
+(rule, path, key) triples — never line numbers.
+"""
+from .engine import Finding, Project, SourceFile, analyze_paths, collect_files
+from .baseline import load_baseline, split_by_baseline
+
+__all__ = [
+    "Finding", "Project", "SourceFile", "analyze_paths", "collect_files",
+    "load_baseline", "split_by_baseline",
+]

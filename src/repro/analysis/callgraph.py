@@ -1,0 +1,280 @@
+"""Jit-reachability call graph for H003/H005.
+
+Roots are the functions that *enter* jit: anything decorated with
+``jax.jit`` / ``functools.partial(jax.jit, ...)`` / ``shard_map``, plus
+every runner handed to ``register_scan_plane`` (the ScanPlane registry is
+how the kernels reach the planner without a direct call).  From the roots
+we walk *reference* edges, and nested ``def``s inherit reachability from
+their enclosing function (closures such as the cascade runner).
+
+Reference edges resolve through real import structure — never by bare
+string collision:
+
+- a bare ``Name`` that is not locally bound resolves to a same-file
+  function of that name, or through a ``from M import n`` binding to the
+  module-level ``n`` in M's file;
+- an ``Attribute`` chain (``scan.blocksoa_scan``, ``a.b.f``) resolves its
+  root through ``import``/``from``-aliases to a project module, then to
+  the module-level function — chains rooted at locals (``self.step``,
+  ``entry.get``) resolve to nothing.
+
+The result still over-approximates calls (a mention is an edge) but a
+local variable named ``step`` no longer drags an unrelated ``step``
+method into the jit-reachable set.  Methods are reachable only as
+jit-decorated roots themselves; the repo's data plane is module-level
+pure functions, so that bias is calibrated here.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple
+
+from .engine import Project, SourceFile, dotted_name
+
+JIT_NAMES = ("jit", "shard_map")
+
+
+@dataclasses.dataclass
+class FuncInfo:
+    path: str
+    qualname: str
+    name: str
+    node: ast.AST                 # FunctionDef | AsyncFunctionDef
+    is_method: bool               # defined directly inside a ClassDef
+    jit_root: bool = False
+    reachable: bool = False
+    children: List["FuncInfo"] = dataclasses.field(default_factory=list)
+    name_refs: Set[str] = dataclasses.field(default_factory=set)
+    attr_chains: Set[str] = dataclasses.field(default_factory=set)
+    bound: Set[str] = dataclasses.field(default_factory=set)
+
+
+class CallGraph:
+    def __init__(self, funcs: List[FuncInfo]):
+        self.funcs = funcs
+        self._by_node = {id(f.node): f for f in funcs}
+
+    def reachable_funcs(self) -> List[FuncInfo]:
+        return [f for f in self.funcs if f.reachable]
+
+    def lookup(self, node: ast.AST) -> Optional[FuncInfo]:
+        return self._by_node.get(id(node))
+
+
+def module_of(path: str) -> str:
+    """``src/repro/core/scan.py`` -> ``repro.core.scan``."""
+    p = path[:-3] if path.endswith(".py") else path
+    if p.endswith("/__init__"):
+        p = p[: -len("/__init__")]
+    parts = p.split("/")
+    if parts and parts[0] == "src":
+        parts = parts[1:]
+    return ".".join(parts)
+
+
+def _is_jit_expr(node: ast.AST) -> bool:
+    """True for ``jax.jit`` / ``jit`` / ``shard_map`` chains."""
+    dn = dotted_name(node)
+    return dn is not None and dn.split(".")[-1] in JIT_NAMES
+
+
+def _is_jit_decorator(dec: ast.AST) -> bool:
+    # @jax.jit | @jit
+    if _is_jit_expr(dec):
+        return True
+    if isinstance(dec, ast.Call):
+        # @jax.jit(...) | @partial(jax.jit, ...) | @shard_map(...)
+        if _is_jit_expr(dec.func):
+            return True
+        fn = dotted_name(dec.func)
+        if fn is not None and fn.split(".")[-1] == "partial" and dec.args:
+            return _is_jit_expr(dec.args[0])
+    return False
+
+
+def _registered_runner_names(sf: SourceFile) -> Set[str]:
+    """Simple names of runners handed to register_scan_plane(...).
+
+    ``register_scan_plane("x", KIND, runner, ...)``: the runner argument
+    may be a Name (``fused_scan_select``), a module Attribute
+    (``scan.blocksoa_scan``) or a factory Call
+    (``cascade.make_cascade_runner("kernel")``) — for a factory the
+    *factory* becomes the root and its closure is reached via the
+    nested-def edge."""
+    out: Set[str] = set()
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = dotted_name(node.func)
+        if fn is None or fn.split(".")[-1] != "register_scan_plane":
+            continue
+        if len(node.args) < 3:
+            continue
+        runner = node.args[2]
+        if isinstance(runner, ast.Call):
+            runner = runner.func
+        dn = dotted_name(runner)
+        if dn is not None:
+            out.add(dn.split(".")[-1])
+    return out
+
+
+def _jit_wrapped_names(sf: SourceFile) -> Set[str]:
+    """Names of functions wrapped by a ``jax.jit(fn)`` / ``shard_map(fn)``
+    *call* (vs decorator) — e.g. ``self.train_step = jax.jit(step_fn)``.
+    Matched by simple name like registry runners; a closure named
+    ``step_fn`` nested in its factory becomes a root that way."""
+    out: Set[str] = set()
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.Call) and _is_jit_expr(node.func) \
+                and node.args:
+            dn = dotted_name(node.args[0])
+            if dn is not None:
+                out.add(dn.split(".")[-1])
+    return out
+
+
+def _import_table(sf: SourceFile) -> Dict[str, str]:
+    """Local name -> dotted target (module, or module.symbol).
+
+    Handles absolute and relative imports; ``import a.b.c`` binds ``a``
+    and the full chain is resolved by prefix at lookup time."""
+    mod_parts = module_of(sf.path).split(".")
+    table: Dict[str, str] = {}
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.asname:
+                    table[a.asname] = a.name
+                else:
+                    table[a.name.split(".")[0]] = a.name.split(".")[0]
+        elif isinstance(node, ast.ImportFrom):
+            if node.level:
+                base = mod_parts[: len(mod_parts) - node.level]
+                prefix = ".".join(base + ([node.module] if node.module
+                                          else []))
+            else:
+                prefix = node.module or ""
+            for a in node.names:
+                local = a.asname or a.name
+                table[local] = f"{prefix}.{a.name}" if prefix else a.name
+    return table
+
+
+class _Collector(ast.NodeVisitor):
+    """Collect every function def with its nesting and identifier refs."""
+
+    def __init__(self, sf: SourceFile, funcs: List[FuncInfo]):
+        self.sf = sf
+        self.funcs = funcs
+        self.scope: List[str] = []
+        self.stack: List[FuncInfo] = []
+        self.class_depth_at: List[int] = []
+
+    def _visit_def(self, node) -> None:
+        qual = ".".join(self.scope + [node.name]) or node.name
+        in_class = bool(self.class_depth_at) and \
+            self.class_depth_at[-1] == len(self.scope)
+        fi = FuncInfo(path=self.sf.path, qualname=qual, name=node.name,
+                      node=node, is_method=in_class,
+                      jit_root=any(_is_jit_decorator(d)
+                                   for d in node.decorator_list))
+        args = node.args
+        for a in (list(args.posonlyargs) + list(args.args)
+                  + list(args.kwonlyargs)
+                  + [x for x in (args.vararg, args.kwarg) if x]):
+            fi.bound.add(a.arg)
+        if self.stack:
+            self.stack[-1].children.append(fi)
+        self.funcs.append(fi)
+        self.scope.append(node.name)
+        self.stack.append(fi)
+        for child in ast.iter_child_nodes(node):
+            self.visit(child)
+        self.stack.pop()
+        self.scope.pop()
+
+    visit_FunctionDef = _visit_def
+    visit_AsyncFunctionDef = _visit_def
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self.scope.append(node.name)
+        self.class_depth_at.append(len(self.scope))
+        for child in ast.iter_child_nodes(node):
+            self.visit(child)
+        self.class_depth_at.pop()
+        self.scope.pop()
+
+    def visit_Name(self, node: ast.Name) -> None:
+        if self.stack:
+            if isinstance(node.ctx, ast.Store):
+                self.stack[-1].bound.add(node.id)
+            else:
+                self.stack[-1].name_refs.add(node.id)
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        if self.stack:
+            dn = dotted_name(node)
+            if dn is not None:
+                self.stack[-1].attr_chains.add(dn)
+        self.generic_visit(node)
+
+
+def build(project: Project) -> CallGraph:
+    funcs: List[FuncInfo] = []
+    registered: Set[str] = set()
+    imports: Dict[str, Dict[str, str]] = {}
+    for sf in project.files:
+        _Collector(sf, funcs).visit(sf.tree)
+        registered |= _registered_runner_names(sf)
+        registered |= _jit_wrapped_names(sf)
+        imports[sf.path] = _import_table(sf)
+
+    # module-level (non-method) functions by (module, name); same-file
+    # functions (any nesting) by (path, name)
+    module_funcs: Dict[Tuple[str, str], List[FuncInfo]] = {}
+    file_funcs: Dict[Tuple[str, str], List[FuncInfo]] = {}
+    module_files = {module_of(sf.path) for sf in project.files}
+    for fi in funcs:
+        if not fi.is_method:
+            module_funcs.setdefault((module_of(fi.path), fi.name),
+                                    []).append(fi)
+            file_funcs.setdefault((fi.path, fi.name), []).append(fi)
+
+    def resolve(cur: FuncInfo) -> List[FuncInfo]:
+        table = imports[cur.path]
+        targets: List[FuncInfo] = list(cur.children)
+        for name in cur.name_refs:
+            if name in cur.bound:
+                continue
+            targets.extend(file_funcs.get((cur.path, name), ()))
+            full = table.get(name)
+            if full and "." in full:
+                mod, sym = full.rsplit(".", 1)
+                targets.extend(module_funcs.get((mod, sym), ()))
+        for chain in cur.attr_chains:
+            parts = chain.split(".")
+            if parts[0] in cur.bound:
+                continue
+            root = table.get(parts[0], parts[0])
+            full = ".".join([root] + parts[1:])
+            if "." not in full:
+                continue
+            mod, sym = full.rsplit(".", 1)
+            # `from pkg import mod` aliases can themselves be modules
+            if mod in module_files or root in module_files:
+                targets.extend(module_funcs.get((mod, sym), ()))
+        return targets
+
+    worklist = [f for f in funcs
+                if f.jit_root or (not f.is_method and f.name in registered)]
+    for f in worklist:
+        f.reachable = True
+    while worklist:
+        cur = worklist.pop()
+        for t in resolve(cur):
+            if not t.reachable:
+                t.reachable = True
+                worklist.append(t)
+    return CallGraph(funcs)

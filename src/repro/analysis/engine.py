@@ -1,0 +1,187 @@
+"""Rule engine: file walking, parsing, pragma suppression, orchestration.
+
+The engine is deliberately dependency-free (stdlib ``ast`` + ``tokenize``
+only) so the lint gate runs anywhere the repo checks out — it never
+imports jax or the package under analysis.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import os
+import tokenize
+from typing import Dict, Iterable, List, Optional, Sequence, Set
+
+#: Directory names never descended into when walking a directory argument.
+#: ``lint_corpus`` holds deliberately-violating fixtures for the linter's
+#: own test suite; explicit file arguments bypass the skip.
+SKIP_DIRS = ("__pycache__", "lint_corpus")
+
+PRAGMA_TAG = "hntlint:"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation.
+
+    ``key`` is the finding's *stable identity* for baseline matching:
+    derived from symbol/scope names, never from line numbers, so a
+    baselined finding survives unrelated edits above it.
+    """
+
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+    key: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+
+class SourceFile:
+    """A parsed source file plus its pragma table."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.source = source
+        self.tree = ast.parse(source, filename=path)
+        self.pragmas = collect_pragmas(source)
+
+    def suppressed(self, rule: str, line: int) -> bool:
+        ids = self.pragmas.get(line)
+        return ids is not None and ("*" in ids or rule in ids)
+
+
+class Project:
+    """All files of one analysis run + lazily-built shared passes."""
+
+    def __init__(self, files: Sequence[SourceFile]):
+        self.files = list(files)
+        self.by_path: Dict[str, SourceFile] = {f.path: f for f in self.files}
+        self._callgraph = None
+
+    @property
+    def callgraph(self):
+        if self._callgraph is None:
+            from . import callgraph
+            self._callgraph = callgraph.build(self)
+        return self._callgraph
+
+
+def collect_pragmas(source: str) -> Dict[int, Set[str]]:
+    """Map line -> suppressed rule ids ("*" = all) from hntlint comments.
+
+    Syntax: ``# hntlint: ok H004`` / ``# hntlint: ok H004, H006`` /
+    ``# hntlint: ok`` (suppress every rule on the line).
+    """
+    out: Dict[int, Set[str]] = {}
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(source).readline)
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            text = tok.string.lstrip("#").strip()
+            if not text.lower().startswith(PRAGMA_TAG):
+                continue
+            rest = text[len(PRAGMA_TAG):].strip()
+            if not (rest == "ok" or rest.lower().startswith("ok ")):
+                continue
+            ids = rest[2:].strip()
+            bucket = out.setdefault(tok.start[0], set())
+            if not ids:
+                bucket.add("*")
+            else:
+                for rid in ids.replace(",", " ").split():
+                    bucket.add(rid.upper())
+    except tokenize.TokenError:
+        pass
+    return out
+
+
+def collect_files(paths: Iterable[str]) -> List[str]:
+    """Expand path arguments into a sorted, de-duplicated .py file list.
+
+    Directories are walked recursively, skipping ``SKIP_DIRS`` and hidden
+    directories; a path given explicitly as a *file* is always included
+    (that is how the corpus tests feed fixtures in)."""
+    seen: Set[str] = set()
+    out: List[str] = []
+
+    def add(p: str) -> None:
+        rel = os.path.relpath(p).replace(os.sep, "/")
+        if rel not in seen:
+            seen.add(rel)
+            out.append(rel)
+
+    for p in paths:
+        if os.path.isfile(p):
+            add(p)
+            continue
+        for root, dirs, names in os.walk(p):
+            dirs[:] = sorted(d for d in dirs
+                             if d not in SKIP_DIRS and not d.startswith("."))
+            for n in sorted(names):
+                if n.endswith(".py"):
+                    add(os.path.join(root, n))
+    return out
+
+
+def load_project(paths: Iterable[str]) -> Project:
+    files = []
+    for path in collect_files(paths):
+        with open(path, "r", encoding="utf-8") as fh:
+            files.append(SourceFile(path, fh.read()))
+    return Project(files)
+
+
+def analyze_paths(paths: Iterable[str],
+                  rules: Optional[Sequence] = None) -> List[Finding]:
+    """Run all (or the given) rules over the paths; pragma-filtered."""
+    from . import rules as rules_mod
+    project = load_project(paths)
+    active = rules_mod.ALL_RULES if rules is None else rules
+    findings: List[Finding] = []
+    for rule in active:
+        findings.extend(rule(project))
+    findings = [f for f in findings
+                if f.path not in project.by_path
+                or not project.by_path[f.path].suppressed(f.rule, f.line)]
+    return sorted(findings, key=lambda f: (f.path, f.line, f.col, f.rule))
+
+
+def scope_map(tree: ast.AST) -> Dict[int, str]:
+    """Map id(node) -> dotted qualname of the enclosing scope.
+
+    Module scope is ``"<module>"``; nested defs join with ``"."``
+    (``Cls.method``, ``outer.inner``).  Used for stable Finding keys."""
+    out: Dict[int, str] = {}
+
+    def visit(node: ast.AST, scope: str) -> None:
+        for child in ast.iter_child_nodes(node):
+            out[id(child)] = scope
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                inner = child.name if scope == "<module>" \
+                    else f"{scope}.{child.name}"
+                visit(child, inner)
+            else:
+                visit(child, scope)
+
+    out[id(tree)] = "<module>"
+    visit(tree, "<module>")
+    return out
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None

@@ -1,0 +1,561 @@
+"""The H001–H007 rule set.
+
+Each rule is ``rule(project) -> list[Finding]``.  Keys (baseline
+identities) are built from symbol/scope names only — see engine.Finding.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .engine import Finding, Project, SourceFile, dotted_name, scope_map
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+_JNP_MODULES = ("jax.numpy",)
+_NP_MODULES = ("numpy",)
+
+
+def _module_aliases(sf: SourceFile, targets: Sequence[str]) -> Set[str]:
+    """Local names bound to any of the target modules (import aliases)."""
+    out: Set[str] = set()
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name in targets:
+                    out.add(a.asname or a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom):
+            for a in node.names:
+                if f"{node.module}.{a.name}" in targets:
+                    out.add(a.asname or a.name)
+    return out
+
+
+def _chain_root(node: ast.AST) -> Optional[str]:
+    """Leftmost name of a Name/Attribute chain (``jnp`` for ``jnp.full``)."""
+    dn = dotted_name(node)
+    return dn.split(".")[0] if dn else None
+
+
+def _is_jnp_call(node: ast.AST, jnp_aliases: Set[str]) -> bool:
+    return (isinstance(node, ast.Call)
+            and _chain_root(node.func) in jnp_aliases)
+
+
+# ---------------------------------------------------------------------------
+# H001 — module-level jnp array constants
+# ---------------------------------------------------------------------------
+
+def rule_h001(project: Project) -> List[Finding]:
+    """A module-level ``jnp.*`` call builds a device array at import time:
+    it pins backend initialization to import order and, if the module is
+    first imported inside an active trace, the "constant" is a leaked
+    tracer.  Keep module constants plain Python (``types.BIG``) and build
+    arrays inside functions."""
+    out: List[Finding] = []
+    for sf in project.files:
+        jnp = _module_aliases(sf, _JNP_MODULES)
+        if not jnp:
+            continue
+        for stmt in sf.tree.body:
+            if isinstance(stmt, ast.Assign):
+                value, targets = stmt.value, stmt.targets
+            elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+                value, targets = stmt.value, [stmt.target]
+            else:
+                continue
+            call = next((n for n in ast.walk(value)
+                         if _is_jnp_call(n, jnp)), None)
+            if call is None:
+                continue
+            names = [t.id for t in targets if isinstance(t, ast.Name)]
+            label = ", ".join(names) or "<target>"
+            out.append(Finding(
+                "H001", sf.path, value.lineno, value.col_offset,
+                f"module-level jnp constant {label!r} "
+                f"(device array built at import time — backend-init / "
+                f"tracer-leak hazard; use a plain Python value or build "
+                f"inside the function)",
+                key=f"module-const:{label}"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# H002 — jit/shard_map static args must be literal
+# ---------------------------------------------------------------------------
+
+def _is_static_literal(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant):
+        return isinstance(node.value, (str, int, bool)) or node.value is None
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return all(_is_static_literal(e) for e in node.elts)
+    # module-level ALL_CAPS constant by convention (frozen config tuples)
+    if isinstance(node, ast.Name):
+        return node.id.isupper()
+    return False
+
+
+def rule_h002(project: Project) -> List[Finding]:
+    """``static_argnames``/``static_argnums`` computed at decoration time
+    (a call, a comprehension, an f-string...) silently changes the jit
+    cache key across imports/reloads and defeats grep-ability of the
+    static surface.  Require hashable literals (or an ALL_CAPS module
+    constant)."""
+    from .callgraph import _is_jit_expr
+    out: List[Finding] = []
+    for sf in project.files:
+        scopes = scope_map(sf.tree)
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = dotted_name(node.func)
+            is_jit = _is_jit_expr(node.func)
+            is_partial_jit = (fn is not None
+                              and fn.split(".")[-1] == "partial"
+                              and node.args and _is_jit_expr(node.args[0]))
+            if not (is_jit or is_partial_jit):
+                continue
+            for kw in node.keywords:
+                if kw.arg not in ("static_argnames", "static_argnums"):
+                    continue
+                if _is_static_literal(kw.value):
+                    continue
+                scope = scopes.get(id(node), "<module>")
+                out.append(Finding(
+                    "H002", sf.path, kw.value.lineno, kw.value.col_offset,
+                    f"{kw.arg} is not a hashable literal "
+                    f"(computed static args make the jit cache key "
+                    f"unauditable; inline the literal tuple)",
+                    key=f"jit-static:{scope}:{kw.arg}"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# H003 / H005 — taint pass over jit-reachable functions
+# ---------------------------------------------------------------------------
+
+#: Attribute reads that concretize to host Python values even on tracers.
+_SAFE_ATTRS = {"shape", "ndim", "dtype", "size", "itemsize", "aval",
+               "sharding", "weak_type"}
+
+#: Builtins whose result is a host value regardless of argument taint.
+_SHIELD_CALLS = {"len", "isinstance", "issubclass", "hasattr", "type", "id",
+                 "callable", "repr", "str", "format", "range", "enumerate",
+                 "zip", "min", "max", "abs", "tuple", "list", "dict", "set",
+                 "sorted", "getattr", "print"}
+
+#: Call-chain roots whose results are traced values.
+_TRACED_ROOTS_FIXED = {"lax", "pl", "pltpu", "plgpu"}
+
+#: float()/int()/bool() on a tracer — concretization, flagged by H005.
+_CONCRETIZERS = {"float", "int", "bool", "complex"}
+
+_HOST_SINKS = {"asarray", "array", "ascontiguousarray"}
+
+
+class _TaintChecker:
+    """One function body: track tracer-valued names, flag H003/H005."""
+
+    def __init__(self, sf: SourceFile, func: ast.AST, qualname: str,
+                 jnp_aliases: Set[str], np_aliases: Set[str]):
+        self.sf = sf
+        self.func = func
+        self.qualname = qualname
+        self.jnp = jnp_aliases
+        self.np = np_aliases
+        self.traced_roots = _TRACED_ROOTS_FIXED | jnp_aliases | {"jax"}
+        self.env: Set[str] = set()
+        self.findings: List[Finding] = []
+        self._seq = 0
+
+    # -- taint of an expression ------------------------------------------
+    def tainted(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.env
+        if isinstance(node, ast.Attribute):
+            if node.attr in _SAFE_ATTRS:
+                return False
+            return self.tainted(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.tainted(node.value)
+        if isinstance(node, ast.Call):
+            root = _chain_root(node.func)
+            if isinstance(node.func, ast.Name):
+                if node.func.id in _SHIELD_CALLS | _CONCRETIZERS:
+                    return False
+            if root in self.np:
+                return False           # host value (H005's problem)
+            if root in self.traced_roots:
+                return True
+            if isinstance(node.func, ast.Attribute):
+                if node.func.attr == "item":
+                    return False       # host scalar (H005's problem)
+                if self.tainted(node.func.value):
+                    return True
+            return any(self.tainted(a) for a in node.args) or \
+                any(self.tainted(k.value) for k in node.keywords)
+        if isinstance(node, ast.Compare):
+            ops_safe = all(isinstance(o, (ast.Is, ast.IsNot, ast.In,
+                                          ast.NotIn))
+                           for o in node.ops)
+            if ops_safe:
+                return False
+            return self.tainted(node.left) or \
+                any(self.tainted(c) for c in node.comparators)
+        if isinstance(node, ast.BoolOp):
+            return any(self.tainted(v) for v in node.values)
+        if isinstance(node, ast.BinOp):
+            return self.tainted(node.left) or self.tainted(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.tainted(node.operand)
+        if isinstance(node, ast.IfExp):
+            return self.tainted(node.body) or self.tainted(node.orelse)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.tainted(e) for e in node.elts)
+        if isinstance(node, ast.Starred):
+            return self.tainted(node.value)
+        return False
+
+    # -- entry ------------------------------------------------------------
+    def run(self) -> List[Finding]:
+        args = self.func.args
+        for a in (list(args.posonlyargs) + list(args.args)
+                  + list(args.kwonlyargs)
+                  + [x for x in (args.vararg, args.kwarg) if x]):
+            ann = ast.unparse(a.annotation) if a.annotation else ""
+            if "Array" in ann or "ndarray" in ann:
+                self.env.add(a.arg)
+        # two passes: loop-carried taint settles on the second
+        for _ in range(2):
+            self.visit_block(self.func.body)
+        return self.findings
+
+    # -- statements --------------------------------------------------------
+    def visit_block(self, stmts: Sequence[ast.stmt]) -> None:
+        for stmt in stmts:
+            self.visit_stmt(stmt)
+
+    def _bind(self, target: ast.AST, tainted: bool) -> None:
+        if isinstance(target, ast.Name):
+            if tainted:
+                self.env.add(target.id)
+            else:
+                self.env.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._bind(e, tainted)
+        elif isinstance(target, ast.Starred):
+            self._bind(target.value, tainted)
+
+    def _scan_calls(self, node: Optional[ast.AST]) -> None:
+        """H005-check every Call under ``node``, not descending into
+        nested defs (they are their own reachable entries)."""
+        if node is None:
+            return
+        stack = [node]
+        while stack:
+            cur = stack.pop()
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.Lambda)):
+                continue
+            if isinstance(cur, ast.Call):
+                self.check_h005(cur)
+            stack.extend(ast.iter_child_nodes(cur))
+
+    def visit_stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return  # nested defs are their own (reachable) entries
+        if isinstance(stmt, (ast.If, ast.While)):
+            self._scan_calls(stmt.test)
+        elif isinstance(stmt, ast.For):
+            self._scan_calls(stmt.iter)
+        elif isinstance(stmt, ast.With):
+            for item in stmt.items:
+                self._scan_calls(item.context_expr)
+        elif not isinstance(stmt, ast.Try):
+            self._scan_calls(stmt)
+        if isinstance(stmt, ast.Assign):
+            t = self.tainted(stmt.value)
+            for target in stmt.targets:
+                self._bind(target, t)
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            self._bind(stmt.target, self.tainted(stmt.value))
+        elif isinstance(stmt, ast.AugAssign):
+            if self.tainted(stmt.value):
+                self._bind(stmt.target, True)
+        elif isinstance(stmt, (ast.If, ast.While)):
+            kind = "if" if isinstance(stmt, ast.If) else "while"
+            self.check_h003(stmt.test, kind)
+            self.visit_block(stmt.body)
+            self.visit_block(stmt.orelse)
+        elif isinstance(stmt, ast.Assert):
+            self.check_h003(stmt.test, "assert")
+        elif isinstance(stmt, ast.For):
+            if self.tainted(stmt.iter):
+                self._bind(stmt.target, True)
+            self.visit_block(stmt.body)
+            self.visit_block(stmt.orelse)
+        elif isinstance(stmt, ast.With):
+            self.visit_block(stmt.body)
+        elif isinstance(stmt, ast.Try):
+            self.visit_block(stmt.body)
+            for h in stmt.handlers:
+                self.visit_block(h.body)
+            self.visit_block(stmt.orelse)
+            self.visit_block(stmt.finalbody)
+
+    # -- findings ----------------------------------------------------------
+    def _emit(self, rule: str, node: ast.AST, message: str,
+              what: str) -> None:
+        key = f"{rule.lower()}:{self.qualname}:{what}"
+        if any(f.key == key and f.line == node.lineno
+               for f in self.findings):
+            return
+        self.findings.append(Finding(
+            rule, self.sf.path, node.lineno, node.col_offset, message, key))
+
+    def check_h003(self, test: ast.expr, kind: str) -> None:
+        if self.tainted(test):
+            self._emit(
+                "H003", test,
+                f"python `{kind}` on a tracer-valued expression in "
+                f"jit-reachable `{self.qualname}` (concretizes under "
+                f"trace; use lax.cond/jnp.where or hoist to a static)",
+                f"{kind}:{ast.unparse(test)[:60]}")
+
+    def check_h005(self, call: ast.Call) -> None:
+        root = _chain_root(call.func)
+        fn = dotted_name(call.func)
+        if root in self.np and fn is not None and \
+                fn.split(".")[-1] in _HOST_SINKS:
+            self._emit(
+                "H005", call,
+                f"host materialization `{fn}` in jit-reachable "
+                f"`{self.qualname}` (blocks under trace; keep device "
+                f"values in jnp or move the host step outside jit)",
+                f"np:{fn.split('.')[-1]}")
+        elif isinstance(call.func, ast.Attribute) and \
+                call.func.attr == "item" and not call.args:
+            self._emit(
+                "H005", call,
+                f"`.item()` host scalar materialization in jit-reachable "
+                f"`{self.qualname}`",
+                "item")
+        elif isinstance(call.func, ast.Name) and \
+                call.func.id in _CONCRETIZERS and call.args and \
+                self.tainted(call.args[0]):
+            self._emit(
+                "H005", call,
+                f"`{call.func.id}()` concretizes a tracer in "
+                f"jit-reachable `{self.qualname}`",
+                f"concretize:{call.func.id}")
+
+
+def rule_h003_h005(project: Project) -> List[Finding]:
+    """Walk every jit-reachable function (see callgraph) with the taint
+    checker; emits both H003 (python control flow on tracers) and H005
+    (host materialization) findings."""
+    out: List[Finding] = []
+    for fi in project.callgraph.reachable_funcs():
+        sf = project.by_path[fi.path]
+        jnp = _module_aliases(sf, _JNP_MODULES)
+        np_ = _module_aliases(sf, _NP_MODULES)
+        out.extend(_TaintChecker(sf, fi.node, fi.qualname, jnp, np_).run())
+    return out
+
+
+# ---------------------------------------------------------------------------
+# H004 — inline 3e38-magnitude sentinel literals
+# ---------------------------------------------------------------------------
+
+def rule_h004(project: Project) -> List[Finding]:
+    """The pruned-slot sentinel is single-sourced as ``types.BIG``; an
+    inline ``3e38``-magnitude literal is a drifting copy (PR 3 fixed a
+    real one).  Kernels that must keep a module-local python-float copy
+    (Pallas importability) carry an explicit ``# hntlint: ok H004``."""
+    out: List[Finding] = []
+    for sf in project.files:
+        if sf.path.endswith("core/types.py"):
+            continue
+        scopes = scope_map(sf.tree)
+        for node in ast.walk(sf.tree):
+            if not (isinstance(node, ast.Constant)
+                    and isinstance(node.value, float)):
+                continue
+            if not 1e37 <= abs(node.value) < 1e39:  # hntlint: ok H004
+                continue
+            scope = scopes.get(id(node), "<module>")
+            out.append(Finding(
+                "H004", sf.path, node.lineno, node.col_offset,
+                f"inline sentinel literal {node.value!r} "
+                f"(import types.BIG — inline copies drift)",
+                key=f"sentinel:{scope}:{node.value!r}"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# H006 — pytree registration + SEARCH_PLANE_AXES parity
+# ---------------------------------------------------------------------------
+
+#: Closure roots when present: the two search-plane pytrees.  A file that
+#: defines SEARCH_PLANE_AXES but neither class falls back to every
+#: registered Array-bearing dataclass (the corpus fixtures).
+_PLANE_ROOTS = ("StackedSegments", "ShardedStackedSegments")
+
+
+def _class_info(sf: SourceFile):
+    """(dataclasses, registered, fields) maps for one file."""
+    dataclasses_: Set[str] = set()
+    registered: Set[str] = set()
+    fields: Dict[str, List[Tuple[str, str, int]]] = {}
+    lines: Dict[str, int] = {}
+    for node in sf.tree.body:
+        if not isinstance(node, ast.ClassDef):
+            continue
+        lines[node.name] = node.lineno
+        decs = [dotted_name(d.func) if isinstance(d, ast.Call)
+                else dotted_name(d) for d in node.decorator_list]
+        decs = [d.split(".")[-1] for d in decs if d]
+        if "dataclass" in decs:
+            dataclasses_.add(node.name)
+        if "register_dataclass" in decs or "register_pytree_node_class" \
+                in decs:
+            registered.add(node.name)
+        fl = []
+        for stmt in node.body:
+            if isinstance(stmt, ast.AnnAssign) and \
+                    isinstance(stmt.target, ast.Name):
+                fl.append((stmt.target.id, ast.unparse(stmt.annotation),
+                           stmt.lineno))
+        fields[node.name] = fl
+    return dataclasses_, registered, fields, lines
+
+
+def _axes_dict(sf: SourceFile):
+    """The SEARCH_PLANE_AXES dict literal, if this file assigns one."""
+    for node in sf.tree.body:
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Dict):
+            names = [t.id for t in node.targets if isinstance(t, ast.Name)]
+            if "SEARCH_PLANE_AXES" in names:
+                return node.value
+    return None
+
+
+def rule_h006(project: Project) -> List[Finding]:
+    """Two contracts on the search-plane pytrees:
+
+    1. every dataclass with a ``jax.Array`` field is tree-registered
+       (an unregistered one silently becomes a jit static → retrace per
+       instance, or a leaf-less constant);
+    2. ``SEARCH_PLANE_AXES`` and the plane classes' Array leaves match
+       1:1 — a new leaf without a sharding rule is exactly the failure
+       mode PR 3 and PR 6 each hit."""
+    out: List[Finding] = []
+    for sf in project.files:
+        dcs, registered, fields, lines = _class_info(sf)
+        has_axes = _axes_dict(sf) is not None
+        if not (has_axes or registered):
+            continue
+
+        def is_array(ann: str) -> bool:
+            return "Array" in ann or "ndarray" in ann
+
+        # (1) Array-bearing dataclasses must be registered pytrees.
+        for cls in sorted(dcs):
+            if cls in registered:
+                continue
+            if any(is_array(ann) for _, ann, _ in fields[cls]):
+                out.append(Finding(
+                    "H006", sf.path, lines[cls], 0,
+                    f"dataclass {cls} has jax.Array fields but is not "
+                    f"tree-registered (becomes an opaque jit constant; "
+                    f"add @jax.tree_util.register_dataclass)",
+                    key=f"unregistered:{cls}"))
+
+        axes = _axes_dict(sf)
+        if axes is None:
+            continue
+        # (2) leaf closure from the plane roots vs the axes dict keys.
+        roots = [r for r in _PLANE_ROOTS if r in fields] or \
+            [c for c in sorted(registered)
+             if c in fields and any(is_array(a) for _, a, _ in fields[c])]
+        leaves: Dict[str, Tuple[str, int]] = {}
+        seen: Set[str] = set()
+
+        def close(cls: str) -> None:
+            if cls in seen or cls not in fields:
+                return
+            seen.add(cls)
+            for fname, ann, lineno in fields[cls]:
+                nested = [c for c in fields if c != cls and c in ann]
+                if nested:
+                    for c in nested:
+                        close(c)
+                elif is_array(ann):
+                    leaves.setdefault(fname, (cls, lineno))
+
+        for r in roots:
+            close(r)
+
+        keys: Dict[str, int] = {}
+        for k in axes.keys:
+            if isinstance(k, ast.Constant) and isinstance(k.value, str):
+                keys[k.value] = k.lineno
+        for k, lineno in sorted(keys.items()):
+            if k not in leaves:
+                out.append(Finding(
+                    "H006", sf.path, lineno, 0,
+                    f"SEARCH_PLANE_AXES key {k!r} has no matching Array "
+                    f"leaf on the plane pytrees ({'/'.join(roots)})",
+                    key=f"axes-key:{k}"))
+        for fname, (cls, lineno) in sorted(leaves.items()):
+            if fname not in keys:
+                out.append(Finding(
+                    "H006", sf.path, lineno, 0,
+                    f"plane leaf {cls}.{fname} has no SEARCH_PLANE_AXES "
+                    f"entry (new leaf without a sharding rule)",
+                    key=f"plane-leaf:{cls}.{fname}"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# H007 — .at[...].set(...) result discarded
+# ---------------------------------------------------------------------------
+
+_AT_METHODS = {"set", "add", "multiply", "mul", "divide", "div", "power",
+               "min", "max", "apply", "get"}
+
+
+def rule_h007(project: Project) -> List[Finding]:
+    """``x.at[i].set(v)`` as a bare expression statement builds and
+    discards a whole new array — the classic numpy in-place illusion.
+    The result must be bound."""
+    out: List[Finding] = []
+    for sf in project.files:
+        scopes = scope_map(sf.tree)
+        for node in ast.walk(sf.tree):
+            if not (isinstance(node, ast.Expr)
+                    and isinstance(node.value, ast.Call)):
+                continue
+            call = node.value
+            f = call.func
+            if not (isinstance(f, ast.Attribute)
+                    and f.attr in _AT_METHODS
+                    and isinstance(f.value, ast.Subscript)
+                    and isinstance(f.value.value, ast.Attribute)
+                    and f.value.value.attr == "at"):
+                continue
+            scope = scopes.get(id(node), "<module>")
+            out.append(Finding(
+                "H007", sf.path, node.lineno, node.col_offset,
+                f"`.at[...].{f.attr}(...)` result discarded (functional "
+                f"update returns a new array; bind it)",
+                key=f"at-discard:{scope}:{f.attr}"))
+    return out
+
+
+ALL_RULES = (rule_h001, rule_h002, rule_h003_h005, rule_h004, rule_h006,
+             rule_h007)

@@ -57,6 +57,7 @@ import uuid
 import weakref
 from typing import Optional, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -1246,16 +1247,23 @@ class VectorStore:
         probe, pool_eff, topk_eff, seg_shape = self._fused_statics(
             segments, stacked, topk, nprobe, pool, route_mode)
         qeff = index_mod.int32_safe_qmax(self.cfg.k, self.cfg.coord_bits)
-        tm = jnp.uint32(tag_mask) if tag_mask is not None else None
-        tr = ((jnp.float32(ts_range[0]), jnp.float32(ts_range[1]))
+        # Explicit device placement of the host filter scalars: jnp.uint32(x)
+        # on a python int is an *implicit* H2D transfer and trips the
+        # HNTL_SANITIZE transfer guard wrapped around this method.
+        tm = (jax.device_put(np.uint32(tag_mask))
+              if tag_mask is not None else None)
+        tr = ((jax.device_put(np.float32(ts_range[0])),
+               jax.device_put(np.float32(ts_range[1])))
               if ts_range is not None else None)
         kw = dict(nprobe=probe, envelope_frac=self.cfg.envelope_frac,
                   qeff=qeff, scan_impl=scan_impl, budgets=budgets,
                   route_mode=route_mode, seg_shape=seg_shape, tag_mask=tm,
                   ts_range=tr)
         if tenant_live is not None:
-            kw["tenant_live"] = jnp.asarray(tenant_live)
-            kw["tenant_ix"] = jnp.asarray(tenant_ix, jnp.int32)
+            # Explicit placement again: jnp.asarray with a dtype change
+            # (host int64 -> int32) is an implicit H2D under the guard.
+            kw["tenant_live"] = jax.device_put(np.asarray(tenant_live))
+            kw["tenant_ix"] = jax.device_put(np.asarray(tenant_ix, np.int32))
         qj = jnp.asarray(q)
 
         if mode == "B" and stacked.index.raw is None:
@@ -1269,15 +1277,17 @@ class VectorStore:
             res = planner.search_stacked(stacked, qj, pool=pool_eff,
                                          topk=pe, mode="A",
                                          translate=False, **kw)
-            rows = np.asarray(res.ids)
-            ok = (rows >= 0) & (np.asarray(res.dists) < BIG / 2)
+            rows = jax.device_get(res.ids)
+            ok = (rows >= 0) & (jax.device_get(res.dists) < BIG / 2)
             return self._cold_rerank(q, segments, offsets, gids_host,
                                      rows, ok, topk_eff)
 
         res = planner.search_stacked(stacked, qj, pool=pool_eff,
                                      topk=topk_eff, mode=mode, **kw)
-        return (np.asarray(res.ids, np.int64),
-                np.asarray(res.dists, np.float32))
+        # Explicit D2H: the one sanctioned device->host hop of the warm
+        # tier (the final top-k), visible to the transfer guard as such.
+        return (np.asarray(jax.device_get(res.ids), np.int64),
+                np.asarray(jax.device_get(res.dists), np.float32))
 
     def _cold_rerank(self, q, segments, offsets, gids_host, rows, ok, topk):
         """Host-side exact Mode B re-rank of a merged candidate pool from
@@ -1351,8 +1361,12 @@ class VectorStore:
         probe, pool_eff = self._sharded_statics(plane, n_shards, topk,
                                                 nprobe, pool)
         qeff = index_mod.int32_safe_qmax(self.cfg.k, self.cfg.coord_bits)
-        tm = jnp.uint32(tag_mask) if tag_mask is not None else None
-        tr = ((jnp.float32(ts_range[0]), jnp.float32(ts_range[1]))
+        # Explicit placement, as in _search_segments_fused: no implicit H2D
+        # of the filter scalars under the sanitizer's transfer guard.
+        tm = (jax.device_put(np.uint32(tag_mask))
+              if tag_mask is not None else None)
+        tr = ((jax.device_put(np.float32(ts_range[0])),
+               jax.device_put(np.float32(ts_range[1])))
               if ts_range is not None else None)
         kw = dict(mesh=mesh, grain_axis=grain_axis,
                   batch_axis=self._batch_axis(mesh, grain_axis,
@@ -1364,7 +1378,7 @@ class VectorStore:
             kw["tenant_live"] = shd.shard_plane_field(
                 np.asarray(tenant_live), entry["rules"], "tenant_live",
                 dim=1)
-            kw["tenant_ix"] = jnp.asarray(tenant_ix, jnp.int32)
+            kw["tenant_ix"] = jax.device_put(np.asarray(tenant_ix, np.int32))
         qj = jnp.asarray(q)
 
         if mode == "B" and plane.index.raw is None:
@@ -1378,8 +1392,8 @@ class VectorStore:
             res = planner.search_stacked_sharded(
                 plane, qj, pool=pe, topk=n_shards * pe,
                 mode="A", translate=False, **kw)
-            rows_perm = np.asarray(res.ids)
-            ok = (rows_perm >= 0) & (np.asarray(res.dists) < BIG / 2)
+            rows_perm = jax.device_get(res.ids)
+            ok = (rows_perm >= 0) & (jax.device_get(res.dists) < BIG / 2)
             rows = np.where(ok, perm[np.maximum(rows_perm, 0)], -1)
             ok &= rows >= 0
             return self._cold_rerank(q, segments, offsets, gids_host,
@@ -1387,8 +1401,10 @@ class VectorStore:
 
         res = planner.search_stacked_sharded(plane, qj, pool=pool_eff,
                                              topk=topk, mode=mode, **kw)
-        return (np.asarray(res.ids, np.int64),
-                np.asarray(res.dists, np.float32))
+        # Explicit D2H: the one sanctioned device->host hop of the warm
+        # tier (the final top-k), visible to the transfer guard as such.
+        return (np.asarray(jax.device_get(res.ids), np.int64),
+                np.asarray(jax.device_get(res.dists), np.float32))
 
     def _search_memtable(self, q, man: Manifest, topk, tag_mask, ts_range,
                          now):

@@ -251,7 +251,8 @@ SEARCH_PLANE_AXES = {
     "live": "grains",
     # multi-tenant visibility stack [T, G, cap] — grain axis is dim 1
     # (placed via shard_plane_field(dim=1); the tenant axis replicates)
-    "tenant_live": "grains",
+    "tenant_live": "grains",  # hntlint: ok H006 — dispatch-time [T, G, cap]
+    # stack, not a plane-class field (placed per query batch by tenancy)
     # raw tier + id translation — one entry per (permuted) raw row
     "raw": "rows", "gid_of_row": "rows",
 }

@@ -45,7 +45,7 @@ from jax.experimental.pallas import tpu as pltpu
 # Python-float copy of core.types.BIG (Pallas kernels may not capture traced
 # constants, and this package stays importable without core).  Must stay
 # equal to types.BIG — asserted in tests/test_kernels.py.
-NEG_BIG = 3.0e38
+NEG_BIG = 3.0e38  # hntlint: ok H004
 
 BLK_C = 128   # cap-tile columns (lane dimension)
 

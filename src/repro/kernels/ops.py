@@ -23,7 +23,7 @@ from .hntl_scan import hntl_scan, hntl_scan_single
 
 # Python-float copy of core.types.BIG (kept local so the kernels package
 # stays importable without core).  Asserted equal in tests/test_kernels.py.
-NEG_BIG = 3.0e38
+NEG_BIG = 3.0e38  # hntlint: ok H004
 
 
 def default_backend() -> str:

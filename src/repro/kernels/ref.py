@@ -7,7 +7,7 @@ import jax.numpy as jnp
 # Python-float copy of core.types.BIG (plain float: a module-level jnp
 # constant would become a tracer if this module is first imported inside an
 # active trace).  Must stay equal to types.BIG — asserted in tests.
-NEG_BIG = 3.0e38
+NEG_BIG = 3.0e38  # hntlint: ok H004
 
 
 def hntl_scan_ref(zq, rq, coords, res, valid, scale, res_scale):

@@ -1,0 +1,4 @@
+# Deliberately-violating / deliberately-clean fixtures for the hntlint
+# rule suite (tests/test_hntlint.py).  The engine's directory walk skips
+# this package (engine.SKIP_DIRS); the tests feed each file explicitly.
+# Files are named without a test_ prefix so pytest never collects them.

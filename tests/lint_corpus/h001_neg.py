@@ -1,0 +1,9 @@
+"""H001 negative: plain-Python module constants, arrays built in-function."""
+import jax.numpy as jnp
+
+BIG = 3.0                                # plain float: fine
+NAMES = ("a", "b")                       # plain tuple: fine
+
+
+def make_offsets(n: int):
+    return jnp.arange(n) * 2.0           # inside a function: fine

@@ -1,0 +1,5 @@
+"""H001 positive: module-level jnp constants (tracer-leak hazard)."""
+import jax.numpy as jnp
+
+SENTINEL = jnp.full((4,), 3.0)          # flagged: device array at import
+OFFSETS = 2.0 * jnp.arange(8)           # flagged: jnp call inside an expr

@@ -1,0 +1,19 @@
+"""H002 negative: literal (or ALL_CAPS constant) jit static args."""
+import functools
+
+import jax
+
+STATIC_NAMES = ("mode", "topk")
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "topk"))
+def f(x, mode, topk):
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=STATIC_NAMES)
+def g(x, mode, topk):
+    return x
+
+
+h = jax.jit(lambda x, k: x, static_argnums=(1,))

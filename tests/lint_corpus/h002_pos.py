@@ -1,0 +1,16 @@
+"""H002 positive: computed jit static args (unauditable cache key)."""
+import functools
+
+import jax
+
+
+def _names():
+    return ("mode",)
+
+
+@functools.partial(jax.jit, static_argnames=_names())   # flagged: a call
+def f(x, mode):
+    return x
+
+
+g = jax.jit(lambda x, k: x, static_argnums=[0][:1])     # flagged: an expr

@@ -1,0 +1,23 @@
+"""H003 negative: static-python branches + traced-select idioms in jit."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def select(x: jax.Array, mask=None, mode: str = "A"):
+    if mask is not None:                 # `is` test: static, fine
+        x = jnp.where(mask, x, 0.0)
+    if mode == "B":                      # string static: fine
+        x = -x
+    n = x.shape[0]                       # shape math is host python: fine
+    if n % 2:
+        x = x[: n - 1]
+    assert x.ndim == 1                   # static rank check: fine
+    return jnp.where(x.sum() > 0, -x, x)  # traced select: fine
+
+
+def host_only(v):
+    # NOT jit-reachable: a python branch on a concrete array is fine here
+    if v.sum() > 0:
+        return v
+    return -v

@@ -1,0 +1,26 @@
+"""H003 positive: python control flow on tracer values in jitted code."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def clamp(x: jax.Array):
+    if x.sum() > 0:                      # flagged: branch on a tracer
+        x = -x
+    s = jnp.max(x)
+    while s > 1.0:                       # flagged: loop on a tracer
+        s = s * 0.5
+    assert jnp.all(x < 9.0)              # flagged: assert on a tracer
+    return x
+
+
+def helper(y):
+    z = jnp.abs(y)
+    if z[0] > 0:                         # flagged: reachable from clamp2
+        return z
+    return -z
+
+
+@jax.jit
+def clamp2(y: jax.Array):
+    return helper(y)

@@ -1,0 +1,9 @@
+"""H004 negative: the sentinel imported from types, or pragma'd copies."""
+
+BIG = 3.0e38  # hntlint: ok H004 — deliberate local copy (pragma test)
+SMALL = 1.0e6                            # ordinary magnitudes: fine
+EPS = 1e-30
+
+
+def prune(d):
+    return d >= BIG / 2

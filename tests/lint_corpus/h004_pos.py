@@ -1,0 +1,7 @@
+"""H004 positive: inline 3e38-magnitude sentinel copies."""
+
+NEG_BIG = 3.0e38                         # flagged: drifting copy of BIG
+
+
+def prune(d):
+    return d >= 2.9e38 / 2               # flagged: inline magnitude

@@ -1,0 +1,17 @@
+"""H005 negative: device-side math in jit; host numpy outside jit."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def good(x: jax.Array):
+    lo = jnp.min(x)                      # device reduction: fine
+    n = int(x.shape[0])                  # shape math is host python: fine
+    return jnp.clip(x, lo, lo + float(n))
+
+
+def host_merge(ids):
+    # NOT jit-reachable: host-side numpy is the point of this function
+    arr = np.asarray(ids, np.int64)
+    return arr.max().item()

@@ -1,0 +1,11 @@
+"""H005 positive: host materialization on jit-reachable paths."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def bad(x: jax.Array):
+    h = np.asarray(x)                    # flagged: blocks under trace
+    lo = float(x.min())                  # flagged: concretizes a tracer
+    first = x[0].item()                  # flagged: host scalar
+    return h, lo, first

@@ -1,0 +1,32 @@
+"""H006 negative: registered pytrees with 1:1 axes/leaf parity."""
+import dataclasses
+from typing import Optional
+
+import jax
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Inner:
+    coords: jax.Array
+    scale: jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Plane:
+    inner: Inner                         # nested: closes over Inner's leaves
+    live: Optional[jax.Array] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class HostConfig:                        # no Array fields: needs no pytree
+    nprobe: int = 8
+    mode: str = "A"
+
+
+SEARCH_PLANE_AXES = {
+    "coords": "grains",
+    "scale": "grains",
+    "live": "grains",
+}

@@ -1,0 +1,24 @@
+"""H006 positive: unregistered Array dataclass + axes/leaf mismatches."""
+import dataclasses
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class Unregistered:                      # flagged: Array field, no pytree
+    coords: jax.Array
+    n: int
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Plane:
+    coords: jax.Array
+    extra: jax.Array                     # flagged: leaf without an axes rule
+    n_grains: int
+
+
+SEARCH_PLANE_AXES = {
+    "coords": "grains",
+    "ghost": "grains",                   # flagged: key without a leaf
+}

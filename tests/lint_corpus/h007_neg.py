@@ -1,0 +1,6 @@
+"""H007 negative: functional updates bound to a name (or returned)."""
+
+
+def bump(x, i):
+    x = x.at[i].set(1.0)                 # bound: fine
+    return x.at[i].add(2.0)              # returned: fine

@@ -1,0 +1,7 @@
+"""H007 positive: .at[...].set(...) result discarded (in-place illusion)."""
+
+
+def bump(x, i):
+    x.at[i].set(1.0)                     # flagged: new array discarded
+    x.at[i].add(2.0)                     # flagged
+    return x

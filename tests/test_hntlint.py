@@ -1,0 +1,140 @@
+"""hntlint self-tests: corpus fixtures, pragmas, baseline, and the
+repo-wide zero-findings gate.
+
+The corpus under tests/lint_corpus/ holds one deliberately-violating and
+one deliberately-clean fixture per rule; the engine's directory walk
+skips that package (explicit file paths bypass the skip), so the
+repo-wide gate and the fixture runs never interfere."""
+import json
+import os
+
+import pytest
+
+from repro.analysis import (analyze_paths, collect_files, load_baseline,
+                            split_by_baseline)
+from repro.analysis.baseline import DEFAULT_BASELINE
+from repro.analysis.engine import collect_pragmas
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CORPUS = os.path.join(REPO, "tests", "lint_corpus")
+
+RULES = ("H001", "H002", "H003", "H004", "H005", "H006", "H007")
+
+#: rule -> which rule ids its *positive* fixture is allowed to trip
+#: (H003/H005 share the taint pass but fixtures are kept disjoint).
+_EXPECTED_MIN = {
+    "H001": 2, "H002": 2, "H003": 4, "H004": 2, "H005": 3, "H006": 3,
+    "H007": 2,
+}
+
+
+def _fixture(rule: str, polarity: str) -> str:
+    return os.path.join(CORPUS, f"{rule.lower()}_{polarity}.py")
+
+
+@pytest.mark.parametrize("rule", RULES)
+def test_rule_catches_positive_fixture(rule):
+    findings = analyze_paths([_fixture(rule, "pos")])
+    hits = [f for f in findings if f.rule == rule]
+    assert len(hits) >= _EXPECTED_MIN[rule], \
+        f"{rule} missed its positive fixture: {[f.format() for f in findings]}"
+    # and nothing ELSE fires on the fixture — each file targets one rule
+    assert all(f.rule == rule for f in findings), \
+        [f.format() for f in findings]
+
+
+@pytest.mark.parametrize("rule", RULES)
+def test_rule_passes_negative_fixture(rule):
+    findings = analyze_paths([_fixture(rule, "neg")])
+    assert findings == [], [f.format() for f in findings]
+
+
+def test_corpus_is_skipped_by_directory_walk():
+    files = collect_files([os.path.join(REPO, "tests")])
+    assert not any("lint_corpus" in f for f in files)
+    # ...but explicit file arguments always analyze
+    assert collect_files([_fixture("H001", "pos")])
+
+
+def test_pragma_parsing_variants():
+    src = (
+        "A = 1  # hntlint: ok H004\n"
+        "B = 2  # hntlint: ok H004, H006\n"
+        "C = 3  # hntlint: ok\n"
+        "D = 4  # a normal comment\n"
+    )
+    pragmas = collect_pragmas(src)
+    assert pragmas[1] == {"H004"}
+    assert pragmas[2] == {"H004", "H006"}
+    assert pragmas[3] == {"*"}
+    assert 4 not in pragmas
+
+
+def test_pragma_suppresses_on_the_flagged_line(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text("NEG = 3.0e38\n")
+    assert any(f.rule == "H004" for f in analyze_paths([str(bad)]))
+    ok = tmp_path / "ok.py"
+    ok.write_text("NEG = 3.0e38  # hntlint: ok H004\n")
+    assert analyze_paths([str(ok)]) == []
+
+
+def test_baseline_matches_on_key_not_line(tmp_path):
+    f = tmp_path / "mod.py"
+    # the finding's line moves; its (rule, path, key) identity must not
+    f.write_text("# padding\n# padding\nNEG = 3.0e38\n")
+    findings = analyze_paths([str(f)])
+    (hit,) = [x for x in findings if x.rule == "H004"]
+    entry = {"rule": hit.rule, "path": hit.path, "key": hit.key,
+             "reason": "test"}
+    new, old, stale = split_by_baseline(findings, [entry])
+    assert new == [] and len(old) == 1 and stale == []
+    # a stale entry (nothing matches) is surfaced, not silently kept
+    new, old, stale = split_by_baseline(
+        [], [entry])
+    assert stale == [entry]
+
+
+def test_committed_baseline_is_wellformed_and_live():
+    entries = load_baseline(DEFAULT_BASELINE)
+    for e in entries:
+        assert e.get("reason"), f"baseline entry without a reason: {e}"
+    # every committed entry must still match a real finding (no rot)
+    findings = analyze_paths([os.path.join(REPO, "src"),
+                              os.path.join(REPO, "tests")])
+    _, _, stale = split_by_baseline(findings, entries)
+    assert stale == [], f"stale baseline entries: {stale}"
+
+
+def test_repo_is_clean():
+    """The tentpole gate: zero non-baselined findings over src/ + tests/."""
+    findings = analyze_paths([os.path.join(REPO, "src"),
+                              os.path.join(REPO, "tests")])
+    new, _, _ = split_by_baseline(findings, load_baseline(DEFAULT_BASELINE))
+    assert new == [], "\n".join(f.format() for f in new)
+
+
+def test_cli_exit_codes(tmp_path):
+    from repro.analysis.__main__ import main
+    clean = tmp_path / "clean.py"
+    clean.write_text("X = 1\n")
+    assert main([str(clean)]) == 0
+    dirty = tmp_path / "dirty.py"
+    dirty.write_text("NEG = 3.0e38\n")
+    assert main([str(dirty), "--no-baseline"]) == 1
+
+
+def test_callgraph_reaches_registry_runners_and_closures():
+    """The ScanPlane registry and jit factories are reachability roots:
+    scan.blocksoa_scan (registered by module attribute) and the cascade
+    factory closure must be jit-reachable; host-side maintenance/serving
+    helpers must not be."""
+    from repro.analysis.engine import load_project
+    proj = load_project([os.path.join(REPO, "src")])
+    names = {f.qualname for f in proj.callgraph.reachable_funcs()}
+    assert "blocksoa_scan" in names
+    assert "make_cascade_runner.cascade_select" in names
+    assert "fused_scan_select" in names
+    assert "search_stacked_sharded" in names
+    assert "merge_target" not in names          # host-side maintenance
+    assert "coalesced_retrieve" not in names    # host-side serving

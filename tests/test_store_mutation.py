@@ -75,27 +75,18 @@ def test_deleted_ids_never_returned(cold, mode):
     assert (ids[:, 0] >= 0).all()                # live rows still found
 
 
-def test_delete_is_visible_without_restack(monkeypatch):
+def test_delete_is_visible_without_restack(plane_counters):
     """delete() must not rebuild the stacked plane NOR add dispatches:
     the first search stacks once, a post-delete search reuses that plane
     (liveness leaf swap only) and still issues exactly ONE jitted call."""
     st, x, q = _build(False)
-    stack_calls, search_calls = [], []
-    real_stack = store_mod.stack_segments
-    real_search = planner.search_stacked
-    monkeypatch.setattr(store_mod, "stack_segments",
-                        lambda *a, **k: (stack_calls.append(1),
-                                         real_stack(*a, **k))[1])
-    monkeypatch.setattr(planner, "search_stacked",
-                        lambda *a, **k: (search_calls.append(1),
-                                         real_search(*a, **k))[1])
     st.search(q, topk=5, mode="B")
-    assert len(stack_calls) == 1
+    assert plane_counters.stacks == 1
     st.delete([0, 1, 2])
-    search_calls.clear()
+    before = plane_counters.dispatches
     res = st.search(q, topk=5, mode="B")
-    assert len(stack_calls) == 1                  # NO re-stack on mutation
-    assert len(search_calls) == 1                 # still ONE dispatch
+    assert plane_counters.stacks == 1             # NO re-stack on mutation
+    assert plane_counters.dispatches == before + 1  # still ONE dispatch
     assert not np.isin(np.asarray(res.ids), [0, 1, 2]).any()
 
 

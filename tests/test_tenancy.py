@@ -433,28 +433,15 @@ def test_padding_buckets_do_not_perturb():
         _assert_solo_parity(reg, reqs, **kn)
 
 
-def test_zero_restacks_and_one_dispatch_per_group(monkeypatch):
-    from repro.core import planner as planner_mod
-    from repro.core import store as store_mod
+def test_zero_restacks_and_one_dispatch_per_group(plane_counters):
     base, rng = _base()
     reg = TenantRegistry(base, memtable_budget=16, max_live=4)
     _populate(reg, rng, ["a", "b"])
     coalesced_retrieve(reg, _window(rng, ["a", "b"], n=4))  # warm plane+jit
 
-    stacks, dispatches = [], []
-    orig_stack, orig_search = store_mod.stack_segments, \
-        planner_mod.search_stacked
-
-    def c_stack(*a, **k):
-        stacks.append(1)
-        return orig_stack(*a, **k)
-
-    def c_search(*a, **k):
-        dispatches.append(1)
-        return orig_search(*a, **k)
-
-    monkeypatch.setattr(store_mod, "stack_segments", c_stack)
-    monkeypatch.setattr(planner_mod, "search_stacked", c_search)
+    stacks0 = plane_counters.stacks
+    dispatches0 = plane_counters.dispatches
+    snap = plane_counters.jit_snapshot()
     # 2 (mode, topk) groups x 3 windows: one dispatch per group per
     # window, zero re-stacks — per-tenant visibility is a mask, the union
     # plane is cached
@@ -464,9 +451,14 @@ def test_zero_restacks_and_one_dispatch_per_group(monkeypatch):
         for i, r in enumerate(reqs):
             r.rid = i
         coalesced_retrieve(reg, reqs)
-    assert not stacks, "coalesced hot path re-stacked the union plane"
-    assert len(dispatches) == 6, (len(dispatches), "expected one dispatch "
-                                  "per (mode, topk) group per window")
+    assert plane_counters.stacks == stacks0, \
+        "coalesced hot path re-stacked the union plane"
+    assert plane_counters.dispatches - dispatches0 == 6, (
+        plane_counters.dispatches - dispatches0,
+        "expected one dispatch per (mode, topk) group per window")
+    # windows after the first never miss the jit cache either: the two
+    # (mode, topk) groups compile on window 1, windows 2-3 are all hits
+    assert plane_counters.compiles_since(snap)["search_stacked"] <= 2
 
 
 # ---------------------------------------------------------------------------
