@@ -1,0 +1,190 @@
+"""Adaptive query-time routing: probe counts + QPS at iso-recall.
+
+The claim under test (ISSUE 9 tentpole): per-query early termination —
+stop probing once the next grain's routing lower bound exceeds the
+distance-gap margin over the query's best grain, with the hub set (top
+routing-win grains) always probed — lets EASY queries scan 2-3 grains
+while HARD queries keep the full ``nprobe``, so on a skewed query mix the
+store does strictly less scan work at the same recall.
+
+The mix is deliberately skewed the way serving traffic is: 80% easy
+queries (perturbed members of a few popular clusters — which also makes
+those clusters hubs) and 20% hard queries (cluster-boundary mixtures,
+where several centroids tie and the stopping rule must keep probing).
+
+Four assertions:
+  1. *Iso-recall*: adaptive Recall@10 within 0.005 of the static plane
+     (easy queries' neighbours live in their own grain; hard queries keep
+     their probes).
+  2. *Mean probe budget*: mean active probes < 0.6x the static nprobe.
+  3. *Tail probe budget*: p99 active probes strictly below the static
+     nprobe — even the hardest percentile terminates early somewhere.
+  4. *QPS*: the two-phase bucketed adaptive dispatch beats the static
+     plane on wall-clock QPS at that iso-recall (easy buckets re-enter
+     ``search_stacked`` with a genuinely smaller static probe width).
+
+Emits BENCH_routing.json at the repo root (QPS, recall, p50/p99 probe
+counts) — also returned as a dict so ``benchmarks.run`` can emit it.
+
+  PYTHONPATH=src python -m benchmarks.routing_adaptive [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import HNTLConfig, planner
+from repro.core.store import VectorStore
+
+BENCH_NAME = "routing"
+OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_routing.json")
+
+MARGIN = 0.35                     # distance-gap stopping margin under test
+
+
+def _time(fn, iters: int, warmup: int = 2, reps: int = 3) -> float:
+    for _ in range(warmup):
+        fn()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            fn()
+        best = min(best, (time.perf_counter() - t0) / iters)
+    return best
+
+
+def _corpus(n: int, d: int, n_clusters: int, seed: int):
+    """Well-separated Gaussian clusters: routing distances separate
+    cleanly, so the grain structure the stopping rule exploits exists."""
+    rng = np.random.default_rng(seed)
+    centers = rng.standard_normal((n_clusters, d)).astype(np.float32) * 6.0
+    per = n // n_clusters
+    x = np.concatenate([
+        centers[c] + rng.standard_normal((per, d)).astype(np.float32)
+        for c in range(n_clusters)])
+    return x, centers, rng
+
+
+def _skewed_queries(x, centers, rng, nq: int, easy_frac: float):
+    """Easy: perturbed members of the 4 most popular clusters (serving
+    skew -> those clusters become hubs).  Hard: two-cluster boundary
+    mixtures, where several routing distances tie."""
+    n_easy = int(nq * easy_frac)
+    d = x.shape[1]
+    hot = rng.integers(0, 4, size=n_easy)          # skew: 4 hot clusters
+    easy = (centers[hot]
+            + 0.5 * rng.standard_normal((n_easy, d)).astype(np.float32))
+    a, b = rng.integers(0, centers.shape[0], size=(2, nq - n_easy))
+    hard = ((centers[a] + centers[b]) / 2
+            + 1.5 * rng.standard_normal((nq - n_easy, d)).astype(np.float32))
+    q = np.concatenate([easy, hard]).astype(np.float32)
+    return q, n_easy
+
+
+def _recall(ids, gt, topk: int) -> float:
+    hit = sum(len(set(ids[i, :topk].tolist())
+                  & set(gt[i, :topk].tolist())) for i in range(gt.shape[0]))
+    return hit / (gt.shape[0] * topk)
+
+
+def _probe_counts(st, q, *, nprobe: int, margin: float) -> np.ndarray:
+    """Per-query active-probe counts of the store's CURRENT adaptive plan
+    (including its accumulated hub set) — the [Q] vector the bucketed
+    dispatch consumes, exposed for the percentile stats."""
+    man = st.snapshot()
+    entry = st._stacked_for(man.segments, None)
+    stacked = st._live_plane(entry, man, st._clock())
+    traffic = st._traffic_for(man.segments, stacked.index.routing.n_grains)
+    hub = st._hub_mask_host(traffic)
+    _, n_active, _, _ = planner.probe_plan(
+        stacked, jnp.asarray(q), nprobe=nprobe, probe_margin=margin,
+        min_probes=st.cfg.min_probes,
+        hub_mask=jnp.asarray(hub) if hub is not None else None)
+    return np.asarray(n_active)
+
+
+def main(quick: bool = False):
+    n = 8192 if quick else 32768
+    d, n_clusters = 48, 32
+    nprobe, pool, topk = 16, 32, 10
+    nq = 128 if quick else 512
+    iters = 3 if quick else 8
+
+    x, centers, rng = _corpus(n, d, n_clusters, seed=0)
+    q, n_easy = _skewed_queries(x, centers, rng, nq, easy_frac=0.8)
+    gt = np.argsort(((x[None] - q[:, None]) ** 2).sum(-1), axis=1)[:, :topk]
+
+    cfg = HNTLConfig(d=d, k=12, s=0, n_grains=n_clusters, nprobe=nprobe,
+                     pool=pool, block=64, probe_margin=MARGIN, hub_size=2)
+    st = VectorStore(cfg, seal_threshold=n)
+    st.add(x)
+    st.seal()
+
+    skw = dict(topk=topk, mode="B")
+    ids_static = np.asarray(st.search(q, **skw).ids)
+    # warm the traffic counters so the hub set exists before measurement
+    # (serving steady state), then measure the adaptive plan
+    st.search(q, adaptive=True, **skw)
+    ids_ad = np.asarray(st.search(q, adaptive=True, **skw).ids)
+
+    r_static = _recall(ids_static, gt, topk)
+    r_ad = _recall(ids_ad, gt, topk)
+    na = _probe_counts(st, q, nprobe=nprobe, margin=MARGIN)
+    mean_p, p50, p99 = (float(na.mean()), float(np.percentile(na, 50)),
+                        float(np.percentile(na, 99)))
+    hubs = st.hub_grains()
+    print(f"  skewed mix: {n_easy}/{nq} easy; hubs={hubs.tolist()}")
+    print(f"  Recall@{topk}: static {r_static:.3f}  adaptive {r_ad:.3f} "
+          f"(margin={MARGIN})")
+    print(f"  probes/query: static {nprobe}  adaptive mean {mean_p:.2f} "
+          f"p50 {p50:.0f} p99 {p99:.0f}")
+    assert r_ad >= r_static - 0.005, \
+        f"adaptive Recall@{topk} {r_ad:.3f} vs static {r_static:.3f}: " \
+        f"not iso-recall (want within 0.005)"
+    assert mean_p < 0.6 * nprobe, \
+        f"mean probes {mean_p:.2f} >= 0.6x static nprobe {nprobe}"
+    assert p99 < nprobe, \
+        f"p99 probes {p99:.0f} not strictly below static nprobe {nprobe}"
+
+    f_static = lambda: np.asarray(st.search(q, **skw).ids)     # noqa: E731
+    f_ad = lambda: np.asarray(st.search(                       # noqa: E731
+        q, adaptive=True, **skw).ids)
+    t_static, t_ad = _time(f_static, iters=iters), _time(f_ad, iters=iters)
+    qps_static, qps_ad = nq / t_static, nq / t_ad
+    lat_static, lat_ad = t_static / nq * 1e6, t_ad / nq * 1e6
+    print(f"  QPS @ Q={nq}: static {qps_static:,.0f} q/s  ->  adaptive "
+          f"{qps_ad:,.0f} q/s ({qps_ad / qps_static:.2f}x)")
+    assert qps_ad > qps_static, \
+        f"adaptive QPS {qps_ad:.0f} did not beat static {qps_static:.0f} " \
+        f"at iso-recall"
+
+    payload = {"n": n, "d": d, "quick": quick, "n_queries": nq,
+               "easy_frac": round(n_easy / nq, 3),
+               "probe_margin": MARGIN, "hub_size": cfg.hub_size,
+               "hub_grains": [int(g) for g in hubs],
+               "nprobe_static": nprobe,
+               "probes_mean": round(mean_p, 2),
+               "probes_p50": round(p50, 1), "probes_p99": round(p99, 1),
+               "recall_at_10_static": round(r_static, 4),
+               "recall_at_10_adaptive": round(r_ad, 4),
+               "qps_static": round(qps_static, 1),
+               "qps_adaptive": round(qps_ad, 1),
+               "latency_us_static": round(lat_static, 1),
+               "latency_us_adaptive": round(lat_ad, 1)}
+    with open(OUT, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"  wrote {os.path.relpath(OUT)}")
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    main(quick=ap.parse_args().quick)

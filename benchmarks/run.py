@@ -3,10 +3,18 @@
   PYTHONPATH=src python -m benchmarks.run            # standard sizes
   PYTHONPATH=src python -m benchmarks.run --quick    # CI-scale
   PYTHONPATH=src python -m benchmarks.run --only table2_scan
+
+A driver whose ``main(quick=...)`` returns a dict gets that dict written
+to ``BENCH_<name>.json`` at the repo root (machine-readable QPS / recall /
+latency / probe-count metrics; ``name`` is the module's ``BENCH_NAME``
+attribute, defaulting to the module name).  Drivers that write their own
+file and return None keep doing so.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
@@ -26,10 +34,22 @@ BENCHES = [
     ("drift", "Maintenance plane: recall under streaming drift, frozen "
               "partition vs split/merge/refit"),
     ("shard_scale", "Distributed plane: QPS + per-shard scan work vs shards"),
+    ("routing_adaptive", "Adaptive routing: hub-aware probing + per-query "
+                         "early termination — probe counts + QPS at "
+                         "iso-recall on a skewed mix, BENCH_routing.json"),
     ("serve_load", "Tenancy plane: many-tenant coalesced load — one "
                    "dispatch/window, zero re-stacks, zero leaks"),
     ("hntl_kv_decode", "HNTL-KV retrieval decode vs exact attention"),
 ]
+
+
+def _write_bench(name: str, payload: dict) -> None:
+    out = os.path.join(os.path.dirname(__file__), "..",
+                       f"BENCH_{name}.json")
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"--- wrote {os.path.relpath(out)}")
 
 
 def main(argv=None):
@@ -46,7 +66,9 @@ def main(argv=None):
         t0 = time.time()
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["main"])
-            mod.main(quick=args.quick)
+            ret = mod.main(quick=args.quick)
+            if isinstance(ret, dict):
+                _write_bench(getattr(mod, "BENCH_NAME", name), ret)
             print(f"--- {name} done in {time.time()-t0:.1f}s")
         except Exception:                                  # noqa: BLE001
             failures += 1

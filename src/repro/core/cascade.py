@@ -60,7 +60,7 @@ def check_budgets(budgets, topk: int) -> None:
 
 def _stage1_filter(engine: str, gids, rq, keep, res, mask, scale, res_scale,
                    sq, sketch, sketch_scale, tenant_mask, tenant_ix,
-                   b1: int):
+                   b1: int, n_active=None):
     """Stage 1: cheap filter over every probed slot via a zero-k panel.
 
     The scan distance is  coord_term + res*res_scale + rq (+ sketch_term)
@@ -81,6 +81,10 @@ def _stage1_filter(engine: str, gids, rq, keep, res, mask, scale, res_scale,
         kw = dict(sq=sq, sketch=sketch, sketch_scale=sketch_scale)
     if tenant_mask is not None:
         kw.update(tenant_mask=tenant_mask, tenant_ix=tenant_ix)
+    if n_active is not None:
+        # ride the ragged-probe stream too: the keep fold already kills the
+        # probes semantically, n_active= additionally dedupes their DMAs
+        kw["n_active"] = n_active
     runner = fused_scan_select if engine == "kernel" \
         else scan.blocksoa_select_ref
     return runner(gids, zq1, rq, keep, z1, res, mask, fsl, scale, res_scale,
@@ -99,10 +103,17 @@ def make_cascade_runner(stage1_engine: str):
     def cascade_select(gids, zq, rq, keep, coords, res, mask, rows, scale,
                        res_scale, sq=None, sketch=None, sketch_scale=None, *,
                        width: int, budgets: Optional[tuple] = None,
-                       tenant_mask=None, tenant_ix=None):
+                       tenant_mask=None, tenant_ix=None, n_active=None):
         g_n, k, cap = coords.shape
         q_n, p_n = gids.shape[:2]
         slots = p_n * cap
+        if n_active is not None:
+            # adaptive routing: killed probes fold into the keep verdict
+            # BEFORE stage 1, so the whole cascade (cheap filter, re-price,
+            # budgets) only ever prices active grains
+            keep = jnp.logical_and(
+                keep, jnp.arange(p_n, dtype=jnp.int32)[None, :]
+                < n_active[:, None])
         if budgets is None:
             b1, b2 = slots, width            # lossless: prune nothing
         else:
@@ -112,7 +123,8 @@ def make_cascade_runner(stage1_engine: str):
 
         d1, fs = _stage1_filter(stage1_engine, gids, rq, keep, res, mask,
                                 scale, res_scale, sq, sketch, sketch_scale,
-                                tenant_mask, tenant_ix, b1)
+                                tenant_mask, tenant_ix, b1,
+                                n_active=n_active)
         del d1                               # ranking only; re-priced below
 
         # ---- stage 2: full quantized distance on the b1 survivors -------

@@ -12,6 +12,7 @@ Everything is fixed-shape and jit-compatible.
 from __future__ import annotations
 
 import functools
+import math
 from typing import Optional
 
 import jax
@@ -91,7 +92,8 @@ def scan_probed(index: HNTLIndex, q: jax.Array, gids: jax.Array,
                 scan_fn=None,
                 extra_mask: Optional[jax.Array] = None,
                 tenant_mask: Optional[jax.Array] = None,
-                tenant_ix: Optional[jax.Array] = None):
+                tenant_ix: Optional[jax.Array] = None,
+                n_active: Optional[jax.Array] = None):
     """Gather-plane stages (2)+(3): project, envelope-filter, Block-SoA scan
     over per-query *copies* of the probed panels.
 
@@ -101,10 +103,16 @@ def scan_probed(index: HNTLIndex, q: jax.Array, gids: jax.Array,
     tenant_mask [T, G, cap] + tenant_ix [Q]: per-query tenant visibility —
     gather planes fold it into the per-query extra mask (the gather is
     probed-panels-only, [Q, P, cap], never the full [T, G, cap] stack).
+    n_active [Q] i32 (adaptive routing): gather planes have no ragged DMA
+    to dedupe, so killed probes simply fold into the envelope verdict.
     """
     g = index.grains
     zq_q, rq, keep, sq = _project_quantized(index, q, gids, envelope_frac,
                                             qeff)
+    if n_active is not None:
+        keep = jnp.logical_and(
+            keep, jnp.arange(gids.shape[1], dtype=jnp.int32)[None, :]
+            < n_active[:, None])
     scale = g.scale[gids]                                 # [Q, P]
     res_scale = g.res_scale[gids]
     panels = _gather_probed_panels(g, gids)
@@ -134,7 +142,8 @@ def select_probed(index: HNTLIndex, q: jax.Array, gids: jax.Array,
                   budgets: Optional[tuple] = None,
                   extra_mask: Optional[jax.Array] = None,
                   tenant_mask: Optional[jax.Array] = None,
-                  tenant_ix: Optional[jax.Array] = None):
+                  tenant_ix: Optional[jax.Array] = None,
+                  n_active: Optional[jax.Array] = None):
     """Select-plane stages (2)+(3)+(first-stage top-k): project, then hand
     the STACKED panel tier (no per-query gather) to a streaming scan→select
     runner that emits only the running top-``width`` pool.
@@ -143,6 +152,8 @@ def select_probed(index: HNTLIndex, q: jax.Array, gids: jax.Array,
     tenant_mask/tenant_ix ride through to the runner untouched — select
     runners stream the per-tenant visibility table (second scalar-prefetch
     stream in the fused kernel) instead of gathering per-query masks.
+    n_active [Q] i32 (adaptive routing) rides through the same way — the
+    runner's ragged-probe stream (third scalar-prefetch in the kernel).
     """
     g = index.grains
     zq_q, rq, keep, sq = _project_quantized(index, q, gids, envelope_frac,
@@ -156,6 +167,8 @@ def select_probed(index: HNTLIndex, q: jax.Array, gids: jax.Array,
         kw.update(tenant_mask=tenant_mask, tenant_ix=tenant_ix)
     if budgets is not None:
         kw["budgets"] = budgets
+    if n_active is not None:
+        kw["n_active"] = n_active
     width = min(width, gids.shape[1] * g.cap)
     return runner(gids, zq_q, rq, keep, g.coords, g.res, mask, g.ids,
                   g.scale, g.res_scale, width=width, **kw)
@@ -167,7 +180,8 @@ def candidate_stage(index: HNTLIndex, q: jax.Array, gids: jax.Array, *,
                     budgets: Optional[tuple] = None,
                     extra_mask: Optional[jax.Array] = None,
                     tenant_mask: Optional[jax.Array] = None,
-                    tenant_ix: Optional[jax.Array] = None):
+                    tenant_ix: Optional[jax.Array] = None,
+                    n_active: Optional[jax.Array] = None):
     """Dispatch the candidate-generation stage to a ScanPlane backend.
 
     Gather backends return the full [Q, P*cap] slot matrix; select backends
@@ -177,7 +191,10 @@ def candidate_stage(index: HNTLIndex, q: jax.Array, gids: jax.Array, *,
     contract — is backend-independent.  tenant_mask [T, G, cap] +
     tenant_ix [Q] (multi-tenant serving) are boolean per-query visibility:
     every backend applies them as a pure AND with its existing masks, so
-    backend parity is tenant-independent too.
+    backend parity is tenant-independent too.  n_active [Q] i32 (adaptive
+    routing's ragged-probe vector): select backends with the ``adaptive``
+    registry flag consume it natively (kernel prefetch stream), gather
+    backends fold it into the envelope verdict — same kill semantics.
     """
     plane = scanplane.get_scan_plane(scan_impl)
     if budgets is not None and not plane.staged:
@@ -185,14 +202,20 @@ def candidate_stage(index: HNTLIndex, q: jax.Array, gids: jax.Array, *,
             f"scan plane {plane.name!r} is not staged; per-stage survivor "
             "budgets need a cascade backend (scan_impl='cascade')")
     if plane.kind == scanplane.SELECT:
+        if n_active is not None and not plane.adaptive:
+            raise ValueError(
+                f"scan plane {plane.name!r} does not accept the "
+                "ragged-probe vector (n_active=); register it with "
+                "adaptive=True or use a non-adaptive dispatch")
         return select_probed(index, q, gids, envelope_frac, qeff,
                              width=width, runner=plane.runner,
                              budgets=budgets if plane.staged else None,
                              extra_mask=extra_mask, tenant_mask=tenant_mask,
-                             tenant_ix=tenant_ix)
+                             tenant_ix=tenant_ix, n_active=n_active)
     return scan_probed(index, q, gids, envelope_frac, qeff,
                        scan_fn=plane.runner, extra_mask=extra_mask,
-                       tenant_mask=tenant_mask, tenant_ix=tenant_ix)
+                       tenant_mask=tenant_mask, tenant_ix=tenant_ix,
+                       n_active=n_active)
 
 
 @functools.partial(
@@ -320,7 +343,7 @@ def _candidate_epilogue(dists, rows, q, raw, *, pool: int, topk: int,
     jax.jit,
     static_argnames=("nprobe", "pool", "topk", "mode", "envelope_frac",
                      "qeff", "scan_impl", "budgets", "route_mode",
-                     "seg_shape", "translate"))
+                     "seg_shape", "translate", "probe_margin", "min_probes"))
 def search_stacked(stacked: StackedSegments, q: jax.Array, *, nprobe: int,
                    pool: int, topk: int, mode: str = "B",
                    envelope_frac: float = 0.25, qeff: int = 8191,
@@ -331,7 +354,11 @@ def search_stacked(stacked: StackedSegments, q: jax.Array, *, nprobe: int,
                    tag_mask: Optional[jax.Array] = None,
                    ts_range: Optional[tuple] = None,
                    tenant_live: Optional[jax.Array] = None,
-                   tenant_ix: Optional[jax.Array] = None) -> SearchResult:
+                   tenant_ix: Optional[jax.Array] = None,
+                   probe_margin: Optional[float] = None,
+                   min_probes: int = 1,
+                   hub_mask: Optional[jax.Array] = None,
+                   probe_plan: Optional[tuple] = None) -> SearchResult:
     """Fused HNTL search across *all* sealed segments in one dispatch.
 
     Replaces the per-segment Python loop: one global routing pass over the
@@ -355,27 +382,50 @@ def search_stacked(stacked: StackedSegments, q: jax.Array, *, nprobe: int,
     serving): per-QUERY visibility over one shared plane — each query scans
     only its tenant's rows, with per-query routing pushdown, in the same
     single dispatch.
+    probe_margin (static float) + min_probes + hub_mask [G] bool (adaptive
+    routing, in-jit): after routing, the ``routing.adaptive_prefix``
+    stopping rule kills probes beyond the distance-gap closure (hubs are
+    always probed) and the ragged-probe vector rides to the candidate
+    stage.  ``probe_margin=None`` is exactly today's static trace;
+    ``probe_margin=inf`` is shortcut BEFORE tracing to the identical static
+    path — bit-identity by construction, never by accident of arithmetic.
+    probe_plan: precomputed (gids [Q, P], n_active [Q]) pair (from
+    :func:`probe_plan`) that skips internal routing entirely — the store's
+    bucketed adaptive dispatch slices one plan across width buckets.
     """
     check_budgets(budgets, topk)
+    adaptive = probe_margin is not None and not math.isinf(probe_margin)
     index = stacked.index
     extra, grain_ok = _mixed_recall_mask(index.grains, tag_mask, ts_range,
                                          live=stacked.live)
-    if route_mode == "per_segment":
+    n_active = None
+    if probe_plan is not None:
+        assert route_mode != "per_segment", \
+            "probe_plan needs global routing (one fused grain axis)"
+        gids, n_active = probe_plan
+    elif route_mode == "per_segment":
         # no filter pushdown here: the legacy loop routes unmasked and only
         # filters in-scan, and this mode's contract is loop-identical probes
         assert seg_shape is not None, "per_segment routing needs seg_shape"
         assert tenant_live is None, \
             "tenant visibility needs global routing (per-query pushdown)"
+        assert not adaptive, \
+            "adaptive routing needs global routing (route_mode='global')"
         gids, _ = routing.route_per_segment(index.routing, q, nprobe,
                                             seg_shape)
     else:
         gmask = _tenant_grain_mask(index.grains, extra, grain_ok,
                                    tenant_live, tenant_ix)
-        gids, _ = routing.route(index.routing, q, nprobe, grain_mask=gmask)
+        gids, gd2 = routing.route(index.routing, q, nprobe, grain_mask=gmask)
+        if adaptive:
+            gids, n_active = routing.adaptive_prefix(
+                gids, gd2, margin=probe_margin, min_probes=min_probes,
+                hub_mask=hub_mask)
     dists, rows = candidate_stage(
         index, q, gids, envelope_frac=envelope_frac, qeff=qeff,
         width=max(pool, topk), scan_impl=scan_impl, budgets=budgets,
-        extra_mask=extra, tenant_mask=tenant_live, tenant_ix=tenant_ix)
+        extra_mask=extra, tenant_mask=tenant_live, tenant_ix=tenant_ix,
+        n_active=n_active)
 
     # Mode B: merged candidate pool -> exact f32 re-rank over the fused
     # warm tier (single gather into the concatenated raw array).
@@ -385,6 +435,53 @@ def search_stacked(stacked: StackedSegments, q: jax.Array, *, nprobe: int,
         dists, rows, q, index.raw, pool=pool, topk=topk, mode=mode,
         translate=(lambda r, d: _translate_rows(stacked, r, d)) if translate
         else (lambda r, d: r))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("nprobe", "probe_margin", "min_probes"))
+def probe_plan(stacked: StackedSegments, q: jax.Array, *, nprobe: int,
+               probe_margin: float, min_probes: int = 1,
+               hub_mask: Optional[jax.Array] = None,
+               tag_mask: Optional[jax.Array] = None,
+               ts_range: Optional[tuple] = None,
+               tenant_live: Optional[jax.Array] = None,
+               tenant_ix: Optional[jax.Array] = None):
+    """Adaptive routing phase, standalone: route + stopping rule + traffic.
+
+    Runs EXACTLY the routing stage of :func:`search_stacked` (same filter /
+    liveness / tenant pushdown, same ``adaptive_prefix`` rule) and returns
+
+      (gids [Q, P] i32, n_active [Q] i32, wins [G] i32, touches [G] i32)
+
+    where ``wins[g]`` counts the queries whose routing WINNER (closest
+    grain) is g and ``touches[g]`` counts active probes landing on g — the
+    probe-traffic stats the hub set and ``grain_health`` consume.  The
+    store's two-phase adaptive dispatch calls this first (one cheap [Q, G]
+    routing pass), buckets queries by ``n_active`` on the host, and feeds
+    the sliced plan back through ``search_stacked(probe_plan=...)`` so easy
+    queries genuinely scan fewer grains (smaller static probe width), not
+    just masked ones.  ``probe_margin=inf`` returns the static plan
+    (all P active) — the identity bucket.
+    """
+    index = stacked.index
+    extra, grain_ok = _mixed_recall_mask(index.grains, tag_mask, ts_range,
+                                         live=stacked.live)
+    gmask = _tenant_grain_mask(index.grains, extra, grain_ok,
+                               tenant_live, tenant_ix)
+    gids, gd2 = routing.route(index.routing, q, nprobe, grain_mask=gmask)
+    if math.isinf(probe_margin):
+        n_active = jnp.full((q.shape[0],), gids.shape[1], jnp.int32)
+    else:
+        gids, n_active = routing.adaptive_prefix(
+            gids, gd2, margin=probe_margin, min_probes=min_probes,
+            hub_mask=hub_mask)
+    g_n = index.routing.n_grains
+    active = (jnp.arange(gids.shape[1], dtype=jnp.int32)[None, :]
+              < n_active[:, None]).astype(jnp.int32)
+    wins = jnp.zeros((g_n,), jnp.int32).at[gids[:, 0]].add(1)
+    touches = jnp.zeros((g_n,), jnp.int32).at[gids].add(active)
+    return gids, n_active, wins, touches
 
 
 # ---------------------------------------------------------------------------
@@ -402,7 +499,7 @@ def _spec_tree(tree, spec):
     jax.jit,
     static_argnames=("mesh", "grain_axis", "batch_axis", "nprobe", "pool",
                      "topk", "mode", "envelope_frac", "qeff", "scan_impl",
-                     "budgets", "translate"))
+                     "budgets", "translate", "probe_margin", "min_probes"))
 def search_stacked_sharded(plane: ShardedStackedSegments, q: jax.Array, *,
                            mesh, grain_axis: str = "model",
                            batch_axis: Optional[str] = None, nprobe: int,
@@ -414,7 +511,10 @@ def search_stacked_sharded(plane: ShardedStackedSegments, q: jax.Array, *,
                            tag_mask: Optional[jax.Array] = None,
                            ts_range: Optional[tuple] = None,
                            tenant_live: Optional[jax.Array] = None,
-                           tenant_ix: Optional[jax.Array] = None
+                           tenant_ix: Optional[jax.Array] = None,
+                           probe_margin: Optional[float] = None,
+                           min_probes: int = 1,
+                           hub_mask: Optional[jax.Array] = None
                            ) -> SearchResult:
     """Grain-sharded fused search: shard-local route/scan/pool/re-rank plus
     ONE top-k merge collective.
@@ -458,8 +558,21 @@ def search_stacked_sharded(plane: ShardedStackedSegments, q: jax.Array, *,
     ``sharding.shard_plane_field(dim=1)``) so each shard holds exactly its
     grain slice of every tenant's bitmap; ``tenant_ix`` rides with the
     queries (replicated, or batch-sharded alongside them).
+
+    Adaptive routing (``probe_margin``/``min_probes``/``hub_mask``) runs
+    *in-jit per shard*: each shard applies the distance-gap stopping rule
+    to its own local routing table, so per-shard probe budgets shrink
+    independently (a query may be easy on one shard and hard on another).
+    ``hub_mask`` is the global [G] hub bitmap, sharded along
+    ``grain_axis`` like the centroids, so hub pinning stays shard-local.
+    ``probe_margin=None`` (or inf) short-circuits to the static plane at
+    trace time — bit-identical by construction.  No host bucketing here:
+    the shard_map body is one fixed-shape program; killed probes are
+    masked (and their panel DMAs deduped by the ragged kernel) in place.
     """
     from ..distributed.sharding import SHARD_MAP_CHECK_KW, shard_map
+
+    adaptive = probe_margin is not None and not math.isinf(probe_margin)
 
     n_shards = mesh.shape[grain_axis]
     g_local = plane.index.grains.n_grains // n_shards
@@ -479,17 +592,24 @@ def search_stacked_sharded(plane: ShardedStackedSegments, q: jax.Array, *,
     assert mode == "A" or plane.index.raw is not None, \
         "in-jit Mode B needs the warm tier; cold stores re-rank on host"
 
-    def body(index, gid_local, live, qv, tm, tr, tliv, tix):
+    def body(index, gid_local, live, qv, tm, tr, tliv, tix, hub):
         extra, grain_ok = _mixed_recall_mask(index.grains, tm, tr, live=live)
         gmask = _tenant_grain_mask(index.grains, extra, grain_ok, tliv, tix)
-        gids, _ = routing.route(index.routing, qv, probe, grain_mask=gmask)
+        gids, gd2 = routing.route(index.routing, qv, probe, grain_mask=gmask)
+        n_active = None
+        if adaptive:
+            # per-shard stopping rule over the shard-local routing table;
+            # hub is this shard's slice of the global hub bitmap
+            gids, n_active = routing.adaptive_prefix(
+                gids, gd2, margin=probe_margin, min_probes=min_probes,
+                hub_mask=hub)
         # same ScanPlane backend per shard: the fused select kernel streams
         # this shard's probed panels and emits its [Q, pool_eff] pool only
         dists, rows = candidate_stage(
             index, qv, gids, envelope_frac=envelope_frac, qeff=qeff,
             width=max(pool_eff, k_local), scan_impl=scan_impl,
             budgets=budgets, extra_mask=extra, tenant_mask=tliv,
-            tenant_ix=tix)
+            tenant_ix=tix, n_active=n_active)
 
         def local_ids(rows_k, d_k):
             ok = jnp.logical_and(rows_k >= 0, d_k < BIG / 2)
@@ -517,9 +637,10 @@ def search_stacked_sharded(plane: ShardedStackedSegments, q: jax.Array, *,
                 _spec_tree(plane.live, P(grain_axis)), q_spec,
                 _spec_tree(tag_mask, P()), _spec_tree(ts_range, P()),
                 _spec_tree(tenant_live, P(None, grain_axis)),
-                _spec_tree(tenant_ix, q_spec))
+                _spec_tree(tenant_ix, q_spec),
+                _spec_tree(hub_mask, P(grain_axis)))
     fn = shard_map(body, mesh=mesh, in_specs=in_specs,
                    out_specs=(q_spec, q_spec), **{SHARD_MAP_CHECK_KW: False})
     ids, d = fn(plane.index, plane.gid_of_row, plane.live, q, tag_mask,
-                ts_range, tenant_live, tenant_ix)
+                ts_range, tenant_live, tenant_ix, hub_mask)
     return SearchResult(ids=ids, dists=d)

@@ -15,6 +15,7 @@ probes are never wasted on segments the filter rules out entirely.
 """
 from __future__ import annotations
 
+import math
 from typing import Optional
 
 import jax
@@ -50,6 +51,72 @@ def route(plane: RoutingPlane, q: jax.Array, nprobe: int,
     d2 = _centroid_d2(plane, q, grain_mask)
     neg_d, idx = jax.lax.top_k(-d2, nprobe)
     return idx.astype(jnp.int32), -neg_d
+
+
+def check_probe_args(adaptive: bool, probe_margin, min_probes=None) -> None:
+    """Host-side validation of the adaptive-probing knobs.
+
+    Shared by ``VectorStore.search``, the serving engine, the tenancy
+    coalescer and the launcher, so a bad combination fails at submit time
+    with one actionable message instead of as a shape/trace error three
+    layers down the jitted dispatch (the ``check_budgets`` discipline).
+    """
+    if probe_margin is not None:
+        if not adaptive:
+            raise ValueError(
+                "probe_margin= only applies to adaptive routing; pass "
+                "adaptive=True (or drop probe_margin)")
+        m = float(probe_margin)
+        if math.isnan(m) or m < 0.0:
+            raise ValueError(
+                f"probe_margin must be a float >= 0 (inf = exhaustive, "
+                f"i.e. static nprobe), got {probe_margin!r}")
+    if min_probes is not None and (isinstance(min_probes, bool)
+                                   or not isinstance(min_probes, int)
+                                   or min_probes < 1):
+        raise ValueError(
+            f"min_probes must be an int >= 1, got {min_probes!r}")
+
+
+def adaptive_prefix(gids: jax.Array, gd2: jax.Array, *, margin: float,
+                    min_probes: int = 1,
+                    hub_mask: Optional[jax.Array] = None):
+    """Per-query early termination over the routed top-P (in-jit).
+
+    The routing distance to a grain's centroid lower-bounds how useful the
+    grain can be: a grain whose centroid is far beyond the query's best
+    grain rarely contributes to the final pool (the SPANN closure rule).
+    A probe p stays *active* iff
+
+        gd2[q, p] <= (1 + margin) * gd2[q, 0]        (distance-gap rule)
+
+    or it is one of the first ``min_probes`` probes (tail-recall floor),
+    or it is a **hub** — a persistently high-traffic grain (``hub_mask``
+    [G] bool, from the routing-win counters) that is always probed to
+    stabilize tail recall.  Probes on invalid grains (``gd2 >= BIG/2`` —
+    masked or empty) are always killed.
+
+    Active probes are stable-partitioned to the FRONT of the probe axis
+    (relative order preserved — ascending gd2 stays ascending), so the
+    ragged-probe kernel consumes a plain per-query prefix length.
+
+    Returns (gids [Q, P] i32 reordered, n_active [Q] i32 >= 1).
+    ``margin=inf`` callers must shortcut before tracing (``(1 + inf) * 0``
+    is NaN); the planner treats inf as "static nprobe" by construction.
+    """
+    p_n = gids.shape[1]
+    pos = jnp.arange(p_n, dtype=jnp.int32)[None, :]
+    lead = gd2[:, :1]                                 # best routing distance
+    active = gd2 <= (1.0 + margin) * lead
+    if hub_mask is not None:
+        active = jnp.logical_or(active, hub_mask[gids])
+    active = jnp.logical_and(active, gd2 < BIG / 2)
+    active = jnp.logical_or(active, pos < min_probes)
+    # stable partition: actives first, original (ascending-gd2) order kept
+    order = jnp.argsort(jnp.logical_not(active), axis=1, stable=True)
+    gids_s = jnp.take_along_axis(gids, order, axis=1)
+    n_active = jnp.maximum(jnp.sum(active.astype(jnp.int32), axis=1), 1)
+    return gids_s, n_active
 
 
 def merge_target(centroids, live_counts, cap: int, src: int,

@@ -76,7 +76,8 @@ def blocksoa_select_ref(gids: jax.Array, zq: jax.Array, rq: jax.Array,
                         sketch_scale: jax.Array | None = None, *,
                         width: int,
                         tenant_mask: jax.Array | None = None,
-                        tenant_ix: jax.Array | None = None):
+                        tenant_ix: jax.Array | None = None,
+                        n_active: jax.Array | None = None):
     """Pure-jnp oracle for the fused scan→select kernel
     (`repro.kernels.fused_select.fused_scan_select`) — the CPU reference of
     the "fused" ScanPlane backend.
@@ -94,9 +95,18 @@ def blocksoa_select_ref(gids: jax.Array, zq: jax.Array, rq: jax.Array,
     tenant_mask [T, G, cap] bool + tenant_ix [Q] i32: optional *per-query*
     visibility (multi-tenant coalesced serving) — query q only sees slots
     where tenant_mask[tenant_ix[q], g] holds, ANDed with the shared mask.
+
+    n_active [Q] i32: optional per-query active-probe counts (adaptive
+    routing).  The matching jnp formulation of the kernel's ragged-probe
+    vector: probes p >= n_active[q] fold into the keep verdict, killing
+    every slot of the killed grain.  None = all P probes active.
     """
     q_n, p_n, _ = zq.shape
     cap = coords.shape[2]
+    if n_active is not None:
+        keep = jnp.logical_and(
+            keep, jnp.arange(p_n, dtype=jnp.int32)[None, :]
+            < n_active[:, None])
     c = coords[gids].astype(jnp.int32)                   # [Q, P, k, cap]
     d_int = jax.vmap(jax.vmap(block_dist_int))(zq, c)    # [Q, P, cap] i32
     sc = scale[gids]

@@ -63,6 +63,13 @@ class ScanPlane:
     ``staged`` backends additionally accept ``budgets=(b1, b2)`` per-stage
     survivor budgets (the mixed-precision cascade); passing budgets to a
     non-staged backend is a validation error.
+
+    ``adaptive`` select backends accept ``n_active=`` ([Q] i32 per-query
+    active-probe counts, adaptive routing's ragged-probe vector) and kill
+    probes p >= n_active[q] in-situ.  Gather backends need no flag — the
+    planner folds n_active into the envelope verdict before the scan.
+    Routing an adaptive plan to a select backend without the flag is a
+    validation error (external registrations opt in explicitly).
     """
 
     name: str
@@ -70,16 +77,18 @@ class ScanPlane:
     runner: Callable
     doc: str = ""
     staged: bool = False
+    adaptive: bool = False
 
 
 _REGISTRY: dict = {}
 
 
 def register_scan_plane(name: str, kind: str, runner: Callable,
-                        doc: str = "", staged: bool = False) -> ScanPlane:
+                        doc: str = "", staged: bool = False,
+                        adaptive: bool = False) -> ScanPlane:
     assert kind in (GATHER, SELECT), kind
     plane = ScanPlane(name=name, kind=kind, runner=runner, doc=doc,
-                      staged=staged)
+                      staged=staged, adaptive=adaptive)
     _REGISTRY[name] = plane
     return plane
 
@@ -117,18 +126,18 @@ register_scan_plane(
     "fused", SELECT, fused_scan_select,
     "scalar-prefetch fused scan→select kernel: gather-free panel "
     "streaming + in-VMEM running top-k (compiled on TPU, interpret "
-    "elsewhere)")
+    "elsewhere)", adaptive=True)
 register_scan_plane(
     "fused_ref", SELECT, scan.blocksoa_select_ref,
     "jnp two-stage-select oracle of the fused kernel (CPU oracle for the "
-    "select contract)")
+    "select contract)", adaptive=True)
 register_scan_plane(
     "cascade", SELECT, cascade.make_cascade_runner("kernel"),
     "mixed-precision cascade: §2.2 sketch/residual filter (stage 1, the "
     "fused kernel on a zero-k panel) → quantized tangent-coord re-price of "
     "the b1 survivors (stage 2) → exact raw re-rank (stage 3, the shared "
-    "epilogue); accepts budgets=(b1, b2)", staged=True)
+    "epilogue); accepts budgets=(b1, b2)", staged=True, adaptive=True)
 register_scan_plane(
     "cascade_ref", SELECT, cascade.make_cascade_runner("ref"),
     "the cascade with stage 1 on the jnp select oracle (fast CPU parity "
-    "path for the staged contract)", staged=True)
+    "path for the staged contract)", staged=True, adaptive=True)

@@ -50,6 +50,7 @@ from __future__ import annotations
 import collections
 import contextlib
 import dataclasses
+import math
 import os
 import tempfile
 import time
@@ -64,6 +65,7 @@ import numpy as np
 from . import index as index_mod
 from . import maintenance
 from . import planner
+from . import routing
 from .types import (BIG, HNTLConfig, HNTLIndex, GrainStore, RoutingPlane,
                     SearchResult, ShardedStackedSegments, StackedSegments)
 
@@ -479,6 +481,13 @@ class VectorStore:
         self.stack_cache_entries = stack_cache_entries
         self._stack_cache: "collections.OrderedDict" = \
             collections.OrderedDict()
+        # Adaptive-routing probe traffic, keyed like the plane cache by
+        # segment identity: accumulated routing-win / active-touch counters
+        # over the stacked grain axis ([S*gmax] int64).  Feeds the hub set
+        # (top hub_size by wins, always probed) and grain_health.  Bounded
+        # alongside the plane cache; a re-stack starts fresh counters.
+        self._probe_traffic: "collections.OrderedDict" = \
+            collections.OrderedDict()
 
     # ------------------------------------------------------------- write path
     def _expiry_of(self, ttl, n: int) -> list:
@@ -639,19 +648,90 @@ class VectorStore:
         (existing frame over the live rows), ``best`` [G] (refit bound),
         ``drift2`` [G] (squared centroid walk-off) and ``var_live`` [G] —
         the signals ``maintain()`` acts on, exposed for monitoring the
-        structural rot the mutation table accumulates between epochs.
+        structural rot the mutation table accumulates between epochs —
+        plus the adaptive-routing probe-traffic counters ``route_wins`` [G]
+        (queries whose routing winner was this grain) and ``touches`` [G]
+        (active probes that landed on it).  Traffic is zeros until an
+        ``adaptive=True`` search has run against the current segment set.
         """
         now = self._clock() if now is None else now
         mg, ms = self._mut_arrays()
+        traffic = self._probe_traffic.get(
+            tuple(id(s) for s in self._segments))
+        s_n = max(len(self._segments), 1)
+        gmax = (traffic["wins"].shape[0] // s_n) if traffic else 0
         out = []
-        for seg in self._segments:
+        for si, seg in enumerate(self._segments):
             stats = maintenance.grain_stats(
                 seg, self._seg_live_rows(seg, mg, ms, now))
+            g_seg = np.asarray(stats["live_cnt"]).shape[0]
+            if traffic is not None and (si + 1) * gmax <= \
+                    traffic["wins"].shape[0] and g_seg <= gmax:
+                wins = traffic["wins"][si * gmax:si * gmax + g_seg]
+                touch = traffic["touches"][si * gmax:si * gmax + g_seg]
+            else:
+                wins = np.zeros(g_seg, np.int64)
+                touch = np.zeros(g_seg, np.int64)
             out.append({k: stats[k] for k in
                         ("live_cnt", "captured", "best", "drift2",
                          "var_live")}
-                       | {"seg_id": seg.seg_id})
+                       | {"seg_id": seg.seg_id, "route_wins": wins,
+                          "touches": touch})
         return out
+
+    # ------------------------------------------------ adaptive probe traffic
+    def _traffic_for(self, segments: tuple, g_total: int) -> dict:
+        """Accumulated probe-traffic counters for one stacked segment set
+        (created zeroed on first use).  The entry pins the segment tuple so
+        its id()-key cannot be reused, exactly like the plane cache."""
+        key = tuple(id(s) for s in segments)
+        hit = self._probe_traffic.get(key)
+        if hit is None or hit["wins"].shape[0] != g_total:
+            hit = {"segments": tuple(segments),
+                   "wins": np.zeros(g_total, np.int64),
+                   "touches": np.zeros(g_total, np.int64),
+                   "queries": 0, "active_probes": 0}
+            self._probe_traffic[key] = hit
+            while len(self._probe_traffic) > max(4,
+                                                 self.stack_cache_entries):
+                self._probe_traffic.popitem(last=False)
+        else:
+            self._probe_traffic.move_to_end(key)
+        return hit
+
+    def _hub_mask_host(self, traffic: dict) -> Optional[np.ndarray]:
+        """Current hub set as a [G] bool bitmap over the stacked grain axis
+        (None until any traffic exists): the ``cfg.hub_size`` grains with
+        the highest accumulated routing wins — persistently high-traffic
+        grains every adaptive query probes unconditionally."""
+        wins = traffic["wins"]
+        if self.cfg.hub_size <= 0 or wins.max(initial=0) <= 0:
+            return None
+        top = np.argsort(wins, kind="stable")[::-1][:self.cfg.hub_size]
+        mask = np.zeros(wins.shape[0], bool)
+        mask[top[wins[top] > 0]] = True
+        return mask
+
+    def hub_grains(self) -> np.ndarray:
+        """Stacked-plane grain indices currently pinned as hubs (sorted;
+        empty until adaptive traffic accumulates for the live segment set).
+        """
+        hit = self._probe_traffic.get(tuple(id(s) for s in self._segments))
+        mask = self._hub_mask_host(hit) if hit is not None else None
+        if mask is None:
+            return np.zeros(0, np.int64)
+        return np.nonzero(mask)[0].astype(np.int64)
+
+    def probe_stats(self) -> dict:
+        """Read-only adaptive-routing traffic summary for the live segment
+        set: total adaptive ``queries``, total ``active_probes`` across
+        them, and ``mean_active`` probes/query (0.0 before any traffic)."""
+        hit = self._probe_traffic.get(tuple(id(s) for s in self._segments))
+        if hit is None or hit["queries"] == 0:
+            return {"queries": 0, "active_probes": 0, "mean_active": 0.0}
+        return {"queries": hit["queries"],
+                "active_probes": hit["active_probes"],
+                "mean_active": hit["active_probes"] / hit["queries"]}
 
     def maintain(self, *, now: Optional[float] = None,
                  policy: Optional[maintenance.MaintenancePolicy] = None
@@ -1116,6 +1196,9 @@ class VectorStore:
                fused: bool = True, route_mode: str = "global",
                mesh=None, grain_axis: str = "model",
                shard_queries: bool = False,
+               adaptive: bool = False,
+               probe_margin: Optional[float] = None,
+               min_probes: Optional[int] = None,
                now: Optional[float] = None) -> SearchResult:
         """Unified mixed-recall search across sealed segments + memtable.
 
@@ -1148,6 +1231,18 @@ class VectorStore:
         shard_queries: with a mesh, also shard the query batch over the
           mesh's data axis (throughput scaling; the axis size must divide
           the query count, and the axis must exist with size > 1).
+        adaptive: per-query adaptive probe counts — after routing, the
+          distance-gap stopping rule (``routing.adaptive_prefix``) kills
+          probes whose routing bound exceeds (1 + probe_margin)x the
+          query's best grain, so easy queries scan 2-3 grains while hard
+          queries keep the full nprobe.  Hub grains (the cfg.hub_size
+          highest routing-win grains from accumulated traffic) are always
+          probed.  Default-off; ``adaptive=False`` is bit-identical to the
+          static plane, and ``probe_margin=inf`` short-circuits to it at
+          dispatch time.  Needs the fused plane and global routing.
+        probe_margin / min_probes: stopping-rule knobs (None = the config's
+          ``probe_margin`` / ``min_probes``); setting them without
+          ``adaptive=True`` is a validation error.
         now: TTL clock override (default: the store clock).  Records whose
           TTL deadline passed are masked exactly like tombstones.
         """
@@ -1163,6 +1258,19 @@ class VectorStore:
                 raise ValueError(
                     "budgets= needs the fused search plane; the legacy "
                     "looped path has no staged candidate stage")
+        routing.check_probe_args(adaptive, probe_margin, min_probes)
+        if adaptive:
+            if not fused:
+                raise ValueError(
+                    "adaptive=True needs the fused search plane; the "
+                    "legacy looped path has no ragged-probe stage")
+            if route_mode != "global":
+                raise ValueError(
+                    "adaptive=True needs route_mode='global' (the "
+                    "stopping rule compares one fused routing pass)")
+        margin = (self.cfg.probe_margin if probe_margin is None
+                  else float(probe_margin))
+        minp = self.cfg.min_probes if min_probes is None else int(min_probes)
         if not fused:
             if mesh is not None:
                 raise ValueError("mesh= requires the fused search plane")
@@ -1181,13 +1289,17 @@ class VectorStore:
                     ts_range=ts_range, scan_impl=scan_impl,
                     budgets=budgets, nprobe=nprobe, pool=pool, mesh=mesh,
                     grain_axis=grain_axis,
-                    shard_queries=shard_queries, now=now)
+                    shard_queries=shard_queries, now=now,
+                    adaptive=adaptive, probe_margin=margin,
+                    min_probes=minp)
             else:
                 ids_s, d_s = self._search_segments_fused(
                     q, man, topk=topk, mode=mode, tag_mask=tag_mask,
                     ts_range=ts_range, scan_impl=scan_impl,
                     budgets=budgets, nprobe=nprobe, pool=pool,
-                    route_mode=route_mode, now=now)
+                    route_mode=route_mode, now=now,
+                    adaptive=adaptive, probe_margin=margin,
+                    min_probes=minp)
             all_ids.append(ids_s)
             all_d.append(d_s)
         return self._merge_with_memtable(q, man, all_ids, all_d, topk,
@@ -1231,7 +1343,9 @@ class VectorStore:
     def _search_segments_fused(self, q, man, *, topk, mode, tag_mask,
                                ts_range, scan_impl, nprobe, pool,
                                route_mode, now, budgets=None,
-                               tenant_live=None, tenant_ix=None):
+                               tenant_live=None, tenant_ix=None,
+                               adaptive=False, probe_margin=1.0,
+                               min_probes=1):
         """One jitted search over the stacked plane.  Returns numpy
         (global_ids [Q, k], dists [Q, k]).
 
@@ -1266,6 +1380,15 @@ class VectorStore:
             kw["tenant_ix"] = jax.device_put(np.asarray(tenant_ix, np.int32))
         qj = jnp.asarray(q)
 
+        if adaptive and not math.isinf(probe_margin):
+            return self._adaptive_fused(
+                q, qj, segments, stacked, entry, kw, mode=mode,
+                pool_eff=pool_eff, topk_eff=topk_eff, probe=probe,
+                budgets=budgets, probe_margin=probe_margin,
+                min_probes=min_probes,
+                tenant_ix_host=(np.asarray(tenant_ix, np.int32)
+                                if tenant_ix is not None else None))
+
         if mode == "B" and stacked.index.raw is None:
             # Cold tier: one jitted approximate scan over the whole stack,
             # then ONE merged-pool exact re-rank from the per-segment memmaps
@@ -1288,6 +1411,94 @@ class VectorStore:
         # tier (the final top-k), visible to the transfer guard as such.
         return (np.asarray(jax.device_get(res.ids), np.int64),
                 np.asarray(jax.device_get(res.dists), np.float32))
+
+    def _adaptive_fused(self, q, qj, segments, stacked, entry, kw, *, mode,
+                        pool_eff, topk_eff, probe, budgets, probe_margin,
+                        min_probes, tenant_ix_host=None):
+        """Two-phase bucketed adaptive dispatch over the fused plane.
+
+        Phase 1 (``planner.probe_plan``): ONE jitted routing pass applies
+        the distance-gap stopping rule + hub pinning and returns each
+        query's active-probe prefix plus the traffic counters the hub set
+        feeds on.  Phase 2: queries are bucketed host-side by pow-2 probe
+        width and each bucket re-enters ``search_stacked`` with its SLICED
+        plan — a genuinely smaller static probe width, so easy queries
+        scan (and pay for) fewer grain panels instead of merely masking
+        them; within a bucket the ragged ``n_active`` vector still kills
+        (and, on the fused kernel, DMA-dedupes) the slack probes between a
+        query's count and the bucket width.  Pow-2 widths bound the jit
+        cache at log2(nprobe) traces per plane, the same amortisation the
+        coalesced serving plane's _BUCKET query padding uses.
+        """
+        g_total = stacked.index.routing.n_grains
+        traffic = self._traffic_for(segments, g_total)
+        hub_host = self._hub_mask_host(traffic)
+        hub = jax.device_put(hub_host) if hub_host is not None else None
+        pkw = {k: kw[k] for k in ("tag_mask", "ts_range") if k in kw}
+        for k in ("tenant_live", "tenant_ix"):
+            if k in kw:
+                pkw[k] = kw[k]
+        gids_d, na_d, wins, touches = planner.probe_plan(
+            stacked, qj, nprobe=probe, probe_margin=probe_margin,
+            min_probes=min_probes, hub_mask=hub, **pkw)
+        # Explicit D2H of the plan: the host bucketing phase is the point.
+        gids_h = np.asarray(jax.device_get(gids_d), np.int32)
+        na_h = np.asarray(jax.device_get(na_d), np.int32)
+        traffic["wins"] += np.asarray(jax.device_get(wins), np.int64)
+        traffic["touches"] += np.asarray(jax.device_get(touches), np.int64)
+        traffic["queries"] += int(na_h.shape[0])
+        traffic["active_probes"] += int(na_h.sum())
+
+        cap = stacked.index.grains.cap
+        q_n = q.shape[0]
+        cold = mode == "B" and stacked.index.raw is None
+        if cold:
+            pe = (pool_eff if budgets is None
+                  else min(pool_eff, int(budgets[1])))
+            out_ids = np.full((q_n, pe), -1, np.int64)
+            out_d = np.full((q_n, pe), _BIG, np.float32)
+        else:
+            out_ids = np.full((q_n, topk_eff), -1, np.int64)
+            out_d = np.full((q_n, topk_eff), _BIG, np.float32)
+
+        wq = np.ones_like(na_h)                  # pow-2 bucket widths
+        while bool((wq < na_h).any()):
+            wq = np.where(wq < na_h, wq * 2, wq)
+        wq = np.minimum(wq, probe)
+        for w in sorted(int(v) for v in np.unique(wq)):
+            sel = np.nonzero(wq == w)[0]
+            # clamp the pool to what w grains can hold: a narrow bucket
+            # must not ask top-k for more slots than it scans
+            pool_b = min(pool_eff, w * cap)
+            topk_b = min(topk_eff, pool_b)
+            bkw = dict(kw, nprobe=w)
+            if tenant_ix_host is not None:
+                bkw["tenant_ix"] = jax.device_put(tenant_ix_host[sel])
+            plan = (jax.device_put(np.ascontiguousarray(gids_h[sel, :w])),
+                    jax.device_put(np.minimum(na_h[sel], w)))
+            qb = jnp.asarray(q[sel])
+            if cold:
+                pe_b = min(pe, pool_b)
+                res = planner.search_stacked(
+                    stacked, qb, pool=pool_b, topk=pe_b, mode="A",
+                    translate=False, probe_plan=plan, **bkw)
+                out_ids[sel[:, None], np.arange(pe_b)[None, :]] = \
+                    jax.device_get(res.ids)
+                out_d[sel[:, None], np.arange(pe_b)[None, :]] = \
+                    jax.device_get(res.dists)
+            else:
+                res = planner.search_stacked(
+                    stacked, qb, pool=pool_b, topk=topk_b, mode=mode,
+                    probe_plan=plan, **bkw)
+                out_ids[sel[:, None], np.arange(topk_b)[None, :]] = \
+                    np.asarray(jax.device_get(res.ids), np.int64)
+                out_d[sel[:, None], np.arange(topk_b)[None, :]] = \
+                    jax.device_get(res.dists)
+        if cold:
+            ok = (out_ids >= 0) & (out_d < _BIG / 2)
+            return self._cold_rerank(q, segments, entry["offsets"],
+                                     entry["gids"], out_ids, ok, topk_eff)
+        return out_ids, out_d
 
     def _cold_rerank(self, q, segments, offsets, gids_host, rows, ok, topk):
         """Host-side exact Mode B re-rank of a merged candidate pool from
@@ -1343,13 +1554,24 @@ class VectorStore:
                                  ts_range, scan_impl, nprobe, pool, mesh,
                                  grain_axis, shard_queries, now,
                                  budgets=None, tenant_live=None,
-                                 tenant_ix=None):
+                                 tenant_ix=None, adaptive=False,
+                                 probe_margin=1.0, min_probes=1):
         """Distributed fused search: shard-local route/scan/pool/re-rank and
         one all-gather merge collective.  Returns numpy (global_ids, dists).
 
         tenant_live/tenant_ix: as in :meth:`_search_segments_fused`; the
         [T, G, cap] stack is placed grain-sharded on dim 1 (tenant axis
         replicated) so each shard sees its slice of every tenant's bitmap.
+
+        adaptive: the stopping rule runs IN-JIT per shard (each shard's
+        probe budget shrinks independently against its local routing
+        table) — no host bucketing, the shard_map body stays one
+        fixed-shape program with killed probes masked/DMA-deduped in
+        place.  Hub pinning is a single-device serving feature: the
+        traffic counters accumulate on the fused plane's grain axis,
+        which does not map onto the sharded plane's permuted layout, so
+        the sharded path passes no hub mask (the planner-level hub_mask
+        hook stays available to callers that shard their own counters).
         """
         from ..distributed import sharding as shd
         segments = man.segments
@@ -1374,6 +1596,9 @@ class VectorStore:
                   nprobe=probe, envelope_frac=self.cfg.envelope_frac,
                   qeff=qeff, scan_impl=scan_impl, budgets=budgets,
                   tag_mask=tm, ts_range=tr)
+        if adaptive and not math.isinf(probe_margin):
+            kw["probe_margin"] = probe_margin
+            kw["min_probes"] = min_probes
         if tenant_live is not None:
             kw["tenant_live"] = shd.shard_plane_field(
                 np.asarray(tenant_live), entry["rules"], "tenant_live",

@@ -58,6 +58,14 @@ class HNTLConfig:
     # trust a 3-bit magnitude).
     int4_captured_min: float = 0.85
     int4_min_rows: int = 8
+    # Adaptive query-time routing (default-off; ``search(adaptive=True)``).
+    # A probe stays active while its routing distance is within
+    # (1 + probe_margin) of the query's best grain; min_probes grains are
+    # always scanned, and the hub_size highest routing-win grains (the hub
+    # set, refreshed from live probe-traffic counters) are always probed.
+    probe_margin: float = 1.0
+    min_probes: int = 1
+    hub_size: int = 4
 
     @property
     def qmax(self) -> int:

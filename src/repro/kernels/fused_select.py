@@ -32,6 +32,22 @@ tenant's [1, BLK_C] mask tile.  No [Q, P, cap] per-query mask is ever
 materialized — tenant state in HBM is O(T·G·cap), shared across queries —
 and the no-tenant path simply passes ``mgids = gids`` with the usual
 [G, cap] mask (same kernel, no extra cost).
+
+Adaptive routing adds a THIRD scalar-prefetch stream: ``n_active`` [Q] i32
+per-query active-probe counts (the ragged-probe vector).  The grid stays
+static at the padded (Q, P, tiles) shape; probes ``p >= n_active[q]`` are
+*killed* two ways at once:
+
+- their block index maps clamp to ``min(p, n_active[q] - 1)`` — the
+  pipeline sees the SAME block indices as the previous grid step, and the
+  Pallas TPU pipeline skips the copy for an unchanged block, so a killed
+  probe costs no HBM traffic (the DMA-dedupe property);
+- the kernel body wraps distance work + carry merge in
+  ``pl.when(p < n_active[q])``, so a killed probe's (re-resident) tile
+  never touches the carry — in-situ masking, bit-identical to not having
+  probed at all.
+
+``n_active=None`` (or all-P) reduces to the static kernel by construction.
 """
 from __future__ import annotations
 
@@ -90,7 +106,7 @@ def _make_select_kernel(has_sketch: bool):
     else (carry lifecycle, in-situ predicate, emit) is single-sourced here.
     """
 
-    def kernel(gids_ref, mgids_ref, zq_ref, rq_ref, keep_ref, *rest):
+    def kernel(gids_ref, mgids_ref, na_ref, zq_ref, rq_ref, keep_ref, *rest):
         if has_sketch:
             (sq_ref, coords_ref, res_ref, mask_ref, rows_ref, scale_ref,
              res_scale_ref, sketch_ref, sk_scale_ref,
@@ -98,29 +114,37 @@ def _make_select_kernel(has_sketch: bool):
         else:
             (coords_ref, res_ref, mask_ref, rows_ref, scale_ref,
              res_scale_ref, out_d_ref, out_r_ref, best_d, best_r) = rest
-        p_i, j = pl.program_id(1), pl.program_id(2)
+        q_i, p_i, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
 
         @pl.when(jnp.logical_and(p_i == 0, j == 0))
         def _init():                                     # fresh query: reset
             best_d[...] = jnp.full(best_d.shape, NEG_BIG, best_d.dtype)
             best_r[...] = jnp.full(best_r.shape, -1, best_r.dtype)
 
-        d = _tile_dist(zq_ref, rq_ref, coords_ref, res_ref, scale_ref,
-                       res_scale_ref)
-        if has_sketch:
-            sq = sq_ref[...]                             # [1, s] i32
-            sk = sketch_ref[...].astype(jnp.int32)       # [s, BLK_C]
-            s_cross = jax.lax.dot_general(
-                sq, sk, (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.int32)
-            s_int = jnp.sum(sq * sq, axis=1, keepdims=True) \
-                + jnp.sum(sk * sk, axis=0, keepdims=True) - 2 * s_cross
-            sk_scale = sk_scale_ref[0, 0]
-            d = d + s_int.astype(jnp.float32) * (sk_scale * sk_scale)
-        # in-situ predicate: validity ∧ liveness/tag/ts ∧ envelope verdict
-        keep = jnp.logical_and(mask_ref[...] != 0, keep_ref[0, 0] != 0)
-        d = jnp.where(keep, d, jnp.float32(NEG_BIG))
-        _merge_tile(best_d, best_r, d, rows_ref[...])
+        # Ragged probes: killed cells (p >= n_active[q]) skip all distance
+        # work and never touch the carry.  Their index maps clamp to the
+        # last active probe's blocks, so the resident tiles this branch
+        # skips cost no HBM traffic either.
+        @pl.when(p_i < na_ref[q_i])
+        def _scan():
+            d = _tile_dist(zq_ref, rq_ref, coords_ref, res_ref, scale_ref,
+                           res_scale_ref)
+            if has_sketch:
+                sq = sq_ref[...]                         # [1, s] i32
+                sk = sketch_ref[...].astype(jnp.int32)   # [s, BLK_C]
+                s_cross = jax.lax.dot_general(
+                    sq, sk, (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.int32)
+                s_int = jnp.sum(sq * sq, axis=1, keepdims=True) \
+                    + jnp.sum(sk * sk, axis=0, keepdims=True) - 2 * s_cross
+                sk_scale = sk_scale_ref[0, 0]
+                d2 = d + s_int.astype(jnp.float32) * (sk_scale * sk_scale)
+            else:
+                d2 = d
+            # in-situ predicate: validity ∧ liveness/tag/ts ∧ envelope
+            keep = jnp.logical_and(mask_ref[...] != 0, keep_ref[0, 0] != 0)
+            d2 = jnp.where(keep, d2, jnp.float32(NEG_BIG))
+            _merge_tile(best_d, best_r, d2, rows_ref[...])
 
         last = jnp.logical_and(p_i == pl.num_programs(1) - 1,
                                j == pl.num_programs(2) - 1)
@@ -146,7 +170,7 @@ def _round_up(n: int, m: int) -> int:
 def fused_scan_select(gids, zq, rq, keep, coords, res, mask, rows, scale,
                       res_scale, sq=None, sketch=None, sketch_scale=None, *,
                       width: int, interpret=None,
-                      tenant_mask=None, tenant_ix=None):
+                      tenant_mask=None, tenant_ix=None, n_active=None):
     """Streaming scan→select over the probed grains of a stacked index.
 
     Args (Q queries, P probed grains/query, G total grains, cap slots/grain):
@@ -164,6 +188,11 @@ def fused_scan_select(gids, zq, rq, keep, coords, res, mask, rows, scale,
       per-query visibility (coalesced multi-tenant serving).  Folded into
       the streamed mask via the second scalar-prefetch stream (see module
       docstring); the kernel body is tenant-oblivious.
+      Optional adaptive routing: n_active [Q] i32 (1 <= n_active <= P) —
+      per-query active-probe counts (the ragged-probe vector, third
+      scalar-prefetch stream).  Probes p >= n_active[q] are killed in-situ
+      with their block DMAs deduped away; None = all P probes active
+      (bit-identical to the static formulation by construction).
 
     Returns (dists [Q, width] f32 ascending, rows [Q, width] i32); slots
     beyond the live candidates carry (BIG, -1).  ``interpret=None`` resolves
@@ -174,6 +203,8 @@ def fused_scan_select(gids, zq, rq, keep, coords, res, mask, rows, scale,
     q_n, p_n, k = zq.shape
     g_n, _, cap = coords.shape
     gids = gids.astype(jnp.int32)
+    na = (jnp.full((q_n,), p_n, jnp.int32) if n_active is None
+          else n_active.astype(jnp.int32))
     if tenant_mask is not None:
         # flatten tenants into the mask's leading axis; the second prefetch
         # stream addresses tenant t's grain g at row t*G + g
@@ -194,14 +225,25 @@ def fused_scan_select(gids, zq, rq, keep, coords, res, mask, rows, scale,
     w_pad = _round_up(max(width, 1), 128)      # lane-aligned carry width
 
     grid = (q_n, p_n, capp // BLK_C)
+
     # Block index maps: scalar-prefetched gids turn (q, p) into the probed
     # grain's HBM offset — affine streaming, no gather anywhere.  The mask
     # alone is addressed through the second prefetch stream (mg), which is
     # the per-(query, probe) row of the possibly-tenant-flattened table.
+    # Every probe-indexed map clamps p to the query's last ACTIVE probe
+    # (third prefetch stream): killed grid cells revisit the same block
+    # indices as the previous step, and the pipeline skips the copy for an
+    # unchanged block — a killed probe costs no DMA.
+    def _pc(p, q, na):
+        return jnp.minimum(p, na[q] - 1)
+
     in_specs = [
-        pl.BlockSpec((None, None, 1, k), lambda q, p, j, g, mg: (q, p, 0, 0)),
-        pl.BlockSpec((None, None, 1, 1), lambda q, p, j, g, mg: (q, p, 0, 0)),
-        pl.BlockSpec((None, None, 1, 1), lambda q, p, j, g, mg: (q, p, 0, 0)),
+        pl.BlockSpec((None, None, 1, k),
+                     lambda q, p, j, g, mg, na: (q, _pc(p, q, na), 0, 0)),
+        pl.BlockSpec((None, None, 1, 1),
+                     lambda q, p, j, g, mg, na: (q, _pc(p, q, na), 0, 0)),
+        pl.BlockSpec((None, None, 1, 1),
+                     lambda q, p, j, g, mg, na: (q, _pc(p, q, na), 0, 0)),
     ]
     args = [
         zq[:, :, None, :],
@@ -212,19 +254,21 @@ def fused_scan_select(gids, zq, rq, keep, coords, res, mask, rows, scale,
         s_dim = sq.shape[2]
         in_specs.append(
             pl.BlockSpec((None, None, 1, s_dim),
-                         lambda q, p, j, g, mg: (q, p, 0, 0)))
+                         lambda q, p, j, g, mg, na: (q, _pc(p, q, na), 0, 0)))
         args.append(sq[:, :, None, :])
     in_specs += [
         pl.BlockSpec((None, k, BLK_C),
-                     lambda q, p, j, g, mg: (g[q, p], 0, j)),
+                     lambda q, p, j, g, mg, na: (g[q, _pc(p, q, na)], 0, j)),
         pl.BlockSpec((None, 1, BLK_C),
-                     lambda q, p, j, g, mg: (g[q, p], 0, j)),
+                     lambda q, p, j, g, mg, na: (g[q, _pc(p, q, na)], 0, j)),
         pl.BlockSpec((None, 1, BLK_C),
-                     lambda q, p, j, g, mg: (mg[q, p], 0, j)),
+                     lambda q, p, j, g, mg, na: (mg[q, _pc(p, q, na)], 0, j)),
         pl.BlockSpec((None, 1, BLK_C),
-                     lambda q, p, j, g, mg: (g[q, p], 0, j)),
-        pl.BlockSpec((None, 1, 1), lambda q, p, j, g, mg: (g[q, p], 0, 0)),
-        pl.BlockSpec((None, 1, 1), lambda q, p, j, g, mg: (g[q, p], 0, 0)),
+                     lambda q, p, j, g, mg, na: (g[q, _pc(p, q, na)], 0, j)),
+        pl.BlockSpec((None, 1, 1),
+                     lambda q, p, j, g, mg, na: (g[q, _pc(p, q, na)], 0, 0)),
+        pl.BlockSpec((None, 1, 1),
+                     lambda q, p, j, g, mg, na: (g[q, _pc(p, q, na)], 0, 0)),
     ]
     args += [
         coords,
@@ -238,18 +282,23 @@ def fused_scan_select(gids, zq, rq, keep, coords, res, mask, rows, scale,
         s_dim = sq.shape[2]
         in_specs += [
             pl.BlockSpec((None, s_dim, BLK_C),
-                         lambda q, p, j, g, mg: (g[q, p], 0, j)),
-            pl.BlockSpec((None, 1, 1), lambda q, p, j, g, mg: (g[q, p], 0, 0)),
+                         lambda q, p, j, g, mg, na:
+                         (g[q, _pc(p, q, na)], 0, j)),
+            pl.BlockSpec((None, 1, 1),
+                         lambda q, p, j, g, mg, na:
+                         (g[q, _pc(p, q, na)], 0, 0)),
         ]
         args += [sketch, sketch_scale[:, None, None]]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=grid,
         in_specs=in_specs,
         out_specs=[
-            pl.BlockSpec((None, 1, w_pad), lambda q, p, j, g, mg: (q, 0, 0)),
-            pl.BlockSpec((None, 1, w_pad), lambda q, p, j, g, mg: (q, 0, 0)),
+            pl.BlockSpec((None, 1, w_pad),
+                         lambda q, p, j, g, mg, na: (q, 0, 0)),
+            pl.BlockSpec((None, 1, w_pad),
+                         lambda q, p, j, g, mg, na: (q, 0, 0)),
         ],
         scratch_shapes=[
             pltpu.VMEM((1, w_pad), jnp.float32),   # running top-W dists
@@ -265,5 +314,5 @@ def fused_scan_select(gids, zq, rq, keep, coords, res, mask, rows, scale,
             jax.ShapeDtypeStruct((q_n, 1, w_pad), jnp.int32),
         ],
         interpret=interpret,
-    )(gids, mgids, *args)
+    )(gids, mgids, na, *args)
     return out_d[:, 0, :width], out_r[:, 0, :width]

@@ -63,6 +63,19 @@ def main(argv=None):
                     help="per-stage survivor budgets for staged backends "
                          "(--scan-impl cascade): stage 1 keeps B1 probed "
                          "slots, stage 2 keeps B2 for the exact re-rank")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="adaptive query-time routing: per-query early "
+                         "termination (distance-gap stopping rule) + "
+                         "hub-aware probing — easy queries scan 2-3 grains, "
+                         "hard queries keep the full nprobe")
+    ap.add_argument("--probe-margin", default=None, metavar="M",
+                    help="adaptive stopping-rule margin: probes within "
+                         "(1+M)x the best grain's routing distance stay "
+                         "active (requires --adaptive; 'inf' = static "
+                         "nprobe; default: the store config's margin)")
+    ap.add_argument("--min-probes", default=None, metavar="N",
+                    help="probe floor per query under --adaptive (default: "
+                         "the store config's floor)")
     ap.add_argument("--tenants", type=int, default=0,
                     help="serve the memory multi-tenant: N namespaces with "
                          "private writes over the shared corpus, retrievals "
@@ -77,6 +90,18 @@ def main(argv=None):
         except ValueError:
             raise SystemExit(f"--budgets expects B1,B2 ints, "
                              f"got {args.budgets!r}")
+    # Up-front validation, like --budgets: a bad adaptive knob combination
+    # must fail at launch, not three layers down the first retrieval.
+    probe_margin = min_probes = None
+    try:
+        if args.probe_margin is not None:
+            probe_margin = float(args.probe_margin)
+        if args.min_probes is not None:
+            min_probes = int(args.min_probes)
+        from ..core.routing import check_probe_args
+        check_probe_args(args.adaptive, probe_margin, min_probes)
+    except ValueError as e:
+        raise SystemExit(f"bad adaptive routing flags: {e}")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     assert cfg.family != "encdec", "use examples/serve_whisper for enc-dec"
@@ -96,15 +121,25 @@ def main(argv=None):
                          max_len=args.max_len, temperature=args.temperature,
                          seed=args.seed, memory=memory,
                          memory_mesh=memory_mesh, scan_impl=args.scan_impl,
-                         budgets=budgets, tenants=tenants)
+                         budgets=budgets, tenants=tenants,
+                         adaptive=args.adaptive, probe_margin=probe_margin,
+                         min_probes=min_probes)
     if memory is not None:
         res = engine.retrieve(demo_q, topk=4, mode="B")
         plane = ("sharded x%d" % args.retrieval_shards
                  if memory_mesh is not None else "single-device")
+        routing_lbl = "static"
+        if args.adaptive:
+            st = memory.probe_stats()
+            m = (probe_margin if probe_margin is not None
+                 else memory.cfg.probe_margin)
+            routing_lbl = (f"adaptive (margin={m}, mean probes "
+                           f"{st['mean_active']:.1f})"
+                           if st["queries"] else "adaptive")
         print(f"[serve] retrieval sidecar: {memory.n_vectors} docs, "
               f"{plane} search plane, scan_impl="
-              f"{args.scan_impl or 'auto'}, probe ids[0]="
-              f"{np.asarray(res.ids)[0].tolist()}")
+              f"{args.scan_impl or 'auto'}, {routing_lbl} routing, "
+              f"probe ids[0]={np.asarray(res.ids)[0].tolist()}")
     if tenants is not None:
         # demo window: every tenant writes a few private docs, then one
         # coalesced flush serves one retrieval per tenant in ONE dispatch

@@ -39,12 +39,18 @@ class ServeEngine:
     budgets: Optional[tuple] = None
     tenants = None                  # Optional[tenancy.TenantRegistry]
     memory_mesh = None
+    adaptive: bool = False
+    probe_margin: Optional[float] = None
+    min_probes: Optional[int] = None
 
     def __init__(self, model, params, *, n_slots: int = 4,
                  max_len: int = 512, temperature: float = 0.0, seed: int = 0,
                  memory: Optional[VectorStore] = None, memory_mesh=None,
                  scan_impl: Optional[str] = None,
-                 budgets: Optional[tuple] = None, tenants=None):
+                 budgets: Optional[tuple] = None, tenants=None,
+                 adaptive: bool = False,
+                 probe_margin: Optional[float] = None,
+                 min_probes: Optional[int] = None):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -69,6 +75,15 @@ class ServeEngine:
         # keeps b2 for the exact re-rank (validated against each topk).
         self.scan_impl = scan_impl
         self.budgets = budgets
+        # Adaptive query-time routing for every retrieve(): per-query early
+        # termination (distance-gap stopping rule) + hub-aware probing.
+        # Validated here like budgets: a bad knob combination fails at
+        # engine construction, not three layers down the dispatch.
+        from ..core import routing
+        routing.check_probe_args(adaptive, probe_margin, min_probes)
+        self.adaptive = adaptive
+        self.probe_margin = probe_margin
+        self.min_probes = min_probes
         self.rng = np.random.default_rng(seed)
         self.caches = model.init_cache(n_slots, max_len)
         self.pos = np.zeros(n_slots, np.int64)        # next position per slot
@@ -214,7 +229,10 @@ class ServeEngine:
             tenancy.coalesced_retrieve(self.tenants, reqs,
                                        mesh=self.memory_mesh,
                                        scan_impl=self.scan_impl,
-                                       budgets=self.budgets)
+                                       budgets=self.budgets,
+                                       adaptive=self.adaptive,
+                                       probe_margin=self.probe_margin,
+                                       min_probes=self.min_probes)
             return SearchResult(
                 ids=jnp.stack([r.result.ids for r in reqs]),
                 dists=jnp.stack([r.result.dists for r in reqs]))
@@ -222,7 +240,10 @@ class ServeEngine:
                                   tag_mask=tag_mask, ts_range=ts_range,
                                   mesh=self.memory_mesh,
                                   scan_impl=self.scan_impl,
-                                  budgets=self.budgets)
+                                  budgets=self.budgets,
+                                  adaptive=self.adaptive,
+                                  probe_margin=self.probe_margin,
+                                  min_probes=self.min_probes)
 
     def submit_retrieval(self, q_embed, *, tenant: str, topk: int = 4,
                          mode: str = "B", tag_mask: Optional[int] = None,
@@ -266,7 +287,11 @@ class ServeEngine:
         return tenancy.coalesced_retrieve(self.tenants, batch,
                                           mesh=self.memory_mesh,
                                           scan_impl=self.scan_impl,
-                                          budgets=self.budgets, now=now)
+                                          budgets=self.budgets,
+                                          adaptive=self.adaptive,
+                                          probe_margin=self.probe_margin,
+                                          min_probes=self.min_probes,
+                                          now=now)
 
     def _memory_for(self, tenant: Optional[str]) -> VectorStore:
         if tenant is None:

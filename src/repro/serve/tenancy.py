@@ -41,6 +41,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from ..core import routing
 from ..core.store import Manifest, VectorStore, _finalize, _live_rows
 from ..core.types import BIG, SearchResult
 
@@ -284,6 +285,9 @@ def coalesced_retrieve(registry: TenantRegistry,
                        budgets: Optional[tuple] = None,
                        nprobe: Optional[int] = None,
                        pool: Optional[int] = None,
+                       adaptive: bool = False,
+                       probe_margin: Optional[float] = None,
+                       min_probes: Optional[int] = None,
                        now: Optional[float] = None
                        ) -> List[RetrievalRequest]:
     """Fuse many tenants' retrievals into one dispatch per (mode, topk,
@@ -306,6 +310,13 @@ def coalesced_retrieve(registry: TenantRegistry,
     ``budgets=(b1, b2)`` (staged scan_impl only, e.g. "cascade") applies
     the cascade's per-stage survivor budgets to every group's dispatch;
     validated against each group's topk.
+
+    ``adaptive=True`` turns on per-query adaptive probe counts for every
+    group's dispatch (``probe_margin``/``min_probes`` as in
+    ``VectorStore.search``; None = the base config's knobs).  Tenancy
+    composes: the stopping rule runs on the per-query tenant-masked
+    routing pass, so one tenant's easy query terminates early while
+    another's hard query keeps the full nprobe, inside the same batch.
     """
     base = registry.base
     now = base._clock() if now is None else now
@@ -313,6 +324,10 @@ def coalesced_retrieve(registry: TenantRegistry,
         from ..core.cascade import check_budgets
         for r in requests:
             check_budgets(budgets, r.topk)
+    routing.check_probe_args(adaptive, probe_margin, min_probes)
+    margin = (base.cfg.probe_margin if probe_margin is None
+              else float(probe_margin))
+    minp = base.cfg.min_probes if min_probes is None else int(min_probes)
     groups: "OrderedDict[tuple, List[RetrievalRequest]]" = OrderedDict()
     for r in requests:
         groups.setdefault((r.mode, r.topk, r.tag_mask, r.ts_range),
@@ -332,7 +347,9 @@ def coalesced_retrieve(registry: TenantRegistry,
         _dispatch_group(registry, union, reqs, mans, mode=mode, topk=topk,
                         tag_mask=tag_mask, ts_range=ts_range, mesh=mesh,
                         grain_axis=grain_axis, scan_impl=scan_impl,
-                        budgets=budgets, nprobe=nprobe, pool=pool, now=now)
+                        budgets=budgets, nprobe=nprobe, pool=pool,
+                        adaptive=adaptive, probe_margin=margin,
+                        min_probes=minp, now=now)
     return requests
 
 
@@ -340,7 +357,9 @@ def _dispatch_group(registry: TenantRegistry, union: tuple,
                     reqs: List[RetrievalRequest],
                     mans: Dict[str, Manifest], *, mode: str, topk: int,
                     tag_mask, ts_range, mesh, grain_axis: str,
-                    scan_impl, budgets, nprobe, pool, now: float) -> None:
+                    scan_impl, budgets, nprobe, pool, now: float,
+                    adaptive: bool = False, probe_margin: float = 1.0,
+                    min_probes: int = 1) -> None:
     base = registry.base
     names: List[str] = []
     name_ix: Dict[str, int] = {}
@@ -362,7 +381,9 @@ def _dispatch_group(registry: TenantRegistry, union: tuple,
         tix_pad[:len(reqs)] = tix
         kw = dict(topk=topk, mode=mode, tag_mask=tag_mask,
                   ts_range=ts_range, scan_impl=scan_impl, budgets=budgets,
-                  nprobe=nprobe, pool=pool, now=now, tenant_ix=tix_pad)
+                  nprobe=nprobe, pool=pool, now=now, tenant_ix=tix_pad,
+                  adaptive=adaptive, probe_margin=probe_margin,
+                  min_probes=min_probes)
         if mesh is not None:
             entry = base._sharded_for(union, mesh, grain_axis, scan_impl)
             tl = np.stack([registry._tenant_bitmap(entry, union, mans[n],

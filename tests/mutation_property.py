@@ -40,13 +40,20 @@ def _cfg(bit_alloc: str = "fixed"):
 
 def mutation_interleaving_check(ops, seed: int, cold: bool, mesh=None,
                                 scan_impl=None, budgeted: bool = False,
-                                bit_alloc: str = "fixed"):
+                                bit_alloc: str = "fixed",
+                                adaptive_margin=None):
     """scan_impl/budgeted/bit_alloc: cascade recall-by-construction twin —
     with a staged backend and ``budgets=(pool, pool)`` (b1 >= every live
     slot, so stage 1 prunes nothing real), the cascade's final stage must
     STILL equal the brute-force oracle through any mutation interleaving;
     ``bit_alloc="density"`` runs the same property over a mixed
-    int4/int8-width store (incl. maintenance re-tiering)."""
+    int4/int8-width store (incl. maintenance re-tiering).
+
+    adaptive_margin: adaptive-routing recall-by-construction twin — a
+    huge FINITE margin at exhaustive nprobe keeps every VALID grain
+    active but still kills invalid (BIG-distance) probes, so the ragged
+    stable-partition + bucketed re-dispatch machinery genuinely runs yet
+    the result must STILL equal the brute-force oracle."""
     rng = np.random.default_rng(seed)
     store = VectorStore(_cfg(bit_alloc), seal_threshold=64, cold_tier=cold,
                         clock=lambda: 0.0)
@@ -105,6 +112,9 @@ def mutation_interleaving_check(ops, seed: int, cold: bool, mesh=None,
               pool=max(2 * store.n_vectors, 1), scan_impl=scan_impl)
     if budgeted:
         kw["budgets"] = (kw["pool"], kw["pool"])
+    if adaptive_margin is not None:
+        kw["adaptive"] = True
+        kw["probe_margin"] = float(adaptive_margin)
     if mesh is not None:
         kw["mesh"] = mesh
     for filt in ({}, {"tag_mask": 2}, {"ts_range": (2.0, 8.0)}):

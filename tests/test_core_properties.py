@@ -70,6 +70,21 @@ def test_mutation_interleaving_matches_bruteforce(ops, seed, cold):
     mutation_property.mutation_interleaving_check(ops, seed, cold)
 
 
+@settings(deadline=None, max_examples=6)
+@given(ops=st.lists(st.sampled_from(mutation_property.OPS),
+                    min_size=3, max_size=8),
+       seed=st.integers(0, 2 ** 20), cold=st.booleans())
+def test_adaptive_mutation_interleaving_matches_bruteforce(ops, seed, cold):
+    """The adaptive-routing twin: ``adaptive=True`` with a huge FINITE
+    margin at exhaustive nprobe keeps every valid grain active but kills
+    invalid (BIG-distance) probes, so the ragged stable-partition +
+    bucketed re-dispatch path genuinely runs through ANY mutation
+    interleaving — and must still equal brute force exactly.  The
+    deterministic seeded sweep lives in test_adaptive.py."""
+    mutation_property.mutation_interleaving_check(
+        ops, seed, cold, adaptive_margin=1e30)
+
+
 @settings(deadline=None, max_examples=20)
 @given(st.data())
 def test_envelope_filter_monotone(data):

@@ -392,6 +392,83 @@ def test_sharded_mutation_interleaving_matches_bruteforce():
     """)
 
 
+def test_sharded_adaptive_identity_forced_4_devices():
+    """Adaptive routing on the distributed plane (per-shard in-jit
+    stopping rule): ``probe_margin=inf`` short-circuits to the static
+    sharded dispatch bit-for-bit, and a huge finite margin at exhaustive
+    knobs — which runs the real per-shard ragged path, killing invalid
+    probes inside each shard's routing slice — still agrees exactly, for
+    warm + cold, masked + unmasked, and batch-sharded queries.  Plus the
+    mesh twin of the adaptive mutation-interleaving oracle."""
+    run_sub("""
+        import numpy as np
+        from repro.core import HNTLConfig
+        from repro.core.store import VectorStore
+        from repro.launch.mesh import make_host_mesh
+        from mutation_property import mutation_interleaving_check
+
+        D, N_SEG, SEG = %d, %d, %d
+        def build(cold):
+            rng = np.random.default_rng(7)
+            st = VectorStore(HNTLConfig(d=D, k=8, s=0, n_grains=4, nprobe=4,
+                                        pool=SEG, block=32),
+                             seal_threshold=SEG, cold_tier=cold)
+            x = rng.standard_normal((N_SEG * SEG, D)).astype(np.float32)
+            for i in range(N_SEG):
+                st.add(x[i*SEG:(i+1)*SEG], tags=[1 << (i %% 3)]*SEG,
+                       ts=[float(i)]*SEG)
+            q = (x[:6] + 0.01*rng.standard_normal((6, D))).astype(np.float32)
+            return st, q
+
+        for cold in (False, True):
+            st, q = build(cold)
+            ex = dict(nprobe=sum(s.index.grains.n_grains
+                                 for s in st._segments),
+                      pool=st.n_vectors * 2)
+            for n in (1, 4):
+                mesh = make_host_mesh(1, n)
+                for filt in ({}, dict(tag_mask=2, ts_range=(1.0, 7.0))):
+                    base = st.search(q, topk=10, mode="B", mesh=mesh,
+                                     **filt, **ex)
+                    inf = st.search(q, topk=10, mode="B", mesh=mesh,
+                                    adaptive=True,
+                                    probe_margin=float("inf"),
+                                    **filt, **ex)
+                    assert np.array_equal(np.asarray(inf.ids),
+                                          np.asarray(base.ids)), \\
+                        ("inf", cold, n, filt)
+                    np.testing.assert_array_equal(np.asarray(inf.dists),
+                                                  np.asarray(base.dists))
+                    huge = st.search(q, topk=10, mode="B", mesh=mesh,
+                                     adaptive=True, probe_margin=1e30,
+                                     **filt, **ex)
+                    assert np.array_equal(np.asarray(huge.ids),
+                                          np.asarray(base.ids)), \\
+                        ("huge", cold, n, filt)
+                    np.testing.assert_allclose(np.asarray(huge.dists),
+                                               np.asarray(base.dists),
+                                               rtol=1e-5, atol=1e-5)
+            base = st.search(q, topk=10, mode="B",
+                             mesh=make_host_mesh(2, 4),
+                             shard_queries=True, **ex)
+            res = st.search(q, topk=10, mode="B",
+                            mesh=make_host_mesh(2, 4), shard_queries=True,
+                            adaptive=True, probe_margin=1e30, **ex)
+            assert np.array_equal(np.asarray(res.ids),
+                                  np.asarray(base.ids)), ("batch", cold)
+            print('ok', 'cold' if cold else 'warm')
+
+        mesh = make_host_mesh(1, 4)
+        for trial in range(2):
+            mutation_interleaving_check(
+                ("add", "seal", "delete", "upsert", "seal", "maintain"),
+                seed=trial, cold=bool(trial), mesh=mesh,
+                adaptive_margin=1e30)
+            print('oracle ok', trial)
+        print('sharded adaptive ok')
+    """ % (D, N_SEG, SEG_ROWS))
+
+
 def test_sharded_delete_without_replacing_plane(monkeypatch):
     """A delete between two sharded searches must NOT re-shard or re-stack
     the plane — only the liveness leaf is re-placed."""
