@@ -29,6 +29,8 @@ import time
 
 import numpy as np
 
+BENCH_NAME = "churn"
+
 
 def _recall(store, x, live_mask, rng, nq=32, topk=10):
     """recall@topk of default-knob search vs brute force over live rows."""
@@ -112,6 +114,7 @@ def main(quick: bool = False):
     # ---- upsert churn: re-embed 2% of live rows per round.  Writes land
     # in the exactly-scanned memtable, so cost GROWS until seal/compaction
     # (reported, deliberately not asserted flat).
+    ups_qps = []
     for r in range(rounds):
         live_rows = np.flatnonzero(live)
         ups = rng.choice(live_rows, size=int(0.02 * len(live_rows)),
@@ -120,6 +123,7 @@ def main(quick: bool = False):
         st.upsert(ups, newv)
         x[ups] = newv
         qps = _qps(st, q, iters)
+        ups_qps.append(qps)
         rec = _recall(st, x, live, rng)
         print(f"  upsert round {r}   {qps:9.1f} q/s   recall@10 {rec:.3f}  "
               f" memtable {len(st._mem)} rows")
@@ -142,6 +146,20 @@ def main(quick: bool = False):
     assert post_bytes < pre_bytes, (pre_bytes, post_bytes)
     assert shrink > deleted_frac * 0.5, \
         f"reclaim too small: {shrink:.1%} for {deleted_frac:.1%} dead"
+    return {"quick": quick, "n_total": n_total, "rounds": rounds,
+            "qps_baseline": round(base_qps, 1),
+            "recall_baseline": round(base_recall, 4),
+            "qps_delete_rounds": [round(v, 1) for v in del_qps],
+            "qps_upsert_rounds": [round(v, 1) for v in ups_qps],
+            "delete_qps_best_vs_baseline":
+                round(max(del_qps) / base_qps, 3),
+            "re_stacks_during_deletes": 0,
+            "compaction_merges": merges,
+            "plane_bytes_pre": pre_bytes, "plane_bytes_post": post_bytes,
+            "bytes_reclaimed_frac": round(shrink, 4),
+            "deleted_frac": round(deleted_frac, 4),
+            "qps_post_compact": round(post_qps, 1),
+            "recall_post_compact": round(post_recall, 4)}
 
 
 if __name__ == "__main__":

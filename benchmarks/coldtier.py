@@ -1,0 +1,194 @@
+"""Tiered residency: paged cold-tier search vs the all-warm plane.
+
+The claim under test (ISSUE 10 tentpole): a dataset larger than the
+device budget still serves — grain panels demote to one disk-backed
+Block-SoA file, a route-traffic-elected hot set stays resident, probed
+cold panels page in through the double-buffered prefetch pipeline — and
+the paged search is *bit-identical* to the all-warm fused plane while
+keeping a usable fraction of its throughput on a skewed (serving-shaped)
+query mix.
+
+Two assertions:
+  1. *Bit-identity*: ids AND dists of the paged plane equal the all-warm
+     plane exactly, after warm-up and hot-set re-election, at a device
+     budget of ~25% of the panel tier.
+  2. *QPS floor*: paged QPS >= 0.6x all-warm QPS at that 25% hot-set
+     fraction (the skewed mix keeps most probes on the resident tier;
+     the cold tail overlaps staging with the warm scan).
+
+Emits BENCH_coldtier.json at the repo root (budget geometry, staging
+counters, QPS both arms) — also returned as a dict for ``benchmarks.run``.
+
+  PYTHONPATH=src python -m benchmarks.coldtier [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import HNTLConfig
+from repro.core.store import VectorStore
+
+BENCH_NAME = "coldtier"
+OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_coldtier.json")
+
+HOT_FRACTION = 0.25               # device budget as a panel-tier fraction
+QPS_FLOOR = 0.6                   # paged QPS >= this fraction of all-warm
+
+
+def _install_sanitizer():
+    """HNTL_SANITIZE=1: same transfer guard tests/conftest.py installs —
+    every paged search here then proves the staging pipeline does only
+    explicit transfers, under benchmark load, not just unit-test load."""
+    import functools
+
+    import jax
+
+    from repro.core.store import VectorStore
+
+    orig = VectorStore._search_segments_tiered
+
+    def guarded(self, *args, **kwargs):
+        with jax.transfer_guard("disallow"):
+            return orig(self, *args, **kwargs)
+
+    functools.update_wrapper(guarded, orig)
+    VectorStore._search_segments_tiered = guarded
+
+
+def _time(fn, iters: int, warmup: int = 2, reps: int = 3) -> float:
+    for _ in range(warmup):
+        fn()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            fn()
+        best = min(best, (time.perf_counter() - t0) / iters)
+    return best
+
+
+def _corpus(n: int, d: int, n_clusters: int, seed: int):
+    rng = np.random.default_rng(seed)
+    centers = rng.standard_normal((n_clusters, d)).astype(np.float32) * 6.0
+    per = n // n_clusters
+    x = np.concatenate([
+        centers[c] + rng.standard_normal((per, d)).astype(np.float32)
+        for c in range(n_clusters)])
+    return x, centers, rng
+
+
+def _skewed_queries(centers, rng, nq: int, d: int, easy_frac: float = 0.8):
+    """Serving skew: 80% of traffic lands near 4 hot clusters (their
+    grains win the residency election), 20% roams cluster boundaries
+    (the cold tail that actually exercises the paging pipeline)."""
+    n_easy = int(nq * easy_frac)
+    hot = rng.integers(0, 4, size=n_easy)
+    easy = (centers[hot]
+            + 0.5 * rng.standard_normal((n_easy, d)).astype(np.float32))
+    a, b = rng.integers(0, centers.shape[0], size=(2, nq - n_easy))
+    hard = ((centers[a] + centers[b]) / 2
+            + 1.5 * rng.standard_normal((nq - n_easy, d)).astype(np.float32))
+    return np.concatenate([easy, hard]).astype(np.float32), n_easy
+
+
+def _build(x, cfg, budget, n):
+    st = VectorStore(cfg, seal_threshold=n // 4, cold_tier=True,
+                     device_budget=budget, residency_interval=8,
+                     prefetch_grains=64)
+    st.add(x)
+    st.seal()
+    return st
+
+
+def main(quick: bool = False):
+    if os.environ.get("HNTL_SANITIZE") == "1":
+        _install_sanitizer()
+    n = 16384 if quick else 32768
+    d, n_clusters = 48, 32
+    nprobe, pool, topk = 8, 32, 10
+    nq = 256 if quick else 512
+    iters = 3 if quick else 8
+
+    x, centers, rng = _corpus(n, d, n_clusters, seed=0)
+    q, n_easy = _skewed_queries(centers, rng, nq, d)
+
+    cfg = HNTLConfig(d=d, k=12, s=0, n_grains=n_clusters, nprobe=nprobe,
+                     pool=pool, block=64)
+    warm = _build(x, cfg, None, n)
+    # budget discovery: build the paged plane at zero budget, read the
+    # panel geometry, then re-elect at the target hot-set fraction
+    tiered = _build(x, cfg, 0, n)
+    skw = dict(topk=topk, mode="B")
+    tiered.search(q[:1], **skw)
+    geo = tiered.residency_stats()
+    total = geo["n_grains"] * geo["panel_bytes_per_grain"]
+    budget = int(total * HOT_FRACTION)
+    tiered.device_budget = budget
+    # warm-up at serving skew, then the admission pass elects the hot set
+    for _ in range(2):
+        ids_w = np.asarray(warm.search(q, **skw).ids)
+        tiered.search(q, **skw)
+    tiered.update_residency()
+    res_t = tiered.search(q, **skw)
+    ids_t, d_t = np.asarray(res_t.ids), np.asarray(res_t.dists)
+    res_w = warm.search(q, **skw)
+    ids_w, d_w = np.asarray(res_w.ids), np.asarray(res_w.dists)
+    stats = tiered.residency_stats()
+    print(f"  {n} vecs x {d}d, {geo['n_grains']} grains; device budget "
+          f"{budget:,} B = {HOT_FRACTION:.0%} of {total:,} B panel tier "
+          f"-> {stats['hot_grains']}/{stats['n_grains']} grains hot")
+    print(f"  skewed mix: {n_easy}/{nq} easy; staged "
+          f"{stats['staged_bytes']:,} cold B over "
+          f"{stats['chunk_dispatches']} chunk dispatches")
+    assert np.array_equal(ids_w, ids_t), \
+        "paged ids diverged from the all-warm plane"
+    assert np.array_equal(d_w, d_t), \
+        "paged dists diverged from the all-warm plane"
+    print(f"  bit-identity: paged ids+dists == all-warm plane "
+          f"({nq} queries, topk={topk})")
+
+    f_warm = lambda: np.asarray(warm.search(q, **skw).ids)      # noqa: E731
+    f_tier = lambda: np.asarray(tiered.search(q, **skw).ids)    # noqa: E731
+    t_warm, t_tier = _time(f_warm, iters=iters), _time(f_tier, iters=iters)
+    qps_warm, qps_tier = nq / t_warm, nq / t_tier
+    frac = qps_tier / qps_warm
+    print(f"  QPS @ Q={nq}: all-warm {qps_warm:,.0f} q/s  ->  paged "
+          f"{qps_tier:,.0f} q/s ({frac:.2f}x, floor {QPS_FLOOR}x)")
+    assert frac >= QPS_FLOOR, \
+        f"paged QPS {qps_tier:.0f} < {QPS_FLOOR}x all-warm {qps_warm:.0f}"
+
+    stats = tiered.residency_stats()
+    payload = {"n": n, "d": d, "quick": quick, "n_queries": nq,
+               "easy_frac": round(n_easy / nq, 3),
+               "hot_fraction": HOT_FRACTION,
+               "device_budget_bytes": budget,
+               "panel_tier_bytes": total,
+               "panel_bytes_per_grain": geo["panel_bytes_per_grain"],
+               "n_grains": stats["n_grains"],
+               "hot_grains": stats["hot_grains"],
+               "hot_epochs": stats["hot_epochs"],
+               "staged_bytes": stats["staged_bytes"],
+               "chunk_dispatches": stats["chunk_dispatches"],
+               "paged_queries": stats["paged_queries"],
+               "bit_identical": True,
+               "qps_all_warm": round(qps_warm, 1),
+               "qps_paged": round(qps_tier, 1),
+               "qps_fraction": round(frac, 3),
+               "latency_us_all_warm": round(t_warm / nq * 1e6, 1),
+               "latency_us_paged": round(t_tier / nq * 1e6, 1)}
+    with open(OUT, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"  wrote {os.path.relpath(OUT)}")
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    main(quick=ap.parse_args().quick)

@@ -30,6 +30,8 @@ import argparse
 
 import numpy as np
 
+BENCH_NAME = "drift"
+
 PANEL_FIELDS = ("coords", "res", "ids", "valid", "basis", "mu", "scale",
                 "res_scale")
 
@@ -106,6 +108,7 @@ def main(quick: bool = False):
         all_x, pos = {}, {}
         r_frozen = r_maint = 1.0
         untouched_checked = 0
+        wave_rows = []
 
         for t in range(waves):
             ci = rng.integers(0, n_clusters, wave)
@@ -149,6 +152,9 @@ def main(quick: bool = False):
             r_maint2 = _recall(maint, live_gids, X, nq)
             assert stacks[0] == before and r_maint2 == r_maint
             r_frozen = _recall(frozen, live_gids, X, nq)
+            wave_rows.append({"wave": t, "live": int(len(live_gids)),
+                              "recall_frozen": round(r_frozen, 4),
+                              "recall_maintained": round(r_maint, 4)})
             print(f"  wave {t}: live {len(live_gids):5d}   "
                   f"frozen {r_frozen:.3f}   maintained {r_maint:.3f}   "
                   f"[{rep.summary()}]")
@@ -167,6 +173,13 @@ def main(quick: bool = False):
     print(f"  final Recall@10: maintained {r_maint:.3f} >= 0.95, frozen "
           f"{r_frozen:.3f} strictly lower — recall recovered without a "
           f"full rebuild")
+    return {"quick": quick, "waves": waves, "wave_rows": wave_rows,
+            "recall_final_frozen": round(r_frozen, 4),
+            "recall_final_maintained": round(r_maint, 4),
+            "recall_floor_maintained": 0.95,
+            "re_stacks_per_epoch": 1,
+            "untouched_grains_verified": untouched_checked,
+            "maintenance_epochs": maint.maintenance_epochs}
 
 
 if __name__ == "__main__":

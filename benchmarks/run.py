@@ -39,6 +39,9 @@ BENCHES = [
                          "iso-recall on a skewed mix, BENCH_routing.json"),
     ("serve_load", "Tenancy plane: many-tenant coalesced load — one "
                    "dispatch/window, zero re-stacks, zero leaks"),
+    ("coldtier", "Tiered residency: paged cold-tier search bit-identical "
+                 "to the all-warm plane, QPS floor at 25% hot set, "
+                 "BENCH_coldtier.json"),
     ("hntl_kv_decode", "HNTL-KV retrieval decode vs exact attention"),
 ]
 

@@ -32,6 +32,8 @@ from repro.core import planner
 from repro.core.store import VectorStore
 from repro.data import synthetic as syn
 
+BENCH_NAME = "scan_select"
+
 
 def _time(fn, iters: int = 10, warmup: int = 2, reps: int = 3) -> float:
     """Best-of-``reps`` mean iteration time (noise-robust for CI floors)."""
@@ -125,6 +127,17 @@ def main(quick: bool = False):
     # oracle on CPU — "no worse" here means no structural regression.
     assert qps_sel >= 0.3 * qps_ref, \
         f"two-stage select regressed QPS: {qps_sel:.0f} vs {qps_ref:.0f}"
+    return {"quick": quick, "n_total": n_total, "n_queries": nq,
+            "nprobe": nprobe, "cap": cap, "pool": pool,
+            "candidate_bytes_gather": gather_state,
+            "candidate_bytes_panel_copies": gather_copy,
+            "candidate_bytes_select": select_state,
+            "state_shrink_x": round(gather_state / select_state, 1),
+            "gather_seam_hits_fused": 0,
+            "qps_full_materialize": round(qps_ref, 1),
+            "qps_two_stage_select": round(qps_sel, 1),
+            "qps_ratio": round(qps_sel / qps_ref, 3),
+            "qps_floor_ratio": 0.3}
 
 
 if __name__ == "__main__":

@@ -19,6 +19,8 @@ from repro.core import HNTLConfig
 from repro.core.store import VectorStore
 from repro.data import synthetic as syn
 
+BENCH_NAME = "segment_scale"
+
 
 def _time(fn, iters: int = 10, warmup: int = 2) -> float:
     for _ in range(warmup):
@@ -69,15 +71,21 @@ def run(n_total: int = 65536, d: int = 64, nq: int = 32,
 
 def main(quick: bool = False):
     print("segments, qps_fused, qps_looped, speedup")
-    rows = run(n_total=16384 if quick else 65536,
+    n_total = 16384 if quick else 65536
+    rows = run(n_total=n_total,
                seg_counts=(1, 4, 16) if quick else (1, 2, 4, 8, 16, 32, 64),
                iters=5 if quick else 10)
     big = [r for r in rows if r["segments"] >= 16]
+    worst = None
     if big:
         worst = min(r["speedup"] for r in big)
         assert worst >= 2.0, \
             f"fused < 2x looped at 16+ segments (got {worst:.2f}x)"
-    return rows
+    return {"quick": quick, "n_total": n_total,
+            "rows": [{k: round(v, 3) for k, v in r.items()} for r in rows],
+            "min_speedup_16plus_segments":
+                None if worst is None else round(worst, 3),
+            "speedup_floor": 2.0}
 
 
 if __name__ == "__main__":

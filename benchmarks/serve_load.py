@@ -31,6 +31,8 @@ import time
 
 import numpy as np
 
+BENCH_NAME = "serve_load"
+
 
 def _tenant_center(t: int, d: int, rng_master: np.random.Generator):
     """A far-away cluster center unique to tenant t (leak detector)."""
@@ -171,6 +173,16 @@ def main(quick: bool = False, assert_latency: bool = False):
     if assert_latency:
         assert qps >= 20.0, f"sustained QPS collapsed: {qps:.1f}"
         assert p99 <= 20e3, f"p99 window latency blew up: {p99:.0f} ms"
+    return {"quick": quick, "n_tenants": n_tenants, "windows": windows,
+            "requests_per_window": win_reqs,
+            "qps_sustained": round(qps, 1),
+            "window_latency_ms_p50": round(float(p50), 1),
+            "window_latency_ms_p99": round(float(p99), 1),
+            "fused_dispatches": load_dispatches,
+            "solo_parity_checks": n_solo_checked,
+            "re_stacks_hot_path": load_stacks,
+            "cross_tenant_leaks": 0,
+            "requests_total": windows * win_reqs}
 
 
 if __name__ == "__main__":

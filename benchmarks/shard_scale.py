@@ -20,10 +20,14 @@ fixed before jax initializes):
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import subprocess
 import sys
 import time
+
+BENCH_NAME = "shard_scale"
+_JSON_MARK = "BENCH_JSON "      # child -> parent result hand-off line
 
 
 def _child(quick: bool):
@@ -86,6 +90,12 @@ def _child(quick: bool):
         f"per-shard scan work must decrease with shard count: {works}"
     print("per-shard scan work strictly decreases: "
           + " > ".join(str(w) for w in works))
+    payload = {"quick": quick, "n_total": n_total, "d": d,
+               "n_queries": nq,
+               "rows": [{k: round(v, 3) if isinstance(v, float) else v
+                         for k, v in r.items()} for r in rows],
+               "scan_work_strictly_decreasing": True}
+    print(_JSON_MARK + json.dumps(payload))
     return rows
 
 
@@ -101,9 +111,15 @@ def main(quick: bool = False):
         cmd.append("--quick")
     out = subprocess.run(cmd, env=env, cwd=os.path.dirname(src),
                          capture_output=True, text=True, timeout=1800)
-    print(out.stdout, end="")
+    payload = None
+    for line in out.stdout.splitlines():
+        if line.startswith(_JSON_MARK):
+            payload = json.loads(line[len(_JSON_MARK):])
+        else:
+            print(line)
     if out.returncode != 0:
         raise RuntimeError(f"shard_scale child failed:\n{out.stderr}")
+    return payload
 
 
 if __name__ == "__main__":

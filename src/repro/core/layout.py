@@ -9,6 +9,9 @@ of blocks and all addressing is affine (pointerless).
 """
 from __future__ import annotations
 
+import json
+import os
+
 import numpy as np
 
 
@@ -106,6 +109,50 @@ def unpack_coords_blob(blob, offsets, width_bits, k: int, cap: int):
         else:
             vals = raw.view("<i2").astype(np.int16)
         out[gi] = vals.reshape(k, cap)
+    return out
+
+
+def write_panel_file(path: str, panels: dict) -> dict:
+    """Serialize a dict of grain-axis panels to one Block-SoA file.
+
+    The tiered residency manager's on-disk format: every field is written
+    contiguous C-order, field-major (all of ``coords``, then all of ``res``,
+    ...), so a single grain's [k, cap] coordinate panel — or any contiguous
+    grain RANGE of panels — is one sequential read, exactly the access
+    pattern the prefetch pipeline issues.  Returns the meta dict
+    ``{field: {"offset", "dtype", "shape"}}`` that :func:`open_panel_file`
+    maps back; a JSON sidecar at ``path + ".json"`` carries the same meta
+    for offline inspection.  The file is fsynced before returning — the
+    residency manager treats a written panel file as durable the moment
+    this function hands the meta back.
+    """
+    meta, off = {}, 0
+    with open(path, "wb") as f:
+        for name, arr in panels.items():
+            arr = np.ascontiguousarray(arr)
+            arr.tofile(f)
+            meta[name] = {"offset": off, "dtype": str(arr.dtype),
+                          "shape": list(arr.shape)}
+            off += arr.nbytes
+        f.flush()
+        os.fsync(f.fileno())
+    with open(path + ".json", "w") as f:
+        json.dump({"fields": meta, "nbytes": off}, f)
+    return meta
+
+
+def open_panel_file(path: str, meta: dict) -> dict:
+    """Map a :func:`write_panel_file` file back as read-only memmap views.
+
+    Returns ``{field: np.memmap}`` with the original dtypes/shapes.  Views
+    are lazy: bytes move only when a grain slice is actually staged, so an
+    open cold tier costs address space, not resident memory.
+    """
+    out = {}
+    for name, m in meta.items():
+        out[name] = np.memmap(path, dtype=np.dtype(m["dtype"]), mode="r",
+                              offset=int(m["offset"]),
+                              shape=tuple(m["shape"]))
     return out
 
 

@@ -21,8 +21,8 @@ from jax.sharding import PartitionSpec as P
 
 from . import quantize, routing, scan, scanplane
 from .cascade import check_budgets
-from .types import (BIG, HNTLIndex, SearchResult, ShardedStackedSegments,
-                    StackedSegments)
+from .types import (BIG, HNTLIndex, RoutingPlane, SearchResult,
+                    ShardedStackedSegments, StackedSegments)
 
 
 def project_queries(index: HNTLIndex, q: jax.Array, gids: jax.Array):
@@ -437,6 +437,18 @@ def search_stacked(stacked: StackedSegments, q: jax.Array, *, nprobe: int,
         else (lambda r, d: r))
 
 
+@functools.partial(jax.jit, static_argnames=("nprobe",))
+def static_route(plane: RoutingPlane, q: jax.Array, *, nprobe: int,
+                 grain_mask: Optional[jax.Array] = None):
+    """:func:`probe_plan`'s ``margin=inf`` routing stage alone, over just
+    the routing sub-tree: same ``routing.route`` call, so the gids are
+    bit-identical, but the dispatch skips the full stacked-plane pytree
+    and the traffic scatters (``n_active`` is the constant P and
+    wins/touches are plain integer bincounts — the tiered path derives
+    them on the host from the gids it reads back anyway)."""
+    return routing.route(plane, q, nprobe, grain_mask=grain_mask)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("nprobe", "probe_margin", "min_probes"))
@@ -446,7 +458,8 @@ def probe_plan(stacked: StackedSegments, q: jax.Array, *, nprobe: int,
                tag_mask: Optional[jax.Array] = None,
                ts_range: Optional[tuple] = None,
                tenant_live: Optional[jax.Array] = None,
-               tenant_ix: Optional[jax.Array] = None):
+               tenant_ix: Optional[jax.Array] = None,
+               grain_mask: Optional[jax.Array] = None):
     """Adaptive routing phase, standalone: route + stopping rule + traffic.
 
     Runs EXACTLY the routing stage of :func:`search_stacked` (same filter /
@@ -463,12 +476,23 @@ def probe_plan(stacked: StackedSegments, q: jax.Array, *, nprobe: int,
     queries genuinely scan fewer grains (smaller static probe width), not
     just masked ones.  ``probe_margin=inf`` returns the static plan
     (all P active) — the identity bucket.
+
+    grain_mask ([G] or [Q, G] bool): precomputed routing pushdown that
+    REPLACES the in-jit filter/liveness/tenant pushdown.  The tiered
+    residency path routes on a panel-free stub plane (zero-cap grains —
+    the panels live on disk), so it computes the identical pushdown
+    host-side from the memmapped panels and hands it in whole; passing it
+    alongside tag_mask/ts_range/tenant_live is a contract violation (the
+    caller owns the pushdown then).
     """
     index = stacked.index
-    extra, grain_ok = _mixed_recall_mask(index.grains, tag_mask, ts_range,
-                                         live=stacked.live)
-    gmask = _tenant_grain_mask(index.grains, extra, grain_ok,
-                               tenant_live, tenant_ix)
+    if grain_mask is not None:
+        gmask = grain_mask
+    else:
+        extra, grain_ok = _mixed_recall_mask(index.grains, tag_mask,
+                                             ts_range, live=stacked.live)
+        gmask = _tenant_grain_mask(index.grains, extra, grain_ok,
+                                   tenant_live, tenant_ix)
     gids, gd2 = routing.route(index.routing, q, nprobe, grain_mask=gmask)
     if math.isinf(probe_margin):
         n_active = jnp.full((q.shape[0],), gids.shape[1], jnp.int32)

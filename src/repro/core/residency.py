@@ -1,0 +1,416 @@
+"""Tiered grain-panel residency (ROADMAP item 1: beyond-HBM datasets).
+
+The stacked search plane of ``core.store`` keeps every grain panel
+device-resident.  This module makes the **grain panel** the unit of
+residency instead of the segment: a manifest's panel tier (coords / res /
+sketch / ids / valid / tags / ts — the cap-proportional Block-SoA arrays)
+is demoted to ONE disk-backed panel file (``layout.write_panel_file``),
+and only a *hot set* of grains — admitted by the accumulated per-grain
+``route_wins``/``touches`` probe-traffic counters — stays in HBM as a
+compacted mini-plane.  Frames (basis / mu / scale — the O(G·(d·k+d))
+tier) and the routing centroids stay resident: they are what routing and
+staging themselves run on, and they are small next to the panels.
+
+Probed cold grains are staged on demand: the probe plan (the standalone
+routing phase of PR 9) doubles as the prefetch schedule — exactly like
+the scalar-prefetch index_maps of the fused kernel, the routing output
+names which panels the scan will touch *before* the scan runs — and the
+store's paged search overlaps each cold chunk's host→device copy with
+the previous chunk's in-flight scan (double buffering).
+
+Bit-identity contract (vs the all-warm fused oracle):
+
+- a mini-plane is a pure SLICE of the stacked plane — same panel bytes,
+  same frames, same per-(query, grain) arithmetic (which never depends
+  on how many *other* grains share the dispatch);
+- the probe plan on the panel-free routing stub routes over the same
+  centroid values with the same lowering as the fused plane's internal
+  routing, so the probe sets match;
+- every routing pushdown the in-jit path computes from device panels
+  (tag/ts predicates, the liveness bitmap, tenant visibility) is
+  replicated host-side from the memmapped panels as pure boolean
+  algebra — bit-exact by construction, never by accident of arithmetic.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import os
+import weakref
+from collections import OrderedDict
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layout
+from .types import GrainStore, HNTLIndex, RoutingPlane, StackedSegments
+
+# Panel tier: cap-proportional per-grain arrays — the disk-resident unit
+# of residency.  Optional fields (sketch) demote only when present.
+PANEL_FIELDS = ("coords", "res", "sketch", "ids", "valid", "tags", "ts")
+# Frame tier: O(G) / O(G*d*k) per-grain metadata — always host-resident
+# (sliced and re-staged with every mini-plane), never paged.
+FRAME_FIELDS = ("basis", "mu", "scale", "res_scale", "sketch_basis",
+                "sketch_scale", "qmaxg")
+# Padding fills per frame field (matching stack_segments' pad conventions:
+# unit scales avoid divide-by-zero, qmax >= 1 keeps quantization sane).
+_FRAME_FILL = {"scale": 1.0, "res_scale": 1.0, "sketch_scale": 1.0,
+               "qmaxg": 1}
+
+
+def pow2ceil(n: int) -> int:
+    """Smallest power of two >= max(n, 1)."""
+    return 1 if n <= 1 else 1 << (int(n) - 1).bit_length()
+
+
+def _unlink_files(*paths) -> None:
+    for p in paths:
+        with contextlib.suppress(OSError):
+            os.unlink(p)
+
+
+def host_keep_mask(panels: dict, live: Optional[np.ndarray], tag_mask,
+                   ts_range):
+    """Host-exact replica of ``planner._mixed_recall_mask`` over memmapped
+    panels: (keep [G, cap] | None, grain_ok [G] | None).  Pure boolean
+    algebra on the same stored values the in-jit mask reads, so the
+    routing pushdown of the paged path is bit-equal to the fused plane's.
+    """
+    if tag_mask is None and ts_range is None and live is None:
+        return None, None
+    keep = np.asarray(panels["valid"])
+    if live is not None:
+        keep = keep & live
+    if tag_mask is not None:
+        keep = keep & ((np.asarray(panels["tags"])
+                        & np.uint32(tag_mask)) != 0)
+    if ts_range is not None:
+        lo, hi = np.float32(ts_range[0]), np.float32(ts_range[1])
+        ts = np.asarray(panels["ts"])
+        keep = keep & (ts >= lo) & (ts < hi)
+    return keep, keep.any(axis=1)
+
+
+def host_tenant_mask(panels: dict, extra: Optional[np.ndarray],
+                     grain_ok: Optional[np.ndarray],
+                     tenant_live: Optional[np.ndarray],
+                     tenant_ix: Optional[np.ndarray]):
+    """Host-exact replica of ``planner._tenant_grain_mask``: per-query
+    [Q, G] routing pushdown (or the shared [G] one, or None)."""
+    if tenant_live is None:
+        return grain_ok
+    base = extra if extra is not None else np.asarray(panels["valid"])
+    ok_q = np.any(tenant_live & base[None], axis=2)[tenant_ix]    # [Q, G]
+    return ok_q if grain_ok is None else ok_q & grain_ok[None, :]
+
+
+def compact_probes(gids: np.ndarray, na: np.ndarray, member_map: np.ndarray,
+                   dummy_slot: int):
+    """Compact one pass's probes out of a probe plan (host side).
+
+    gids [Q, P] original grain ids / na [Q] active counts (the plan);
+    member_map [G] i32 maps a grain to its slot in this pass's mini-plane
+    (-1 = not a member).  Per query, the member probes are stable-
+    partitioned to the front (plan order — ascending routing distance —
+    preserved), the width is padded to the next power of two (bounded jit
+    traces, like the adaptive bucket dispatch), and slack slots point at
+    the mini-plane's trailing dummy grain (all-invalid: scans to BIG).
+
+    Returns (plan_gids [Q, W] i32 mini-plane slots, plan_na [Q] i32 >= 1,
+    W, active_q [Q] bool — which queries probe any member at all) or None
+    when no query probes a member grain.  ``active_q`` lets the paged
+    search dispatch a cold pass over only the query rows that need it
+    (on a skewed mix the cold tail is a small fraction of the batch).
+    """
+    q_n, p_n = gids.shape
+    act = np.arange(p_n, dtype=np.int32)[None, :] < na[:, None]
+    slots = member_map[gids]                                      # [Q, P]
+    sel = act & (slots >= 0)
+    cnt = sel.sum(axis=1).astype(np.int32)
+    if not cnt.any():
+        return None
+    order = np.argsort(~sel, axis=1, kind="stable")
+    w = min(pow2ceil(int(cnt.max())), p_n)
+    picked = np.take_along_axis(slots, order[:, :w], axis=1)
+    plan_g = np.where(np.arange(w, dtype=np.int32)[None, :] < cnt[:, None],
+                      picked, np.int32(dummy_slot)).astype(np.int32)
+    return plan_g, np.maximum(cnt, 1), w, cnt > 0
+
+
+@functools.partial(jax.jit, static_argnames=("dummy_slot",))
+def device_plan(hot_map: jax.Array, gids: jax.Array, *, dummy_slot: int):
+    """Map ``probe_plan``'s device gids through the hot map ON DEVICE:
+    hot probes -> hot mini-plane slots, cold probes -> the trailing dummy
+    grain (scanned to BIG, exactly like a compacted plan's slack slots).
+    The warm-tier pass chains directly off the routing outputs with no
+    host round-trip, so the host sync that schedules the cold chunks
+    overlaps with the warm scan already in flight."""
+    m = hot_map[gids]
+    return jnp.where(m >= 0, m, dummy_slot)
+
+
+def chunk_cold(cold: np.ndarray, chunk: int) -> list:
+    """Split the staged-grain worklist into pow-2-sized chunks (<= chunk,
+    itself a power of two) so the per-chunk dispatch shapes come from a
+    bounded set.  A short tail is padded by repeating its last grain —
+    the duplicate slot is never referenced by any probe (the member map
+    points each grain at one slot), it only squares the shape."""
+    out, i, n = [], 0, len(cold)
+    while i < n:
+        rem = n - i
+        take = min(chunk, rem)
+        size = chunk if rem >= chunk else pow2ceil(rem)
+        part = cold[i:i + take]
+        if len(part) < size:
+            part = np.concatenate(
+                [part, np.full(size - len(part), part[-1], part.dtype)])
+        out.append(part)
+        i += take
+    return out
+
+
+class TieredPlane:
+    """Disk-backed panel tier + HBM hot-set manager for one manifest.
+
+    Owns the panel file (finalizer-unlinked with the plane, like a cold
+    raw file), the host frame tier, the hot mini-plane, and the staging
+    counters ``residency_stats`` reports.  All device placement in here
+    is explicit (``jax.device_put`` of host arrays) — the paged search
+    runs under the HNTL_SANITIZE transfer guard, which forbids every
+    implicit host->device conversion, ``jnp.zeros``-style on-device
+    constant creation included.
+    """
+
+    def __init__(self, path: str, panels: dict, frames: dict,
+                 centroids: np.ndarray, sizes: np.ndarray):
+        self.path = path
+        self.panels = panels                   # {field: np.memmap [G, ...]}
+        self.frames = frames                   # {field: np.ndarray | None}
+        self.centroids = np.asarray(centroids)
+        self.sizes = np.asarray(sizes)
+        self.n_grains = int(self.panels["ids"].shape[0])
+        self.cap = int(self.panels["ids"].shape[1])
+        self.k = int(self.panels["coords"].shape[1])
+        self.d = int(self.frames["mu"].shape[1])
+        # hot-set state
+        self.hot_slots = np.zeros(0, np.int64)
+        self.hot_map = np.full(self.n_grains, -1, np.int32)
+        self.hot_map_dev = jax.device_put(self.hot_map)
+        self.hot_epochs = 0
+        self._hot_cache = (None, None)         # ((hot_epoch, live key), plane)
+        # staging counters
+        self.staged_bytes = 0                  # cold panel bytes H2D'd
+        self.chunk_dispatches = 0
+        self.paged_queries = 0
+        # host-side staging buffers: assembled chunk panels keyed by
+        # (chunk ids, liveness epoch), LRU-bounded.  This is the page-
+        # cache tier of the pipeline — it saves the disk read + host
+        # re-assembly for chunks the steady-state probe mix re-stages
+        # every search, while the H2D copy (the DEVICE budget's cost) is
+        # still paid on every dispatch.
+        self._stage_cache = OrderedDict()
+        self._finalizer = weakref.finalize(self, _unlink_files, path,
+                                           path + ".json")
+
+    STAGE_CACHE_ENTRIES = 16
+
+    @classmethod
+    def from_stacked(cls, stacked: StackedSegments,
+                     path: str) -> "TieredPlane":
+        """Demote a host-stacked plane's panel tier to ``path`` and wrap
+        the memmapped views + resident frames as a TieredPlane."""
+        g = stacked.index.grains
+        panels = {}
+        for name in PANEL_FIELDS:
+            leaf = getattr(g, name)
+            if leaf is not None:
+                panels[name] = np.asarray(leaf)
+        meta = layout.write_panel_file(path, panels)
+        views = layout.open_panel_file(path, meta)
+        frames = {name: (np.asarray(getattr(g, name))
+                         if getattr(g, name) is not None else None)
+                  for name in FRAME_FIELDS}
+        return cls(path, views, frames,
+                   np.asarray(stacked.index.routing.centroids),
+                   np.asarray(stacked.index.routing.sizes))
+
+    # ------------------------------------------------------------- geometry
+    def panel_bytes_per_grain(self) -> int:
+        """HBM bytes one resident grain panel costs (the budget unit)."""
+        return sum(v.nbytes // self.n_grains for v in self.panels.values())
+
+    def budget_slots(self, budget_bytes: int) -> int:
+        per = self.panel_bytes_per_grain()
+        if per <= 0:
+            return self.n_grains
+        return max(0, min(self.n_grains, int(budget_bytes // per)))
+
+    def slot_map(self, slots: np.ndarray) -> np.ndarray:
+        """[G] i32: grain id -> slot in a mini-plane over ``slots``, -1
+        for non-members (duplicates map to their last occurrence — same
+        panel either way)."""
+        m = np.full(self.n_grains, -1, np.int32)
+        m[np.asarray(slots, np.int64)] = np.arange(len(slots),
+                                                   dtype=np.int32)
+        return m
+
+    # ------------------------------------------------------------ admission
+    def set_hot(self, slots: np.ndarray) -> bool:
+        """Install a new hot set (sorted, deduped).  Returns True when the
+        set actually changed (the hot mini-plane is then rebuilt lazily on
+        the next search — eviction is just 'not copied next build')."""
+        sl = np.unique(np.asarray(slots, np.int64))
+        if np.array_equal(sl, self.hot_slots):
+            return False
+        self.hot_slots = sl
+        self.hot_map = self.slot_map(sl)
+        self.hot_map_dev = jax.device_put(self.hot_map)
+        self._hot_cache = (None, None)
+        self.hot_epochs += 1
+        return True
+
+    @property
+    def n_hot(self) -> int:
+        return int(self.hot_slots.shape[0])
+
+    # -------------------------------------------------------- plane builders
+    def routing_stub(self) -> StackedSegments:
+        """Panel-free device plane for ``planner.probe_plan``: REAL
+        routing leaves (centroids = frame mu, sizes), zero-cap grain
+        leaves (shapes only — probe_plan's grain reads are short-circuited
+        by the host-computed ``grain_mask``), zero-size row tables
+        (translate never runs on the stub)."""
+        g_n, d, k = self.n_grains, self.d, self.k
+        pan = self.panels
+
+        def z(*shape, dt):
+            return jax.device_put(np.zeros(shape, dt))
+
+        grains = GrainStore(
+            coords=z(g_n, k, 0, dt=pan["coords"].dtype),
+            res=z(g_n, 0, dt=pan["res"].dtype),
+            sketch=(z(g_n, pan["sketch"].shape[1], 0,
+                      dt=pan["sketch"].dtype)
+                    if "sketch" in pan else None),
+            ids=z(g_n, 0, dt=np.int32), valid=z(g_n, 0, dt=bool),
+            basis=z(g_n, d, 0, dt=np.float32), mu=z(g_n, 0, dt=np.float32),
+            scale=z(g_n, dt=np.float32), res_scale=z(g_n, dt=np.float32),
+            sketch_basis=(z(g_n, d, 0, dt=np.float32)
+                          if "sketch" in pan else None),
+            sketch_scale=(z(g_n, dt=np.float32)
+                          if "sketch" in pan else None),
+            tags=z(g_n, 0, dt=np.uint32) if "tags" in pan else None,
+            ts=z(g_n, 0, dt=np.float32) if "ts" in pan else None,
+            qmaxg=(jax.device_put(self.frames["qmaxg"])
+                   if self.frames.get("qmaxg") is not None else None))
+        routing = RoutingPlane(centroids=jax.device_put(self.centroids),
+                               sizes=jax.device_put(self.sizes))
+        return StackedSegments(
+            index=HNTLIndex(routing=routing, grains=grains, raw=None),
+            gid_of_row=jax.device_put(np.zeros(0, np.int32)),
+            row_offset=jax.device_put(np.zeros(1, np.int32)))
+
+    def _host_chunk(self, sl: np.ndarray, live: Optional[np.ndarray],
+                    cache_key):
+        """Assemble the HOST arrays of a mini-plane over ``sl`` (disk
+        read + concat).  With ``cache_key`` set, assembled chunks are
+        LRU-cached — panels are immutable once demoted and liveness is
+        folded into the key, so a hit is exact."""
+        ck = None
+        if cache_key is not None:
+            ck = (sl.tobytes(), cache_key)
+            hit = self._stage_cache.get(ck)
+            if hit is not None:
+                self._stage_cache.move_to_end(ck)
+                return hit
+        pan, fr = {}, {}
+        staged = 0
+        for name, view in self.panels.items():
+            a = view[sl]                   # memmap fancy index: the disk read
+            staged += a.nbytes
+            dummy = np.full((1,) + a.shape[1:],
+                            -1 if name == "ids" else 0, a.dtype)
+            pan[name] = np.concatenate([a, dummy])
+        for name, arr in self.frames.items():
+            if arr is None:
+                continue
+            a = arr[sl]
+            dummy = np.full((1,) + a.shape[1:], _FRAME_FILL.get(name, 0),
+                            a.dtype)
+            fr[name] = np.concatenate([a, dummy])
+        sizes = np.concatenate([self.sizes[sl],
+                                np.zeros(1, self.sizes.dtype)])
+        host = {"cents": np.concatenate(
+            [self.centroids[sl],
+             np.zeros((1, self.d), self.centroids.dtype)]),
+            "sizes": sizes, "gid_of_row": np.zeros(0, np.int32),
+            "row_offset": np.zeros(1, np.int32), **pan, **fr}
+        if live is not None:
+            lv = live[sl]
+            host["live"] = np.concatenate(
+                [lv, np.zeros((1, lv.shape[1]), bool)])
+        if ck is not None:
+            self._stage_cache[ck] = (host, staged)
+            while len(self._stage_cache) > self.STAGE_CACHE_ENTRIES:
+                self._stage_cache.popitem(last=False)
+        return host, staged
+
+    def _mini_plane(self, slots: np.ndarray, live: Optional[np.ndarray],
+                    cache_key=None):
+        """Device mini-plane over ``slots`` + one trailing DUMMY grain
+        (all-invalid, sizes 0, unit scales): slack probe slots of a
+        compacted plan point at it and scan to BIG, the same dummy-grain
+        trick the bucketed adaptive dispatch uses for zero-probe queries.
+        Every leaf is a pure slice of the stacked plane's values."""
+        sl = np.asarray(slots, np.int64)
+        host, staged = self._host_chunk(sl, live, cache_key)
+        # ONE batched explicit transfer for the whole mini-plane — ~15
+        # per-leaf device_put round-trips otherwise dominate the staging
+        # cost of small chunks
+        dev = jax.device_put(host)
+        grains = GrainStore(
+            coords=dev["coords"], res=dev["res"],
+            sketch=dev.get("sketch"),
+            ids=dev["ids"], valid=dev["valid"],
+            basis=dev["basis"], mu=dev["mu"], scale=dev["scale"],
+            res_scale=dev["res_scale"],
+            sketch_basis=dev.get("sketch_basis"),
+            sketch_scale=dev.get("sketch_scale"),
+            tags=dev.get("tags"), ts=dev.get("ts"),
+            qmaxg=dev.get("qmaxg"))
+        index = HNTLIndex(
+            routing=RoutingPlane(centroids=dev["cents"],
+                                 sizes=dev["sizes"]),
+            grains=grains, raw=None)
+        plane = StackedSegments(
+            index=index, gid_of_row=dev["gid_of_row"],
+            row_offset=dev["row_offset"], live=dev.get("live"))
+        return plane, staged
+
+    def hot_plane(self, live: Optional[np.ndarray],
+                  live_key) -> StackedSegments:
+        """The resident warm-tier mini-plane (cached per hot epoch +
+        liveness key; a mutation epoch swaps only this cached build)."""
+        key = (self.hot_epochs, live_key)
+        ck, plane = self._hot_cache
+        if ck == key:
+            return plane
+        plane, _ = self._mini_plane(self.hot_slots, live)
+        self._hot_cache = (key, plane)
+        return plane
+
+    def chunk_plane(self, slots: np.ndarray, live: Optional[np.ndarray],
+                    live_key=None):
+        """Stage one cold chunk: disk read + explicit H2D of its panels.
+        Returns (plane, member_map [G] i32).  Transient — the plane dies
+        with the dispatch that consumes it (that's the point: cold panels
+        only ever occupy HBM while their scan is in flight).  The HOST
+        assembly is LRU-cached per (chunk, ``live_key``); the H2D copy —
+        the cost the device budget meters — is re-paid every dispatch."""
+        plane, staged = self._mini_plane(
+            slots, live, cache_key=None if live_key is None else live_key)
+        self.staged_bytes += staged
+        self.chunk_dispatches += 1
+        return plane, self.slot_map(slots)

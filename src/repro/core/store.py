@@ -50,9 +50,11 @@ from __future__ import annotations
 import collections
 import contextlib
 import dataclasses
+import functools
 import math
 import os
 import tempfile
+import threading
 import time
 import uuid
 import weakref
@@ -65,6 +67,7 @@ import numpy as np
 from . import index as index_mod
 from . import maintenance
 from . import planner
+from . import residency
 from . import routing
 from .types import (BIG, HNTLConfig, HNTLIndex, GrainStore, RoutingPlane,
                     SearchResult, ShardedStackedSegments, StackedSegments)
@@ -130,14 +133,22 @@ def _unlink_quiet(path: str) -> None:
 # Cold files are refcounted per Segment *object* that addresses them: a
 # maintenance epoch derives a new Segment sharing the old one's cold file
 # (only grain panels are rewritten), so the file must outlive whichever of
-# the two dies first.
+# the two dies first.  The counter is mutated from seal/compact/maintain on
+# the owning store AND from tenancy/GC paths (finalizers run on whatever
+# thread triggers collection), so every mutation goes through _COLD_LOCK.
+# RLock, not Lock: a finalizer can fire via GC *inside* a locked region on
+# the same thread, and _release_cold must not deadlock against it.
+_COLD_LOCK = threading.RLock()
 _COLD_REFS: "collections.Counter" = collections.Counter()
 
 
 def _release_cold(path: str) -> None:
-    _COLD_REFS[path] -= 1
-    if _COLD_REFS[path] <= 0:
-        del _COLD_REFS[path]
+    with _COLD_LOCK:
+        _COLD_REFS[path] -= 1
+        reclaim = _COLD_REFS[path] <= 0
+        if reclaim:
+            del _COLD_REFS[path]
+    if reclaim:
         _unlink_quiet(path)
 
 
@@ -154,9 +165,71 @@ def _reclaim_cold_on_gc(seg: "Segment", path: str) -> None:
     keeps it alive until both the parent (old manifests) and the repaired
     child are gone.  (POSIX: a concurrently open memmap keeps reading
     after the unlink.)
+
+    Acquire + finalizer registration are one atomic step: if the finalizer
+    cannot be registered the acquired count is rolled back, so the pair can
+    never leak a pin without an owner to release it.
     """
-    _COLD_REFS[path] += 1
-    weakref.finalize(seg, _release_cold, path)
+    with _COLD_LOCK:
+        _COLD_REFS[path] += 1
+        try:
+            weakref.finalize(seg, _release_cold, path)
+        except BaseException:
+            _COLD_REFS[path] -= 1
+            raise
+
+
+@contextlib.contextmanager
+def _cold_construction(path: Optional[str]):
+    """Exception-safe window between writing a cold file and handing its
+    lifetime to a Segment finalizer.
+
+    ``seal()``/``_merge_segments()`` write the cold memmap *before* the
+    Segment that owns it exists; if construction fails in between, nothing
+    ever registers a release and the file is orphaned on disk forever.
+    This guard owns the file for the window: the body calls ``adopt(seg)``
+    (-> :func:`_reclaim_cold_on_gc`) on success, and any exception before
+    adoption unlinks the un-owned file.  ``path=None`` (warm tier) is a
+    no-op pass-through.
+    """
+    if path is None:
+        yield lambda seg: None
+        return
+    adopted = []
+
+    def adopt(seg: "Segment") -> None:
+        _reclaim_cold_on_gc(seg, path)
+        adopted.append(True)
+
+    try:
+        yield adopt
+    except BaseException:
+        if not adopted:
+            # Unlink only when NO Segment pins the path: a maintenance
+            # child failing mid-construction must not take its parent's
+            # (shared, still-referenced) cold file down with it.
+            with _COLD_LOCK:
+                orphan = _COLD_REFS[path] <= 0
+                if orphan:
+                    _COLD_REFS.pop(path, None)
+            if orphan:
+                _unlink_quiet(path)
+        raise
+
+
+@functools.partial(jax.jit, static_argnames=("topk",))
+def _rerank_pool(cand, q, ok, *, topk: int):
+    """Device clone of the warm Mode B tail of ``planner._candidate_epilogue``
+    for the tiered paged path: exact f32 re-rank of an already-merged
+    candidate pool.  The arithmetic (squared-L2 reduce over a [Q, pool, d]
+    gather, BIG-masked, ``top_k`` of the negated dists) must stay identical
+    to the epilogue's — the tiered plane's bit-for-bit parity with the
+    all-warm fused oracle depends on it.  Returns (pos [Q, topk], exact
+    dists [Q, topk])."""
+    exact = jnp.sum((cand - q[:, None, :]) ** 2, axis=-1)
+    exact = jnp.where(ok, exact, BIG)
+    neg, pos = jax.lax.top_k(-exact, topk)
+    return pos, -neg
 
 
 def _plane_key(scan_impl: Optional[str]) -> str:
@@ -445,11 +518,30 @@ class VectorStore:
 
     def __init__(self, cfg: HNTLConfig, *, seal_threshold: int = 8192,
                  cold_dir: Optional[str] = None, cold_tier: bool = False,
-                 stack_cache_entries: int = 2, clock=time.time):
+                 stack_cache_entries: int = 2,
+                 device_budget: Optional[int] = None,
+                 residency_interval: int = 64,
+                 prefetch_grains: int = 64, clock=time.time):
         self.cfg = cfg
         self.seal_threshold = seal_threshold
         self.cold_tier = cold_tier
         self.cold_dir = cold_dir or tempfile.mkdtemp(prefix="aperon_cold_")
+        # Tiered residency (core.residency): device_budget caps the HBM
+        # bytes spent on resident grain panels; None = the classic all-warm
+        # stacked plane.  residency_interval is the admission cadence (every
+        # N tiered searches the hot set is re-derived from the accumulated
+        # route_wins/touches counters); prefetch_grains is the cold-chunk
+        # width of the double-buffered staging pipeline (rounded up to a
+        # power of two for bounded dispatch shapes).
+        if device_budget is not None and device_budget < 0:
+            raise ValueError("device_budget must be >= 0 bytes")
+        if residency_interval < 1:
+            raise ValueError("residency_interval must be >= 1")
+        if prefetch_grains < 1:
+            raise ValueError("prefetch_grains must be >= 1")
+        self.device_budget = device_budget
+        self.residency_interval = int(residency_interval)
+        self.prefetch_grains = residency.pow2ceil(prefetch_grains)
         self._segments: list[Segment] = []
         self._mem: list[np.ndarray] = []
         self._mem_tags: list[int] = []
@@ -592,6 +684,16 @@ class VectorStore:
         mm = np.memmap(path, dtype=np.float32, mode="w+", shape=x.shape)
         mm[:] = x
         mm.flush()
+        # flush() only writes the dirty pages into the page cache; the
+        # manifest is about to reference this path, so force the bytes to
+        # stable storage BEFORE the segment becomes visible — a crash
+        # between seal and writeback must not leave a manifest pointing at
+        # torn raw bytes.
+        fd = os.open(path, os.O_RDONLY)
+        try:
+            os.fsync(fd)
+        finally:
+            os.close(fd)
         return path
 
     def seal(self) -> Optional[Segment]:
@@ -614,15 +716,15 @@ class VectorStore:
         # upserts interleave re-used gids, which need the id_map indirection
         contiguous = bool(
             np.array_equal(gids, np.arange(gids[0], gids[0] + n)))
-        seg = Segment(
-            seg_id=self._next_seg, index=idx, n=n,
-            id_base=int(gids[0]) if contiguous else 0,
-            tags=tags, ts=ts, cold_path=cold_path, d=x.shape[1],
-            id_map=None if contiguous else gids,
-            seq=seqs,
-            expire=expire if np.isfinite(expire).any() else None)
-        if cold_path is not None:
-            _reclaim_cold_on_gc(seg, cold_path)
+        with _cold_construction(cold_path) as adopt:
+            seg = Segment(
+                seg_id=self._next_seg, index=idx, n=n,
+                id_base=int(gids[0]) if contiguous else 0,
+                tags=tags, ts=ts, cold_path=cold_path, d=x.shape[1],
+                id_map=None if contiguous else gids,
+                seq=seqs,
+                expire=expire if np.isfinite(expire).any() else None)
+            adopt(seg)
         self._segments.append(seg)
         self._next_seg += 1
         self._mem, self._mem_tags, self._mem_ts = [], [], []
@@ -698,6 +800,23 @@ class VectorStore:
         else:
             self._probe_traffic.move_to_end(key)
         return hit
+
+    def _purge_probe_traffic(self) -> None:
+        """Drop probe-traffic entries pinning segments that left the
+        manifest (compact()/maintain() epoch swap).
+
+        The LRU's keys are id()-tuples whose entries pin the segment tuple
+        itself — without this purge a replaced Segment (and, through
+        ``_COLD_REFS``, its cold file) stays alive until LRU churn happens
+        to evict the stale entry, which an idle store never does.  Entries
+        for snapshots/branches whose segments are ALL still live stay;
+        counters for a segment set that no longer fully exists restart
+        from zero if some old manifest searches it again."""
+        live = {id(s) for s in self._segments}
+        stale = [k for k, hit in self._probe_traffic.items()
+                 if any(id(s) not in live for s in hit["segments"])]
+        for k in stale:
+            del self._probe_traffic[k]
 
     def _hub_mask_host(self, traffic: dict) -> Optional[np.ndarray]:
         """Current hub set as a [G] bool bitmap over the stacked grain axis
@@ -777,6 +896,7 @@ class VectorStore:
             self._segments = new_segs
             self._maint_epoch += 1
             self._purge_tombstones()
+            self._purge_probe_traffic()
         return maintenance.MaintenanceReport(segments=tuple(reports))
 
     # ------------------------------------------------------------ compaction
@@ -856,6 +976,7 @@ class VectorStore:
             if merged is not None:             # every row was dead/expired
                 kept.insert(pos, merged)
             self._segments = kept
+            self._purge_probe_traffic()
             return True
         return False
 
@@ -907,13 +1028,13 @@ class VectorStore:
                                  keep_raw=not self.cold_tier)
         cold_path = (self._write_cold(x, self._next_seg)
                      if self.cold_tier else None)
-        seg = Segment(seg_id=self._next_seg, index=idx, n=n, id_base=0,
-                      tags=tags, ts=ts, cold_path=cold_path, d=d,
-                      id_map=gids.astype(np.int64), seq=seqs,
-                      expire=expire if expire is not None
-                      and np.isfinite(expire).any() else None)
-        if cold_path is not None:
-            _reclaim_cold_on_gc(seg, cold_path)
+        with _cold_construction(cold_path) as adopt:
+            seg = Segment(seg_id=self._next_seg, index=idx, n=n, id_base=0,
+                          tags=tags, ts=ts, cold_path=cold_path, d=d,
+                          id_map=gids.astype(np.int64), seq=seqs,
+                          expire=expire if expire is not None
+                          and np.isfinite(expire).any() else None)
+            adopt(seg)
         self._next_seg += 1
         return seg
 
@@ -966,6 +1087,9 @@ class VectorStore:
                             if seal_threshold is None else seal_threshold,
                             cold_dir=self.cold_dir, cold_tier=self.cold_tier,
                             stack_cache_entries=self.stack_cache_entries,
+                            device_budget=self.device_budget,
+                            residency_interval=self.residency_interval,
+                            prefetch_grains=self.prefetch_grains,
                             clock=self._clock)
         child._segments = list(self._segments)        # shared immutable refs
         child._mem = list(self._mem)                  # memtable copied (small)
@@ -1067,6 +1191,463 @@ class VectorStore:
             "live": (None, None),      # (epoch key, plane-with-live)
         }
         return self._cache_put(key, segments, entry)
+
+    # ------------------------------------------------------ tiered residency
+    def _tiered_for(self, segments: tuple,
+                    scan_impl: Optional[str] = None) -> dict:
+        """Tiered search plane for a manifest: the grain panels demoted to
+        one disk-backed Block-SoA file (``core.residency``), a panel-free
+        routing stub on device, and the admission state (per-grain
+        route_wins/touches counters + the hot set they elect).
+
+        Shares the plane LRU with the stacked/sharded entries — the cached
+        device footprint is the stub + hot mini-plane instead of the full
+        stack, which is the entire point.  The panel file is unlinked by the
+        TieredPlane finalizer when the entry (or the manifest) dies, exactly
+        like a cold raw memmap."""
+        key = (tuple(id(s) for s in segments), "tiered",
+               _plane_key(scan_impl))
+        hit = self._cache_get(key)
+        if hit is not None:
+            return hit
+        stacked = stack_segments(segments, device=False)
+        path = os.path.join(
+            self.cold_dir,
+            f"panels_{self._cold_tag}_{uuid.uuid4().hex[:8]}.soa")
+        tiered = residency.TieredPlane.from_stacked(stacked, path)
+        gids = np.asarray(stacked.gid_of_row, np.int64)
+        entry = {
+            "plane": tiered.routing_stub(),
+            "tiered": tiered,
+            "offsets": np.asarray(stacked.row_offset, np.int64),
+            "gids": gids,
+            "ids_host": tiered.panels["ids"],
+            "row_gid": gids,
+            "row_seq": np.concatenate(
+                [s.global_seqs() for s in segments]),
+            "row_exp": _concat_expiry(segments),
+            "row_base": None,
+            "rules": None,
+            "live": (None, None),
+            "live_host": (None, None),  # (epoch key, [G, cap] bitmap|None)
+            "keep": (None, None, None),  # (filter key, keep, grain_ok)
+            "raw_host": None,            # lazy warm-raw tier for Mode B
+            "searches": 0,
+            # Admission counters, SEPARATE from _probe_traffic: every tiered
+            # search feeds them, but _probe_traffic (hub set + probe_stats)
+            # only accumulates on adaptive searches — exactly like the
+            # all-warm plane, so hub masks and stats never diverge from it.
+            "r_wins": np.zeros(tiered.n_grains, np.int64),
+            "r_touches": np.zeros(tiered.n_grains, np.int64),
+        }
+        self._seed_hot(tiered)
+        return self._cache_put(key, segments, entry)
+
+    def _plane_entry_for(self, segments: tuple,
+                         scan_impl: Optional[str] = None) -> dict:
+        """The plane-cache entry a manifest searches under the current
+        residency mode (the coalesced serving plane builds its tenant
+        bitmaps against this, so tenancy follows the store's tier)."""
+        if self.device_budget is not None:
+            return self._tiered_for(segments, scan_impl)
+        return self._stacked_for(segments, scan_impl)
+
+    def _seed_hot(self, tiered) -> None:
+        """Initial admission before any traffic exists: biggest grains
+        first (deterministic lexsort tiebreak on grain index)."""
+        h = tiered.budget_slots(self.device_budget)
+        if h > 0:
+            order = np.lexsort((np.arange(tiered.n_grains),
+                                -tiered.sizes.astype(np.int64)))
+            tiered.set_hot(order[:h])
+        else:
+            tiered.set_hot(np.zeros(0, np.int64))
+
+    def _update_residency_entry(self, entry: dict) -> bool:
+        """Re-elect the hot set from the accumulated admission counters:
+        top grains by route_wins + touches under the byte budget (size-
+        seeded while no traffic exists).  Eviction is implicit — a grain
+        that drops out is simply not copied into the next hot mini-plane
+        build.  Returns True when the hot set changed."""
+        tiered = entry["tiered"]
+        h = tiered.budget_slots(self.device_budget)
+        if h <= 0:
+            return tiered.set_hot(np.zeros(0, np.int64))
+        score = entry["r_wins"] + entry["r_touches"]
+        if score.max(initial=0) <= 0:
+            score = tiered.sizes.astype(np.int64)
+        order = np.lexsort((np.arange(tiered.n_grains), -score))
+        return tiered.set_hot(order[:h])
+
+    def update_residency(self) -> bool:
+        """Force a hot-set re-election on every cached tiered plane (the
+        same admission pass that runs automatically every
+        ``residency_interval`` searches).  Returns True when any hot set
+        changed.  No-op until a tiered search has built a plane."""
+        changed = False
+        for key, (_segs, entry) in list(self._stack_cache.items()):
+            if len(key) == 3 and key[1] == "tiered":
+                changed |= self._update_residency_entry(entry)
+        return changed
+
+    def residency_stats(self) -> dict:
+        """Read-only residency counters (zeros until a tiered search has
+        built a plane).  Geometry (grains / hot set / budget unit) comes
+        from the live segment set's plane when cached — else from the
+        busiest tiered entry (the coalesced serving plane searches tenant
+        UNION manifests, which never equal the base store's own set).
+        Traffic counters (staged bytes, chunk dispatches, paged queries,
+        searches) aggregate over every cached tiered plane."""
+        out = {"n_grains": 0, "hot_grains": 0, "hot_bytes": 0,
+               "panel_bytes_per_grain": 0, "staged_bytes": 0,
+               "chunk_dispatches": 0, "paged_queries": 0,
+               "hot_epochs": 0, "searches": 0}
+        geom, geom_live, busiest = None, False, -1
+        for key, (segs, entry) in self._stack_cache.items():
+            if len(key) != 3 or key[1] != "tiered":
+                continue
+            t = entry["tiered"]
+            out["staged_bytes"] += t.staged_bytes
+            out["chunk_dispatches"] += t.chunk_dispatches
+            out["paged_queries"] += t.paged_queries
+            out["searches"] += entry["searches"]
+            is_live = segs == tuple(self._segments)
+            if is_live and not geom_live \
+                    or geom is None \
+                    or (not geom_live and entry["searches"] > busiest):
+                geom, geom_live = t, geom_live or is_live
+                busiest = entry["searches"]
+        if geom is not None:
+            per = geom.panel_bytes_per_grain()
+            out.update(n_grains=geom.n_grains, hot_grains=geom.n_hot,
+                       hot_bytes=geom.n_hot * per,
+                       panel_bytes_per_grain=per,
+                       hot_epochs=geom.hot_epochs)
+        return out
+
+    def _tiered_live(self, entry: dict, man: Manifest, now: float):
+        """Host [G, cap] liveness bitmap for a tiered entry (None = all
+        live), cached per (writer, epoch[, now]) exactly like the device
+        leaf of ``_live_plane`` — same row tables, same gather through the
+        grain id panels, so the bits are identical to the oracle's leaf."""
+        has_ttl = entry["row_exp"] is not None
+        key = (man.writer, man.epoch, now if has_ttl else None)
+        ck, cached = entry["live_host"]
+        if ck == key:
+            return key, cached
+        live_row = _live_rows(man.mut_gid, man.mut_seq,
+                              entry["row_gid"], entry["row_seq"])
+        if has_ttl:
+            alive_t = entry["row_exp"] > now
+            if not alive_t.all():
+                live_row = alive_t if live_row is None \
+                    else live_row & alive_t
+        bitmap = None
+        if live_row is not None:
+            ids = np.asarray(entry["ids_host"])
+            bitmap = (ids >= 0) & live_row[np.maximum(
+                ids.astype(np.int64), 0)]
+        entry["live_host"] = (key, bitmap)
+        return key, bitmap
+
+    def _tiered_keep(self, entry: dict, live_key, bitmap, tag_mask,
+                     ts_range):
+        """Host (keep [G, cap], grain_ok [G]) replica of the in-jit
+        mixed-recall pushdown over the memmapped panels, cached per
+        (liveness epoch, filter args)."""
+        key = (live_key, tag_mask, ts_range)
+        ck, keep, gok = entry["keep"]
+        if ck == key:
+            return keep, gok
+        keep, gok = residency.host_keep_mask(entry["tiered"].panels,
+                                             bitmap, tag_mask, ts_range)
+        entry["keep"] = (key, keep, gok)
+        return keep, gok
+
+    def _tiered_raw_host(self, entry: dict, segments: tuple) -> np.ndarray:
+        """Concatenated host raw tier for the warm Mode B re-rank (lazy;
+        explicit D2H for warm segments, memmap for cold ones)."""
+        if entry["raw_host"] is None:
+            entry["raw_host"] = np.concatenate(
+                [np.asarray(jax.device_get(s.index.raw), np.float32)
+                 if s.index.raw is not None
+                 else np.asarray(s.raw_vectors(), np.float32)
+                 for s in segments])
+        return entry["raw_host"]
+
+    def _tiered_pass(self, plane, q_host, qj, plan, *, cap, pool_eff,
+                     target, scan_impl, budgets, qeff, tm, tr, tl_host,
+                     ti_host, ti_dev, slots):
+        """Dispatch one residency pass (hot mini-plane or staged cold
+        chunk) through ``search_stacked`` with its compacted probe plan.
+        Mode A / translate=False always: every pass contributes raw
+        (flat-row, approx-dist) pool columns; the Mode tail runs once on
+        the merged pool.  A pass only a FRACTION of the batch needs (the
+        cold tail of a skewed mix) dispatches over just those query rows,
+        padded to a power of two — per-query arithmetic is independent,
+        so the subset scan is bit-equal to scanning everyone against
+        dummy slots.  Returns (in-flight SearchResult, pool width,
+        qsel | None, active row count)."""
+        plan_g, plan_na, w, act_q = plan
+        n_act = int(act_q.sum())
+        qp = residency.pow2ceil(n_act)
+        qsel = None
+        if qp < act_q.shape[0]:
+            qidx = np.flatnonzero(act_q)
+            qsel = np.concatenate(
+                [qidx, np.full(qp - n_act, qidx[0], qidx.dtype)])
+            plan_g, plan_na = plan_g[qsel], plan_na[qsel]
+            qj = jax.device_put(np.ascontiguousarray(q_host[qsel]))
+        pool_b = min(pool_eff, w * cap)
+        keep_b = min(target, pool_b)
+        kw = dict(nprobe=w, envelope_frac=self.cfg.envelope_frac,
+                  qeff=qeff, scan_impl=scan_impl, budgets=budgets,
+                  tag_mask=tm, ts_range=tr)
+        if tl_host is not None:
+            # tenant bitmap sliced to the mini-plane's grain axis (+ an
+            # all-False row for the dummy grain, which valid=False prunes
+            # anyway) — per-slot visibility bits identical to the oracle's
+            tl = tl_host[:, np.asarray(slots, np.int64)]
+            kw["tenant_live"] = jax.device_put(np.concatenate(
+                [tl, np.zeros((tl.shape[0], 1, tl.shape[2]), tl.dtype)],
+                axis=1))
+            kw["tenant_ix"] = (ti_dev if qsel is None else jax.device_put(
+                np.ascontiguousarray(ti_host[qsel].astype(np.int32))))
+        probe_plan = (jax.device_put(np.ascontiguousarray(plan_g)),
+                      jax.device_put(np.ascontiguousarray(plan_na)))
+        res = planner.search_stacked(plane, qj, pool=pool_b, topk=keep_b,
+                                     mode="A", translate=False,
+                                     probe_plan=probe_plan, **kw)
+        return res, keep_b, qsel, n_act
+
+    def _search_segments_tiered(self, q, man, *, topk, mode, tag_mask,
+                                ts_range, scan_impl, nprobe, pool, now,
+                                budgets=None, tenant_live=None,
+                                tenant_ix=None, adaptive=False,
+                                probe_margin=1.0, min_probes=1):
+        """Paged fused search under a device byte budget.  Returns numpy
+        (global_ids [Q, k], dists [Q, k]), bit-identical to the all-warm
+        fused plane (modulo exact distance ties).
+
+        Pipeline: (1) ONE ``probe_plan`` routing pass on the panel-free
+        stub — the routing pushdown (filters / liveness / tenant) is
+        replicated host-side from the memmapped panels and handed in as
+        ``grain_mask``; the plan doubles as the prefetch schedule.  (2) The
+        plan is split into a hot-set pass over the resident mini-plane and
+        cold chunks of ``prefetch_grains`` grains; chunk k+1 is staged
+        (disk read + H2D) while chunk k's scan is in flight, and harvesting
+        lags one dispatch behind — double-buffered, so at most ~2 chunks of
+        cold panels ever occupy HBM.  (3) The per-pass pools merge on the
+        host into the oracle's candidate pool, and the Mode A / warm-B /
+        cold-B tail runs once on it.  ``budgets`` degrade to per-pass
+        knobs here (staged backends cascade within each pass, not across
+        the merged pool)."""
+        segments = man.segments
+        entry = self._tiered_for(segments, scan_impl)
+        tiered = entry["tiered"]
+        offsets, gids_host = entry["offsets"], entry["gids"]
+        cap, g_total = tiered.cap, tiered.n_grains
+        q_n = q.shape[0]
+
+        # jit-static knobs, mirroring _fused_statics on the stub geometry
+        want_probe = nprobe if nprobe is not None else self.cfg.nprobe
+        probe = min(want_probe, g_total)
+        want_pool = pool if pool is not None else self.cfg.pool
+        pool_eff = min(max(want_pool, topk), probe * cap)
+        topk_eff = min(topk, pool_eff)
+        qeff = index_mod.int32_safe_qmax(self.cfg.k, self.cfg.coord_bits)
+        warm = all(s.index.raw is not None for s in segments)
+        if mode == "B":
+            target = (pool_eff if budgets is None
+                      else min(pool_eff, int(budgets[1])))
+        else:
+            target = topk_eff
+
+        # host-side routing pushdown (replaces the in-jit filter path)
+        live_key, bitmap = self._tiered_live(entry, man, now)
+        keep, grain_ok = self._tiered_keep(entry, live_key, bitmap,
+                                           tag_mask, ts_range)
+        tl_host = (np.asarray(tenant_live)
+                   if tenant_live is not None else None)
+        ti_host = (np.asarray(tenant_ix, np.int64)
+                   if tenant_ix is not None else None)
+        gmask_host = residency.host_tenant_mask(tiered.panels, keep,
+                                                grain_ok, tl_host, ti_host)
+        gmask = (jax.device_put(gmask_host)
+                 if gmask_host is not None else None)
+        qj = jax.device_put(np.asarray(q, np.float32))
+        tm = (jax.device_put(np.uint32(tag_mask))
+              if tag_mask is not None else None)
+        tr = ((jax.device_put(np.float32(ts_range[0])),
+               jax.device_put(np.float32(ts_range[1])))
+              if ts_range is not None else None)
+        ti_dev = (jax.device_put(np.asarray(ti_host, np.int32))
+                  if ti_host is not None else None)
+        pkw = dict(cap=cap, pool_eff=pool_eff, target=target,
+                   scan_impl=scan_impl, budgets=budgets, qeff=qeff,
+                   tm=tm, tr=tr, tl_host=tl_host, ti_host=ti_host,
+                   ti_dev=ti_dev)
+
+        # phase 1: one routing pass on the stub = probe plan AND prefetch
+        # schedule.  Non-adaptive searches route with margin=inf (the
+        # static plan) so results stay bit-identical to the static oracle.
+        run_adaptive = adaptive and not math.isinf(probe_margin)
+        traffic = None
+        if run_adaptive:
+            traffic = self._traffic_for(segments, g_total)
+            hub_host = self._hub_mask_host(traffic)
+            hub = (jax.device_put(hub_host)
+                   if hub_host is not None else None)
+            gids_d, na_d, wins, touches = planner.probe_plan(
+                entry["plane"], qj, nprobe=probe,
+                probe_margin=probe_margin, min_probes=min_probes,
+                hub_mask=hub, grain_mask=gmask)
+        else:
+            # static plan: bare routing over just the stub's routing
+            # sub-tree — identical gids (probe_plan's inf-margin branch IS
+            # this call); n_active is the constant P and the traffic
+            # counters are host bincounts of the read-back below
+            gids_d, _ = planner.static_route(
+                entry["plane"].index.routing, qj, nprobe=probe,
+                grain_mask=gmask)
+            na_d = jax.device_put(np.full(q_n, probe, np.int32))
+        pending, results = [], []
+
+        # phase 2a: warm-tier pass, chained straight off the DEVICE plan
+        # (cold probes mapped to the dummy slot) and dispatched before the
+        # host sync below — the routing read-back and the cold chunk
+        # schedule are then planned while the warm scan is in flight.
+        if tiered.n_hot > 0:
+            plane_h = tiered.hot_plane(bitmap, live_key)
+            plan_h = residency.device_plan(tiered.hot_map_dev, gids_d,
+                                           dummy_slot=tiered.n_hot)
+            pool_b = min(pool_eff, probe * cap)
+            keep_b = min(target, pool_b)
+            kw = dict(nprobe=probe, envelope_frac=self.cfg.envelope_frac,
+                      qeff=qeff, scan_impl=scan_impl, budgets=budgets,
+                      tag_mask=tm, ts_range=tr)
+            if tl_host is not None:
+                tl = tl_host[:, np.asarray(tiered.hot_slots, np.int64)]
+                kw["tenant_live"] = jax.device_put(np.concatenate(
+                    [tl, np.zeros((tl.shape[0], 1, tl.shape[2]),
+                                  tl.dtype)], axis=1))
+                kw["tenant_ix"] = ti_dev
+            res_h = planner.search_stacked(
+                plane_h, qj, pool=pool_b, topk=keep_b, mode="A",
+                translate=False, probe_plan=(plan_h, na_d), **kw)
+            pending.append((res_h, keep_b, None, q_n))
+
+        if run_adaptive:
+            got = jax.device_get((gids_d, na_d, wins, touches))
+            gids_h = np.asarray(got[0], np.int32)
+            na_h = np.asarray(got[1], np.int32)
+            wins_h = np.asarray(got[2], np.int64)
+            touch_h = np.asarray(got[3], np.int64)
+        else:
+            gids_h = np.asarray(jax.device_get(gids_d), np.int32)
+            na_h = np.full(q_n, probe, np.int32)
+            wins_h = np.bincount(gids_h[:, 0],
+                                 minlength=g_total).astype(np.int64)
+            touch_h = np.bincount(gids_h.ravel(),
+                                  minlength=g_total).astype(np.int64)
+        entry["r_wins"] += wins_h
+        entry["r_touches"] += touch_h
+        if traffic is not None:
+            # adaptive searches ONLY — keeps hub masks and probe_stats in
+            # lockstep with the all-warm plane (parity contract)
+            traffic["wins"] += wins_h
+            traffic["touches"] += touch_h
+            traffic["queries"] += q_n
+            traffic["active_probes"] += int(na_h.sum())
+        entry["searches"] += 1
+        tiered.paged_queries += q_n
+        # re-election applies from the NEXT search — this one's warm pass
+        # is already in flight on the current hot set, so the cold chunk
+        # schedule below must complement THAT set, not the new one
+        hot_map = tiered.hot_map
+        if entry["searches"] % self.residency_interval == 0:
+            self._update_residency_entry(entry)
+
+        # phase 2b: double-buffered cold chunks
+        act = np.arange(probe, dtype=np.int32)[None, :] < na_h[:, None]
+        need = act & (hot_map[gids_h] < 0) \
+            & (tiered.sizes[gids_h] > 0)
+        if gmask_host is not None:
+            # probes the pushdown masked scan to BIG in the oracle; the
+            # paged plane need not stage their panels to reproduce that
+            if gmask_host.ndim == 2:
+                need &= np.take_along_axis(gmask_host,
+                                           gids_h.astype(np.int64), axis=1)
+            else:
+                need &= gmask_host[gids_h]
+        cold_gids = np.unique(gids_h[need])
+        chunks = (residency.chunk_cold(cold_gids, self.prefetch_grains)
+                  if len(cold_gids) else [])
+
+        def harvest(item):
+            res, keep_b, qsel, n_act = item
+            r = np.asarray(jax.device_get(res.ids), np.int64)
+            dm = np.asarray(jax.device_get(res.dists), np.float32)
+            if qsel is not None:      # scatter a subset pass back to [Q]
+                fr = np.full((q_n, keep_b), -1, np.int64)
+                fd = np.full((q_n, keep_b), _BIG, np.float32)
+                fr[qsel[:n_act]] = r[:n_act]
+                fd[qsel[:n_act]] = dm[:n_act]
+                r, dm = fr, fd
+            results.append((r, dm))
+
+        for ch in chunks:
+            if len(pending) >= 2:     # block on k-1, keep k in flight
+                harvest(pending.pop(0))
+            plane_c, member = tiered.chunk_plane(ch, bitmap, live_key)
+            plan = residency.compact_probes(gids_h, na_h, member, len(ch))
+            if plan is None:
+                continue
+            pending.append(self._tiered_pass(plane_c, q, qj, plan,
+                                             slots=ch, **pkw))
+        while pending:
+            harvest(pending.pop(0))
+
+        # phase 3: merge the per-pass pools into the oracle's candidate
+        # pool (stable ascending-distance order, padded to `target`)
+        if results:
+            rows = np.concatenate([r for r, _ in results], axis=1)
+            dd = np.concatenate([d for _, d in results], axis=1)
+        else:
+            rows = np.full((q_n, 1), -1, np.int64)
+            dd = np.full((q_n, 1), _BIG, np.float32)
+        ok = (rows >= 0) & (dd < _BIG / 2)
+        dd = np.where(ok, dd, _BIG)
+        order = np.argsort(dd, axis=1, kind="stable")[:, :target]
+        r_p = np.take_along_axis(rows, order, axis=1)
+        d_p = np.take_along_axis(dd, order, axis=1)
+        ok_p = np.take_along_axis(ok, order, axis=1)
+        if r_p.shape[1] < target:
+            padn = target - r_p.shape[1]
+            r_p = np.pad(r_p, ((0, 0), (0, padn)), constant_values=-1)
+            d_p = np.pad(d_p, ((0, 0), (0, padn)), constant_values=_BIG)
+            ok_p = np.pad(ok_p, ((0, 0), (0, padn)),
+                          constant_values=False)
+
+        if mode != "B":
+            ids = np.where(ok_p, gids_host[np.maximum(r_p, 0)], -1)
+            return ids.astype(np.int64), d_p.astype(np.float32)
+        if not warm:
+            return self._cold_rerank(q, segments, offsets, gids_host,
+                                     r_p, ok_p, topk_eff)
+        # warm Mode B: exact re-rank of the merged pool on device, with
+        # the raw rows gathered host-side (the stacked raw tier is never
+        # device-resident on the tiered plane)
+        raw = self._tiered_raw_host(entry, segments)
+        rows_c = np.maximum(r_p, 0)
+        pos, d = _rerank_pool(jax.device_put(raw[rows_c]), qj,
+                              jax.device_put(ok_p), topk=topk_eff)
+        pos_h = np.asarray(jax.device_get(pos))
+        d_h = np.asarray(jax.device_get(d), np.float32)
+        ids_pool = np.where(ok_p, gids_host[rows_c], -1)
+        ids = np.where(d_h < _BIG / 2,
+                       np.take_along_axis(ids_pool, pos_h, axis=1), -1)
+        return ids.astype(np.int64), d_h
 
     def _sharded_for(self, segments: tuple, mesh, grain_axis: str,
                      scan_impl: Optional[str] = None) -> dict:
@@ -1274,6 +1855,10 @@ class VectorStore:
         if not fused:
             if mesh is not None:
                 raise ValueError("mesh= requires the fused search plane")
+            if self.device_budget is not None:
+                raise ValueError(
+                    "device_budget= (tiered residency) pages through the "
+                    "fused stacked plane; fused=False has no paged path")
             return self._search_looped(q, man, topk=topk, mode=mode,
                                        tag_mask=tag_mask, ts_range=ts_range,
                                        scan_impl=scan_impl, now=now)
@@ -1284,6 +1869,11 @@ class VectorStore:
                     raise ValueError(
                         "the sharded plane routes per shard; route_mode "
                         "overrides only apply to the single-device plane")
+                if self.device_budget is not None:
+                    raise ValueError(
+                        "device_budget= (tiered residency) is single-device"
+                        "; the sharded plane (mesh=) keeps every shard "
+                        "resident — drop one of the two")
                 ids_s, d_s = self._search_segments_sharded(
                     q, man, topk=topk, mode=mode, tag_mask=tag_mask,
                     ts_range=ts_range, scan_impl=scan_impl,
@@ -1354,6 +1944,21 @@ class VectorStore:
         then the registry's *union* of segments and per-tenant
         liveness/membership arrives through these masks instead of the
         manifest's own mutation table."""
+        if self.device_budget is not None:
+            # Tiered residency: same search, paged data plane.  Routing
+            # still sees every grain (the stub is panel-free, not lossy);
+            # only panel bytes move tiers, so results stay bit-identical.
+            if route_mode != "global":
+                raise ValueError(
+                    "device_budget= (tiered residency) routes once "
+                    "globally; route_mode='per_segment' has no paged plan")
+            return self._search_segments_tiered(
+                q, man, topk=topk, mode=mode, tag_mask=tag_mask,
+                ts_range=ts_range, scan_impl=scan_impl, nprobe=nprobe,
+                pool=pool, now=now, budgets=budgets,
+                tenant_live=tenant_live, tenant_ix=tenant_ix,
+                adaptive=adaptive, probe_margin=probe_margin,
+                min_probes=min_probes)
         segments = man.segments
         entry = self._stacked_for(segments, scan_impl)
         stacked = self._live_plane(entry, man, now)

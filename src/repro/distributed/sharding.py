@@ -134,6 +134,14 @@ def search_plane_rules(mesh: Mesh, *,
     controls their (optional) data-axis sharding.  An absent mesh axis
     replicates via the usual divisibility/fallback path in
     :meth:`ShardingRules.spec_for_shape`.
+
+    Residency: the sharded plane keeps EVERY shard fully device-resident —
+    aggregate HBM scales with the mesh, which is the whole point of
+    sharding.  Tiered residency (``VectorStore(device_budget=...)``, the
+    disk-backed cold tier) is the single-device answer to the same
+    capacity problem and the store rejects combining the two; a future
+    per-shard residency mode would give each shard its own budget over the
+    grain range :func:`shard_hot_sets` describes.
     """
     on_mesh = grain_axis in mesh.shape
     rules = {
@@ -218,6 +226,30 @@ def shard_plane_field(arr, rules: ShardingRules, field: str, *,
     axes = tuple(logical if i == dim else None for i in range(arr.ndim))
     spec = rules.spec_for_shape(arr.shape, axes)
     return jax.device_put(arr, NamedSharding(rules.mesh, spec))
+
+
+def shard_hot_sets(hot_slots, n_grains: int, n_shards: int):
+    """Split a global hot-grain set into per-shard local hot sets.
+
+    The grain-sharded plane partitions grains into ``n_shards`` contiguous
+    ranges of ``n_grains // n_shards`` (the dim-0 block partition
+    ``NamedSharding`` applies).  Given the tiered residency manager's
+    global hot set (``TieredPlane.hot_slots``), return a list of per-shard
+    arrays of *local* grain indices — what each shard would keep resident
+    under a per-shard device budget.  Today this is an accounting helper
+    (the sharded plane is all-resident; see :func:`search_plane_rules`);
+    it pins down the partition arithmetic a per-shard residency mode would
+    inherit.
+    """
+    if n_shards <= 0 or n_grains % n_shards != 0:
+        raise ValueError(
+            f"n_shards must divide n_grains: {n_shards} vs {n_grains}")
+    import numpy as np
+    hot = np.unique(np.asarray(hot_slots, np.int64))
+    if hot.size and (hot[0] < 0 or hot[-1] >= n_grains):
+        raise ValueError(f"hot slot out of range [0, {n_grains})")
+    per = n_grains // n_shards
+    return [hot[(hot // per) == s] - s * per for s in range(n_shards)]
 
 
 # ---------------------------------------------------------------------------

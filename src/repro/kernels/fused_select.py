@@ -48,6 +48,15 @@ static at the padded (Q, P, tiles) shape; probes ``p >= n_active[q]`` are
   probed at all.
 
 ``n_active=None`` (or all-P) reduces to the static kernel by construction.
+
+Tiered residency (``core.residency``) needs NOTHING from this kernel: the
+residency manager materializes each staged cold chunk as an ordinary
+mini stacked plane (a pure slice of the on-disk Block-SoA panels plus one
+dummy grain), compacts the probe plan to local slots, and calls the same
+scan→select entry points with ``probe_plan=``.  The kernel is
+residency-oblivious by design — hot-tier and cold-chunk passes lower to
+the identical kernel, which is what makes the paged search bit-identical
+to the all-warm plane.
 """
 from __future__ import annotations
 

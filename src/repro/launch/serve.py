@@ -26,13 +26,15 @@ from ..serve.engine import ServeEngine
 from .mesh import make_search_mesh
 
 
-def _build_memory(n_docs: int, shards: int, seed: int):
+def _build_memory(n_docs: int, shards: int, seed: int,
+                  device_budget=None):
     """Demo document memory (random embeddings) + optional search mesh."""
     rng = np.random.default_rng(seed)
     d = 64
     store = VectorStore(HNTLConfig(d=d, k=16, s=0, n_grains=8, nprobe=4,
                                    pool=16, block=64),
-                        seal_threshold=max(256, n_docs // 8))
+                        seal_threshold=max(256, n_docs // 8),
+                        device_budget=device_budget)
     store.add(rng.standard_normal((n_docs, d)).astype(np.float32))
     store.seal()
     mesh = make_search_mesh(shards) if shards > 1 else None
@@ -54,6 +56,12 @@ def main(argv=None):
                     help="attach a demo vector memory with N documents")
     ap.add_argument("--retrieval-shards", type=int, default=1,
                     help="grain-shard the memory over an N-way search mesh")
+    ap.add_argument("--device-budget", type=int, default=0, metavar="BYTES",
+                    help="tiered residency for the memory: keep at most "
+                         "BYTES of grain panels device-resident, demote the "
+                         "rest to a disk-backed cold tier paged in on probe "
+                         "(0 = all-warm; single-device only — incompatible "
+                         "with --retrieval-shards > 1)")
     ap.add_argument("--scan-impl", default=None,
                     choices=sorted(scan_plane_names()),
                     help="ScanPlane backend for retrieval (default auto — "
@@ -108,9 +116,16 @@ def main(argv=None):
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
     memory = memory_mesh = demo_q = None
+    if args.device_budget < 0:
+        raise SystemExit("--device-budget must be >= 0 bytes")
+    if args.device_budget > 0 and args.retrieval_shards > 1:
+        raise SystemExit(
+            "--device-budget is single-device tiered residency; the sharded "
+            "plane keeps every shard resident (drop one of the two flags)")
     if args.retrieval_docs > 0:
         memory, memory_mesh, demo_q = _build_memory(
-            args.retrieval_docs, args.retrieval_shards, args.seed)
+            args.retrieval_docs, args.retrieval_shards, args.seed,
+            device_budget=args.device_budget or None)
     tenants = None
     if args.tenants > 0:
         if memory is None:
@@ -128,6 +143,10 @@ def main(argv=None):
         res = engine.retrieve(demo_q, topk=4, mode="B")
         plane = ("sharded x%d" % args.retrieval_shards
                  if memory_mesh is not None else "single-device")
+        if args.device_budget > 0:
+            rs = memory.residency_stats()
+            plane = (f"tiered ({rs['hot_grains']}/{rs['n_grains']} grains "
+                     f"hot, {rs['staged_bytes']}B cold staged)")
         routing_lbl = "static"
         if args.adaptive:
             st = memory.probe_stats()

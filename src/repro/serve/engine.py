@@ -42,6 +42,7 @@ class ServeEngine:
     adaptive: bool = False
     probe_margin: Optional[float] = None
     min_probes: Optional[int] = None
+    memory_budget: Optional[int] = None
 
     def __init__(self, model, params, *, n_slots: int = 4,
                  max_len: int = 512, temperature: float = 0.0, seed: int = 0,
@@ -50,7 +51,8 @@ class ServeEngine:
                  budgets: Optional[tuple] = None, tenants=None,
                  adaptive: bool = False,
                  probe_margin: Optional[float] = None,
-                 min_probes: Optional[int] = None):
+                 min_probes: Optional[int] = None,
+                 memory_budget: Optional[int] = None):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -84,6 +86,31 @@ class ServeEngine:
         self.adaptive = adaptive
         self.probe_margin = probe_margin
         self.min_probes = min_probes
+        # Tiered residency for the memory sidecar: an HBM byte budget caps
+        # how many grain panels stay device-resident; the rest live in the
+        # disk-backed cold tier and page in (double-buffered prefetch) when
+        # probed.  None = all-warm.  Validated here like budgets/adaptive,
+        # then applied to the attached store — every retrieval plane
+        # (direct, coalesced multi-tenant) routes through the same store
+        # dispatch, so one knob covers them all.
+        if memory_budget is not None:
+            if isinstance(memory_budget, bool) \
+                    or not isinstance(memory_budget, int) \
+                    or memory_budget < 0:
+                raise ValueError(
+                    "memory_budget must be a non-negative int (bytes of "
+                    f"device residency), got {memory_budget!r}")
+            if self.memory is None:
+                raise ValueError(
+                    "memory_budget= requires memory= (or tenants=); there "
+                    "is no store to apply the residency budget to")
+            if memory_mesh is not None:
+                raise ValueError(
+                    "memory_budget= is single-device tiered residency; the "
+                    "sharded plane (memory_mesh=) keeps every shard "
+                    "resident — drop one of the two")
+            self.memory.device_budget = memory_budget
+        self.memory_budget = memory_budget
         self.rng = np.random.default_rng(seed)
         self.caches = model.init_cache(n_slots, max_len)
         self.pos = np.zeros(n_slots, np.int64)        # next position per slot
@@ -292,6 +319,16 @@ class ServeEngine:
                                           probe_margin=self.probe_margin,
                                           min_probes=self.min_probes,
                                           now=now)
+
+    def memory_residency(self) -> Optional[dict]:
+        """Residency counters of the attached memory's tiered plane —
+        hot/cold grain split, bytes staged by the prefetch pipeline, paged
+        query count.  ``None`` when the engine serves all-warm (no
+        ``memory_budget``)."""
+        mem = getattr(self, "memory", None)
+        if mem is None or mem.device_budget is None:
+            return None
+        return mem.residency_stats()
 
     def _memory_for(self, tenant: Optional[str]) -> VectorStore:
         if tenant is None:

@@ -392,7 +392,11 @@ def _dispatch_group(registry: TenantRegistry, union: tuple,
                 q_pad, man_u, mesh=mesh, grain_axis=grain_axis,
                 shard_queries=False, tenant_live=tl, **kw)
         else:
-            entry = base._stacked_for(union, scan_impl)
+            # the entry follows the base store's residency mode: under a
+            # device_budget the union plane is the TIERED entry, whose
+            # host id panels feed the same bitmap recipe, and the fused
+            # dispatch below routes into the paged plane transparently
+            entry = base._plane_entry_for(union, scan_impl)
             tl = np.stack([registry._tenant_bitmap(entry, union, mans[n],
                                                    now) for n in names])
             ids, d = base._search_segments_fused(

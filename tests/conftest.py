@@ -40,7 +40,8 @@ def _install_sanitizer():
     if os.environ.get("HNTL_NAN_DEBUG") == "1":
         jax.config.update("jax_debug_nans", True)
 
-    for name in ("_search_segments_fused", "_search_segments_sharded"):
+    for name in ("_search_segments_fused", "_search_segments_sharded",
+                 "_search_segments_tiered"):
         orig = getattr(VectorStore, name)
 
         def guarded(self, *args, _orig=orig, **kwargs):

@@ -1,0 +1,232 @@
+"""Regression tests for the cold-path bugfix sweep (ISSUE 10 satellites).
+
+Three distinct lifecycle bugs around the cold raw tier, each of which
+leaked a cold file (or torn bytes) in a way no search-result assertion
+would ever catch:
+
+1. ``_COLD_REFS`` acquire was not exception-safe: a segment construction
+   failing between ``_write_cold`` and the finalizer registration orphaned
+   the file forever, and the counter was a plain module-level Counter
+   mutated from maintenance/tenancy/GC paths with no lock.
+2. cold memmaps were published to the manifest after ``flush()`` but with
+   no fsync — a crash after seal could leave a manifest pointing at torn
+   raw bytes still sitting in the page cache.
+3. ``_probe_traffic`` LRU entries pin segment tuples as keys; after
+   ``compact()``/``maintain()`` replaced the segments, the stale entry kept
+   the dead Segments (and via ``_COLD_REFS`` their cold files) alive until
+   LRU churn — which an idle store never generates.
+"""
+import gc
+import glob
+import os
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import HNTLConfig
+from repro.core import store as store_mod
+from repro.core.store import VectorStore
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _release_compile_caches():
+    """See test_coldtier: keep this module's jit executables from
+    accumulating into the process-wide footprint of a full-suite run."""
+    yield
+    gc.collect()
+    jax.clear_caches()
+
+
+def _cfg(d=16, n_grains=4, **kw):
+    return HNTLConfig(d=d, k=4, s=0, block=32, n_grains=n_grains,
+                      nprobe=n_grains, pool=16, **kw)
+
+
+def _cold_files(st):
+    return sorted(glob.glob(os.path.join(st.cold_dir, "*.raw")))
+
+
+# ---------------------------------------------------------------- bugfix 1
+
+
+def test_failed_seal_does_not_orphan_cold_file(tmp_path, rng):
+    """A segment construction that dies between the cold-file write and the
+    finalizer registration must unlink the un-owned file (pre-fix: the file
+    was orphaned on disk with no refcount entry to ever reclaim it)."""
+    st = VectorStore(_cfg(), seal_threshold=64, cold_tier=True,
+                     cold_dir=str(tmp_path))
+    st.add(rng.standard_normal((64, 16)).astype(np.float32))
+    assert len(_cold_files(st)) == 1          # auto-seal wrote seg 0
+
+    st.add(rng.standard_normal((40, 16)).astype(np.float32))
+    orig_segment = store_mod.Segment
+
+    def exploding_segment(*a, **kw):
+        raise RuntimeError("mid-construction failure")
+
+    store_mod.Segment = exploding_segment
+    try:
+        with pytest.raises(RuntimeError, match="mid-construction"):
+            st.seal()
+    finally:
+        store_mod.Segment = orig_segment
+
+    # the failed seal's cold file is gone; the healthy segment's is not
+    assert len(_cold_files(st)) == 1
+    # and nothing about the failed attempt leaked into the refcount table
+    leaked = [p for p in store_mod._COLD_REFS
+              if p not in {s.cold_path for s in st._segments}]
+    assert not leaked
+
+
+def test_failed_merge_does_not_orphan_cold_file(tmp_path, rng):
+    """Same exception window in the compaction merge path."""
+    st = VectorStore(_cfg(), seal_threshold=32, cold_tier=True,
+                     cold_dir=str(tmp_path))
+    for _ in range(4):
+        st.add(rng.standard_normal((32, 16)).astype(np.float32))  # 4 seals
+    assert len(_cold_files(st)) == 4
+    orig_segment = store_mod.Segment
+
+    def exploding_segment(*a, **kw):
+        raise RuntimeError("mid-merge failure")
+
+    store_mod.Segment = exploding_segment
+    try:
+        with pytest.raises(RuntimeError, match="mid-merge"):
+            st.compact(fanin=4, maintain=False)
+    finally:
+        store_mod.Segment = orig_segment
+    # the half-built merged file is reclaimed; the 4 source files survive
+    assert len(_cold_files(st)) == 4
+
+
+def test_failed_construction_keeps_shared_file(tmp_path, rng):
+    """A construction failure must NOT unlink a cold file that a live
+    Segment still pins (the maintenance-child / parent sharing contract)."""
+    st = VectorStore(_cfg(), seal_threshold=64, cold_tier=True,
+                     cold_dir=str(tmp_path))
+    st.add(rng.standard_normal((64, 16)).astype(np.float32))
+    seg = st._segments[0]
+    path = seg.cold_path
+    with pytest.raises(RuntimeError):
+        with store_mod._cold_construction(path):
+            raise RuntimeError("derived child failed")
+    assert os.path.exists(path)               # parent still owns it
+    assert store_mod._COLD_REFS[path] == 1
+
+
+def test_cold_refs_mutation_is_locked():
+    """Concurrent acquire/release hammering one path stays consistent and
+    reclaims exactly once (pre-fix: unlocked Counter read-modify-write)."""
+    path = os.path.join(store_mod.tempfile.mkdtemp(prefix="aperon_lock_"),
+                        "cold_lock_probe.raw")
+    with open(path, "wb") as f:
+        f.write(b"\0" * 64)
+    class Holder:                     # plain object() is not weakref-able
+        pass
+
+    n_threads, n_iter = 8, 200
+    holders = [[Holder() for _ in range(n_iter)] for _ in range(n_threads)]
+    barrier = threading.Barrier(n_threads)
+
+    def worker(i):
+        barrier.wait()
+        for h in holders[i]:
+            store_mod._reclaim_cold_on_gc(h, path)
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert store_mod._COLD_REFS[path] == n_threads * n_iter
+    holders.clear()
+    gc.collect()
+    assert path not in store_mod._COLD_REFS
+    assert not os.path.exists(path)
+
+
+# ---------------------------------------------------------------- bugfix 2
+
+
+def test_cold_file_fsynced_before_manifest_visibility(tmp_path, rng,
+                                                      monkeypatch):
+    """The cold raw bytes must hit stable storage (fsync) BEFORE the sealed
+    segment becomes manifest-visible.  Pre-fix there was no fsync at all,
+    so this ordering assertion fails on the old code."""
+    synced_at = []
+    real_fsync = os.fsync
+
+    st = VectorStore(_cfg(), seal_threshold=1 << 30, cold_tier=True,
+                     cold_dir=str(tmp_path))
+
+    def recording_fsync(fd):
+        real_fsync(fd)
+        # capture manifest visibility at the moment of the sync
+        synced_at.append(len(st._segments))
+
+    monkeypatch.setattr(store_mod.os, "fsync", recording_fsync)
+    x = rng.standard_normal((64, 16)).astype(np.float32)
+    st.add(x)
+    seg = st.seal()
+    assert seg is not None and seg.cold_path is not None
+    # at least one fsync ran, and every one ran while the segment was NOT
+    # yet in the manifest (visibility strictly after durability)
+    assert synced_at, "cold file was never fsynced before publication"
+    assert all(n == 0 for n in synced_at)
+    # and the published bytes are the full raw tier
+    mm = np.memmap(seg.cold_path, dtype=np.float32, mode="r",
+                   shape=(64, 16))
+    np.testing.assert_array_equal(np.asarray(mm), x)
+
+
+# ---------------------------------------------------------------- bugfix 3
+
+
+def test_probe_traffic_purged_on_compact(tmp_path, rng):
+    """compact() after adaptive traffic must not let the traffic LRU pin
+    the pre-merge segments: their cold files are reclaimed at the epoch
+    swap (pre-fix: the id()-keyed entry held the segment tuple alive)."""
+    cfg = _cfg(hub_size=1)
+    st = VectorStore(cfg, seal_threshold=64, cold_tier=True,
+                     cold_dir=str(tmp_path), stack_cache_entries=1)
+    for _ in range(4):
+        st.add(rng.standard_normal((64, 16)).astype(np.float32))  # 4 seals
+    old_paths = [s.cold_path for s in st._segments]
+    assert len(old_paths) == 4 and all(os.path.exists(p) for p in old_paths)
+
+    q = rng.standard_normal((8, 16)).astype(np.float32)
+    st.search(q, topk=4, adaptive=True)        # creates a traffic entry
+    assert len(st._probe_traffic) == 1
+
+    st.compact(fanin=4, maintain=False)
+    assert st.n_segments == 1
+    # the stale traffic entry is dropped at the epoch swap...
+    stale = [hit for hit in st._probe_traffic.values()
+             if any(s.cold_path in old_paths for s in hit["segments"])]
+    assert not stale, "probe-traffic LRU still pins pre-compact segments"
+    # ...and once the plane cache turns over, the old cold files reclaim
+    st.search(q, topk=4, adaptive=True)        # restacks; LRU(1) evicts old
+    gc.collect()
+    assert all(not os.path.exists(p) for p in old_paths)
+    assert os.path.exists(st._segments[0].cold_path)
+
+
+def test_probe_traffic_kept_for_live_subset(tmp_path, rng):
+    """seal() only appends: existing traffic entries whose segments are all
+    still manifest-live survive the purge (counters keep accumulating)."""
+    st = VectorStore(_cfg(hub_size=1), seal_threshold=64, cold_tier=True,
+                     cold_dir=str(tmp_path))
+    st.add(rng.standard_normal((64, 16)).astype(np.float32))
+    q = rng.standard_normal((4, 16)).astype(np.float32)
+    st.search(q, topk=4, adaptive=True)
+    key = tuple(id(s) for s in st._segments)
+    assert key in st._probe_traffic
+    st.add(rng.standard_normal((64, 16)).astype(np.float32))   # second seal
+    st._purge_probe_traffic()
+    assert key in st._probe_traffic, \
+        "purge dropped an entry whose segments are all still live"

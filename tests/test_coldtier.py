@@ -1,0 +1,331 @@
+"""Tiered residency: the paged cold-tier search vs the all-warm oracle.
+
+The contract under test (ISSUE 10 tentpole): with ``device_budget=`` set,
+grain panels demote to one disk-backed Block-SoA file and only the
+admitted hot set stays device-resident, yet every search — any mode, any
+filter, adaptive or static, mutated or pristine — returns ids AND dists
+bit-identical to the same store running all-warm.  The budget knob may
+change *where* panel bytes live, never *what* a query sees.
+"""
+import gc
+import glob
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import HNTLConfig
+from repro.core import residency
+from repro.core.store import VectorStore
+
+D, N, SEG, Q = 16, 512, 128, 6
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _release_compile_caches():
+    """Every paged-vs-warm twin in this module compiles its own set of
+    stacked/tiered programs; in a full-suite run that pushes the
+    process-wide XLA jit footprint past what the later big-plane compiles
+    (tenancy's coalesced union) survive.  Drop the executables on module
+    exit — later modules recompile what they need."""
+    yield
+    gc.collect()
+    jax.clear_caches()
+
+# device_budget values: 0 = everything pages, 8192 = a few grains hot
+# (panel bytes/grain is ~1-2 KB at this geometry), huge = all-hot (the
+# paged plumbing with an empty cold worklist)
+BUDGETS = {"zero": 0, "mid": 8192, "huge": 10**12}
+
+
+def _cfg(**kw):
+    return HNTLConfig(d=D, k=8, s=0, block=8, n_grains=8, nprobe=4,
+                      pool=32, **kw)
+
+
+def _data(seed=0):
+    r = np.random.default_rng(seed)
+    vecs = (r.standard_normal((N, D)) * 3.0).astype(np.float32)
+    tags = ((np.arange(N) % 2) + 1).astype(np.uint32)        # 1 / 2
+    ts = np.linspace(0.0, 100.0, N).astype(np.float32)
+    qs = (r.standard_normal((Q, D)) * 3.0).astype(np.float32)
+    return vecs, tags, ts, qs
+
+
+def _build(budget, tmp_path, *, cold=False, seed=0, **store_kw):
+    vecs, tags, ts, qs = _data(seed)
+    kw = dict(seal_threshold=SEG, device_budget=budget,
+              residency_interval=4, prefetch_grains=2,
+              cold_dir=str(tmp_path), **store_kw)
+    if cold:
+        kw.update(cold_tier=True)
+    st = VectorStore(_cfg(), **kw)
+    for i in range(0, N, SEG):
+        st.add(vecs[i:i + SEG], tags=tags[i:i + SEG], ts=ts[i:i + SEG])
+    st.seal()
+    return st, qs
+
+
+def _pair(budget, tmp_path=None, **kw):
+    """(oracle all-warm store, tiered store) over identical data."""
+    oracle, qs = _build(None, tmp_path, **kw)
+    tiered, _ = _build(budget, tmp_path, **kw)
+    return oracle, tiered, qs
+
+
+def _assert_same(r0, r1, label=""):
+    assert np.array_equal(np.asarray(r0.ids), np.asarray(r1.ids)), label
+    assert np.array_equal(np.asarray(r0.dists), np.asarray(r1.dists)), label
+
+
+# ------------------------------------------------------------ parity matrix
+
+
+@pytest.mark.parametrize("budget", sorted(BUDGETS))
+@pytest.mark.parametrize("mode", ["A", "B"])
+def test_paged_parity(budget, mode, tmp_path):
+    oracle, tiered, qs = _pair(BUDGETS[budget], tmp_path)
+    for _ in range(2):            # 2nd round hits the hot-plane cache
+        _assert_same(oracle.search(qs, topk=5, mode=mode),
+                     tiered.search(qs, topk=5, mode=mode),
+                     f"{budget}/{mode}")
+    st = tiered.residency_stats()
+    assert st["paged_queries"] == 2 * Q
+    if budget == "huge":
+        assert st["hot_grains"] == st["n_grains"]
+        assert st["chunk_dispatches"] == 0     # nothing cold to stage
+    if budget == "zero":
+        assert st["hot_grains"] == 0 and st["chunk_dispatches"] > 0
+
+
+@pytest.mark.parametrize("mode", ["A", "B"])
+def test_paged_parity_filters(mode, tmp_path):
+    oracle, tiered, qs = _pair(BUDGETS["mid"], tmp_path)
+    for kw in ({"tag_mask": 0x1}, {"ts_range": (20.0, 70.0)},
+               {"tag_mask": 0x2, "ts_range": (10.0, 90.0)}):
+        _assert_same(oracle.search(qs, topk=5, mode=mode, **kw),
+                     tiered.search(qs, topk=5, mode=mode, **kw), str(kw))
+
+
+def test_paged_parity_adaptive(tmp_path):
+    """Adaptive routing pages the SAME ragged probe sets the oracle scans,
+    and probe_stats stays in lockstep (the hub/traffic parity contract)."""
+    oracle, tiered, qs = _pair(BUDGETS["mid"], tmp_path)
+    for _ in range(3):
+        _assert_same(
+            oracle.search(qs, topk=5, adaptive=True, probe_margin=0.5,
+                          min_probes=1),
+            tiered.search(qs, topk=5, adaptive=True, probe_margin=0.5,
+                          min_probes=1))
+    s0, s1 = oracle.probe_stats(), tiered.probe_stats()
+    assert s0 == s1
+
+
+@pytest.mark.parametrize("scan_impl", ["ref", "fused_ref"])
+def test_paged_parity_scan_backends(scan_impl, tmp_path):
+    oracle, tiered, qs = _pair(BUDGETS["mid"], tmp_path)
+    _assert_same(oracle.search(qs, topk=5, scan_impl=scan_impl),
+                 tiered.search(qs, topk=5, scan_impl=scan_impl), scan_impl)
+
+
+def test_paged_parity_cold_raw_tier(tmp_path):
+    """device_budget composes with cold_tier=True: panels page from the
+    .soa file, Mode B re-ranks from the raw memmaps — neither tier is
+    device-resident and the results still match the all-warm plane."""
+    oracle, tiered, qs = _pair(BUDGETS["mid"], tmp_path, cold=True)
+    _assert_same(oracle.search(qs, topk=5, mode="B"),
+                 tiered.search(qs, topk=5, mode="B"))
+    _assert_same(oracle.search(qs, topk=5, mode="A"),
+                 tiered.search(qs, topk=5, mode="A"))
+
+
+def test_paged_parity_under_mutation(tmp_path):
+    """Tombstones/upserts flow into the paged plane through the host
+    liveness bitmap; parity must hold across mutation epochs and after
+    compaction rewrites the segment set."""
+    oracle, tiered, qs = _pair(BUDGETS["mid"], tmp_path)
+    r = np.random.default_rng(3)
+    dead = r.choice(N, size=40, replace=False)
+    up = r.choice(np.setdiff1d(np.arange(N), dead), size=8, replace=False)
+    upv = (r.standard_normal((8, D)) * 3.0).astype(np.float32)
+    for st in (oracle, tiered):
+        st.delete(dead)
+        st.upsert(up, upv)
+        st.seal()
+    _assert_same(oracle.search(qs, topk=5, mode="B"),
+                 tiered.search(qs, topk=5, mode="B"), "post-mutation")
+    for st in (oracle, tiered):
+        st.compact()
+    _assert_same(oracle.search(qs, topk=5, mode="B"),
+                 tiered.search(qs, topk=5, mode="B"), "post-compact")
+    dead_set = set(int(i) for i in dead)
+    ids = np.asarray(tiered.search(qs, topk=5, mode="B").ids)
+    assert not (set(ids[ids >= 0].tolist()) & dead_set)
+
+
+def test_paged_parity_tenants(tmp_path):
+    """The coalesced multi-tenant window dispatches through the tiered
+    plane (``_plane_entry_for``) when the base store carries a budget —
+    per-tenant visibility and isolation identical to the fused plane."""
+    from repro.serve import tenancy
+    r = np.random.default_rng(5)
+    tv = {t: (r.standard_normal((8, D)) * 3.0).astype(np.float32)
+          for t in ("a", "b")}
+
+    def serve(budget):
+        st, qs = _build(budget, tmp_path)
+        reg = tenancy.TenantRegistry(st, memtable_budget=64)
+        for t in ("a", "b"):
+            reg.get(t).add(tv[t])
+            reg.get(t).seal()
+        reqs = [tenancy.RetrievalRequest(
+            rid=i, tenant=("a", "b")[i % 2], q=qs[i], topk=4, mode="B",
+            tag_mask=None, ts_range=None) for i in range(Q)]
+        tenancy.coalesced_retrieve(reg, reqs)
+        return (np.stack([np.asarray(r_.result.ids) for r_ in reqs]),
+                np.stack([np.asarray(r_.result.dists) for r_ in reqs]))
+
+    ids0, dd0 = serve(None)
+    ids1, dd1 = serve(BUDGETS["mid"])
+    assert np.array_equal(ids0, ids1)
+    assert np.array_equal(dd0, dd1)
+
+
+# --------------------------------------------------- residency lifecycle
+
+
+def _soa_files(st):
+    return sorted(glob.glob(os.path.join(st.cold_dir, "panels_*.soa")))
+
+
+def test_eviction_under_churn(tmp_path):
+    """Skewed traffic re-elects the hot set toward the probed grains while
+    every intermediate search stays bit-identical to the oracle; plane
+    rebuilds (compact) retire the old panel file once the LRU drops it."""
+    oracle, tiered, qs = _pair(BUDGETS["mid"], tmp_path,
+                               stack_cache_entries=1)
+    hot_q = np.repeat(qs[:1], Q, axis=0)     # hammer one region
+    epochs0 = None
+    for i in range(8):                        # residency_interval=4
+        _assert_same(oracle.search(hot_q, topk=5),
+                     tiered.search(hot_q, topk=5), f"round {i}")
+        if epochs0 is None:
+            epochs0 = tiered.residency_stats()["hot_epochs"]
+    stats = tiered.residency_stats()
+    assert stats["searches"] >= 8
+    # the skewed region's grains must now be hot: the hammered query pages
+    # nothing once its probe set is admitted
+    pre = stats["chunk_dispatches"]
+    _assert_same(oracle.search(hot_q, topk=5), tiered.search(hot_q, topk=5))
+    assert tiered.residency_stats()["chunk_dispatches"] == pre
+    files0 = _soa_files(tiered)
+    assert len(files0) == 1
+    tiered.compact()
+    oracle.compact()
+    _assert_same(oracle.search(qs, topk=5), tiered.search(qs, topk=5),
+                 "post-churn compact")
+    gc.collect()
+    files1 = _soa_files(tiered)
+    assert len(files1) == 1 and files1 != files0   # old plane's file gone
+
+
+def test_update_residency_reelects(tmp_path):
+    tiered, qs = _build(BUDGETS["mid"], tmp_path)
+    tiered.search(qs, topk=5)                 # build the plane, seed by size
+    st0 = tiered.residency_stats()
+    assert 0 < st0["hot_grains"] < st0["n_grains"]
+    assert st0["hot_bytes"] == st0["hot_grains"] * \
+        st0["panel_bytes_per_grain"]
+    hot_q = np.repeat(qs[:1], Q, axis=0)
+    for _ in range(3):
+        tiered.search(hot_q, topk=5)
+    changed = tiered.update_residency()
+    # idempotent: a second election with no new traffic changes nothing
+    assert tiered.update_residency() is False
+    assert isinstance(changed, bool)
+
+
+def test_seed_hot_is_biggest_grains(tmp_path):
+    tiered, qs = _build(BUDGETS["mid"], tmp_path)
+    tiered.search(qs, topk=5)
+    for _segs, entry in tiered._stack_cache.values():
+        tp = entry["tiered"]
+        break
+    h = tp.n_hot
+    assert h > 0
+    order = np.lexsort((np.arange(tp.n_grains),
+                        -tp.sizes.astype(np.int64)))
+    assert tp.hot_slots.tolist() == sorted(order[:h].tolist())
+
+
+# ------------------------------------------------------- knob validation
+
+
+def test_knob_validation(tmp_path):
+    with pytest.raises(ValueError):
+        VectorStore(_cfg(), device_budget=-1)
+    with pytest.raises(ValueError):
+        VectorStore(_cfg(), device_budget=100, residency_interval=0)
+    with pytest.raises(ValueError):
+        VectorStore(_cfg(), device_budget=100, prefetch_grains=0)
+    st, qs = _build(BUDGETS["mid"], tmp_path)
+    with pytest.raises(ValueError, match="fused"):
+        st.search(qs, topk=5, fused=False)
+    with pytest.raises(ValueError, match="route_mode"):
+        st.search(qs, topk=5, route_mode="per_segment")
+    with pytest.raises(ValueError, match="single-device"):
+        st.search(qs, topk=5, mesh=object())
+
+
+def test_branch_propagates_budget(tmp_path):
+    parent, qs = _build(BUDGETS["mid"], tmp_path)
+    child = parent.branch()
+    assert child.device_budget == parent.device_budget
+    assert child.residency_interval == parent.residency_interval
+    assert child.prefetch_grains == parent.prefetch_grains
+    oracle, _ = _build(None, tmp_path)
+    _assert_same(oracle.search(qs, topk=5), child.search(qs, topk=5))
+
+
+# ------------------------------------------------------- residency helpers
+
+
+def test_compact_probes_helper():
+    gids = np.array([[3, 1, 2, 0], [0, 3, 3, 1]], np.int32)
+    na = np.array([4, 2], np.int32)
+    member = np.array([-1, 0, 1, -1], np.int32)   # grains 1, 2 are members
+    plan = residency.compact_probes(gids, na, member, dummy_slot=2)
+    assert plan is not None
+    plan_g, plan_na, w, act_q = plan
+    assert w == 2 and plan_g.shape == (2, 2)
+    # query 0 probes grains 1 then 2 -> slots 0, 1 (plan order kept);
+    # query 1's active prefix [0, 3] holds no member -> all dummy, na >= 1
+    assert plan_g[0].tolist() == [0, 1]
+    assert plan_g[1].tolist() == [2, 2] and plan_na[1] == 1
+    assert plan_na[0] == 2
+    assert act_q.tolist() == [True, False]
+    # no member probed anywhere -> None (the pass is skipped entirely)
+    assert residency.compact_probes(
+        gids, na, np.full(4, -1, np.int32), 0) is None
+
+
+def test_chunk_cold_helper():
+    out = residency.chunk_cold(np.arange(7), 4)
+    assert [len(c) for c in out] == [4, 4]         # tail padded 3 -> 4
+    assert out[1].tolist() == [4, 5, 6, 6]
+    assert residency.chunk_cold(np.arange(4), 8)[0].tolist() == [0, 1, 2, 3]
+    assert residency.pow2ceil(1) == 1 and residency.pow2ceil(5) == 8
+
+
+def test_host_keep_mask_matches_filters():
+    valid = np.array([[True, True], [True, False]])
+    tags = np.array([[1, 2], [2, 2]], np.uint32)
+    ts = np.array([[0.0, 5.0], [9.0, 1.0]], np.float32)
+    pan = {"valid": valid, "tags": tags, "ts": ts}
+    keep, gok = residency.host_keep_mask(pan, None, 0x1, None)
+    assert keep.tolist() == [[True, False], [False, False]]
+    assert gok.tolist() == [True, False]
+    keep, gok = residency.host_keep_mask(pan, None, None, (4.0, 10.0))
+    assert keep.tolist() == [[False, True], [True, False]]
+    assert residency.host_keep_mask(pan, None, None, None) == (None, None)
